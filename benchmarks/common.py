@@ -1,0 +1,63 @@
+"""Shared benchmark scaffolding: one module per paper table/figure; each
+exposes ``run(quick=True) -> dict`` of scalar metrics.  ``run.py`` drives
+them all and writes ``experiments/bench_results.json``."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.profiler import FaasMeterProfiler, ProfilerConfig
+from repro.serving.control_plane import EnergyFirstControlPlane
+from repro.telemetry.simulator import SimulatorConfig
+from repro.workload.azure import WorkloadConfig, generate_trace
+from repro.workload.functions import FunctionRegistry, paper_functions
+
+PROFILER_CONFIG = ProfilerConfig(init_windows=60, step_windows=30)
+
+
+def control_plane(platform: str = "desktop", seed: int = 0) -> EnergyFirstControlPlane:
+    return EnergyFirstControlPlane(
+        paper_functions(), SimulatorConfig(platform=platform, seed=seed), PROFILER_CONFIG
+    )
+
+
+def control_plane_for(
+    registry: FunctionRegistry, platform: str = "desktop", seed: int = 0
+) -> EnergyFirstControlPlane:
+    return EnergyFirstControlPlane(
+        registry, SimulatorConfig(platform=platform, seed=seed), PROFILER_CONFIG
+    )
+
+
+def four_function_trace(duration=300.0, load=1.0, seed=0, arrival="poisson"):
+    """The paper's §6.1 four-function heterogeneous trace (dd/image/AES/video
+    -> ids 0,1,3,2 in the registry; we keep all seven but drive four)."""
+    reg = paper_functions()
+    trace = generate_trace(
+        reg, WorkloadConfig(duration_s=duration, load=load, seed=seed, arrival=arrival)
+    )
+    # Silence three functions to get the 4-function trace with stable ids.
+    from repro.workload.trace import drop_function
+
+    for name in ("json", "CNN", "ml_train"):
+        trace = drop_function(trace, reg.index[name])
+    return reg, trace
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def fmt_row(name: str, metrics: dict) -> str:
+    parts = ", ".join(
+        f"{k}={v:.4g}" if isinstance(v, (int, float, np.floating)) else f"{k}={v}"
+        for k, v in metrics.items()
+    )
+    return f"{name:28s} {parts}"

@@ -1,0 +1,67 @@
+"""Fig. 7: (a) latency variance is uncorrelated with footprint error;
+(b) identical functions cluster by footprint (Shapley symmetry).
+
+20 functions in 4 classes (image/json/ml_train/video clones); footprints
+must cluster by class: within-class CoV << between-class spread.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import PROFILER_CONFIG, control_plane
+from repro.core.profiler import FaasMeterProfiler
+from repro.serving.control_plane import EnergyFirstControlPlane
+from repro.telemetry.simulator import SimulatorConfig
+from repro.workload.azure import WorkloadConfig, generate_trace
+from repro.workload.functions import FunctionRegistry, paper_functions
+
+
+def run(quick: bool = True) -> dict:
+    reg = paper_functions()
+    classes = ["image", "json", "ml_train", "video"]
+    clones = []
+    for cname in classes:
+        base = reg[cname]
+        for i in range(5):
+            clones.append(dataclasses.replace(base, name=f"{cname}_{i}"))
+    registry20 = FunctionRegistry(clones)
+    trace = generate_trace(
+        registry20,
+        WorkloadConfig(duration_s=300.0 if quick else 1800.0, load=1.0, seed=2, iat_spread=0.0),
+    )
+    cp = EnergyFirstControlPlane(registry20, SimulatorConfig(platform="desktop"), PROFILER_CONFIG)
+    prof = cp.profile_trace(trace)
+    fp = np.asarray(prof.report.spectrum.per_invocation_indiv)
+
+    out = {}
+    within = []
+    class_means = []
+    for k, cname in enumerate(classes):
+        vals = fp[5 * k : 5 * k + 5]
+        vals = vals[vals > 0]
+        cov = float(np.std(vals) / max(np.mean(vals), 1e-9))
+        out[f"{cname}_within_cov"] = cov
+        within.append(cov)
+        class_means.append(float(np.mean(vals)))
+    between = float(np.std(class_means) / np.mean(class_means))
+    out["mean_within_cov"] = float(np.mean(within))
+    out["between_class_cov"] = between
+    out["clusters_separate"] = float(between > 2 * np.mean(within))
+
+    # Fig 7a: correlation(latency CoV, individual error) ~ 0 across functions
+    truth = prof.sim.true_fn_energy_j / np.maximum(
+        np.asarray([trace.invocations_of(j) for j in range(trace.num_fns)]), 1
+    )
+    err = np.abs(fp - truth) / np.maximum(truth, 1e-9)
+    lat_cov = np.asarray([s.latency_cov for s in registry20.specs])
+    mask = np.isfinite(err) & (truth > 0)
+    corr = float(np.corrcoef(lat_cov[mask], err[mask])[0, 1])
+    out["latvar_error_correlation"] = corr
+    # the paper's claim: high latency variance does NOT inflate error
+    # (no positive correlation)
+    out["no_positive_correlation"] = float(corr < 0.3)
+    return out

@@ -1,0 +1,56 @@
+"""Fig. 8: Total-Error (measured vs predicted total power) stays small on
+bursty and dynamic-active-set workloads, and across a 35-workload sweep."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import control_plane
+from repro.workload.azure import WorkloadConfig, generate_trace
+from repro.workload.functions import paper_functions
+from repro.workload.trace import concat_traces, drop_function
+
+
+def _total_error(cp, trace):
+    return cp.profile_trace(trace).report.total_error
+
+
+def run(quick: bool = True) -> dict:
+    reg = paper_functions()
+    duration = 240.0 if quick else 1800.0
+    cp = control_plane("desktop")
+
+    # (a) bursty four-function workload
+    bursty = generate_trace(reg, WorkloadConfig(duration_s=duration, arrival="bursty", seed=3))
+    e_bursty = _total_error(cp, bursty)
+
+    # (b) dynamic active set: functions join mid-trace
+    first = generate_trace(reg, WorkloadConfig(duration_s=duration / 2, load=0.6, seed=4))
+    for j in (4, 5, 6):
+        first = drop_function(first, j)
+    second = generate_trace(reg, WorkloadConfig(duration_s=duration / 2, load=1.0, seed=5))
+    dynamic = concat_traces(first, second)
+    e_dynamic = _total_error(cp, dynamic)
+
+    # (c) sweep: n workloads x 3 platforms
+    n_sweep = 6 if quick else 35
+    errs = []
+    for platform in ("desktop", "server", "edge"):
+        cpp = control_plane(platform)
+        for seed in range(n_sweep // 3 + 1):
+            t = generate_trace(
+                reg,
+                WorkloadConfig(
+                    duration_s=duration, load=0.5 + 0.5 * (seed % 3), seed=10 + seed,
+                    arrival="poisson" if seed % 2 else "bursty",
+                ),
+            )
+            errs.append(_total_error(cpp, t))
+    errs = np.asarray(errs)
+    return {
+        "bursty_total_error": e_bursty,
+        "dynamic_set_total_error": e_dynamic,
+        "sweep_median": float(np.median(errs)),
+        "sweep_p90": float(np.quantile(errs, 0.9)),
+        "frac_below_10pct": float(np.mean(errs < 0.10)),
+    }

@@ -1,0 +1,46 @@
+"""Fig. 9: footprint stability for pricing — CoV of per-invocation energy
+across repeated segments, and latency-normalized variance (Table 1)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import control_plane
+from repro.workload.azure import WorkloadConfig, generate_trace
+from repro.workload.functions import paper_functions
+
+
+def run(quick: bool = True) -> dict:
+    reg = paper_functions()
+    n_traces = 8 if quick else 50
+    duration = 200.0 if quick else 1800.0
+    covs, lnv = [], []
+    for platform in ("desktop", "server"):
+        cp = control_plane(platform)
+        per_fn_samples = [[] for _ in range(len(reg))]
+        per_fn_lat = [[] for _ in range(len(reg))]
+        for seed in range(n_traces // 2):
+            t = generate_trace(
+                reg, WorkloadConfig(duration_s=duration, load=1.0, seed=20 + seed)
+            )
+            prof = cp.profile_trace(t, seed=seed)
+            fp = np.asarray(prof.report.spectrum.per_invocation_indiv)
+            for j in range(len(reg)):
+                if t.invocations_of(j) > 3:
+                    per_fn_samples[j].append(fp[j])
+                    lat = t.end[t.fn_id == j] - t.start[t.fn_id == j]
+                    per_fn_lat[j].append(lat)
+        for j in range(len(reg)):
+            if len(per_fn_samples[j]) >= 3:
+                s = np.asarray(per_fn_samples[j])
+                covs.append(float(np.std(s) / max(np.mean(s), 1e-9)))
+                lats = np.concatenate(per_fn_lat[j])
+                lnv.append(float(np.std(s) / max(np.std(lats), 1e-9)))
+    covs = np.asarray(covs)
+    lnv = np.asarray(lnv)
+    return {
+        "cov_median": float(np.median(covs)),
+        "frac_cov_below_0.3": float(np.mean(covs < 0.3)),
+        "latnorm_variance_median": float(np.median(lnv)),
+        "frac_latnorm_below_40": float(np.mean(lnv < 40.0)),
+    }

@@ -1,0 +1,66 @@
+"""Kernel-path benchmark: blocked reference vs dense oracle on this host
+(wall-clock), plus interpret-mode validation of the Pallas kernels.
+
+On CPU the Pallas kernels execute only in interpret mode (Python-speed, for
+correctness); the *performance* claim on this host is the blocked reference
+vs naive dense attention, which shares the kernels' memory structure.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as pl_decode
+from repro.kernels.flash_attention import flash_attention as pl_flash
+
+
+def _time(f, reps=3):
+    jax.block_until_ready(f())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = True) -> dict:
+    rng = np.random.default_rng(0)
+    b, s, h, hkv, d = (1, 1024, 4, 2, 64) if quick else (2, 4096, 8, 2, 128)
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+
+    dense_f = jax.jit(lambda q, k, v: ref.attention_dense(q, k, v, causal=True))
+    blocked_f = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v, True, 256, 256))
+    t_dense = _time(lambda: dense_f(q, k, v))
+    t_blocked = _time(lambda: blocked_f(q, k, v))
+
+    # interpret-mode validation (correctness, not speed)
+    small = (slice(None), slice(0, 128))
+    out_pl = pl_flash(q[:, :128], k[:, :128], v[:, :128], q_block=64, kv_block=64, interpret=True)
+    want = ref.attention_dense(q[:, :128], k[:, :128], v[:, :128], causal=True)
+    flash_err = float(jnp.max(jnp.abs(out_pl - want)))
+
+    qd = jnp.asarray(rng.standard_normal((4, h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((4, 512, hkv, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((4, 512, hkv, d)), jnp.float32)
+    lens = jnp.asarray([500, 512, 100, 1], jnp.int32)
+    dec_err = float(
+        jnp.max(jnp.abs(
+            pl_decode(qd, kc, vc, lens, kv_block=128, interpret=True)
+            - ref.decode_attention(qd, kc, vc, lens)
+        ))
+    )
+    return {
+        "dense_ms": t_dense * 1e3,
+        "blocked_ms": t_blocked * 1e3,
+        "blocked_vs_dense_speedup": t_dense / t_blocked,
+        "pallas_flash_interpret_err": flash_err,
+        "pallas_decode_interpret_err": dec_err,
+        "kernels_validate": float(flash_err < 1e-4 and dec_err < 1e-4),
+    }

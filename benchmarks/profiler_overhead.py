@@ -1,0 +1,85 @@
+"""Profiler throughput — the paper's overhead axis, measured for real.
+
+The paper faults Scaphandre for >5 % CPU overhead; FaasMeter+Iluvatar run
+at ~3 %.  Our fleet controller disaggregates (nodes x windows) batches, so
+the metric that matters is node-segments profiled per second.  Three
+implementations of the §4.1 solve path are timed on this host:
+
+- ``naive``      : per-node Python loop, scipy-style dense lstsq per window
+                   batch (the paper's own single-server implementation)
+- ``vectorized`` : jitted ridge solve per node (one XLA call per node)
+- ``fleet``      : one vmapped/jitted batched solve for ALL nodes (ours)
+
+This is the CPU-measurable §Perf axis (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.disaggregation import solve_nnls, solve_ridge
+from repro.kernels.ops import disagg_gram
+
+
+def _make_fleet(rng, nodes, n, m):
+    c = np.abs(rng.standard_normal((nodes, n, m))).astype(np.float32)
+    c *= rng.random((nodes, n, m)) > 0.5
+    x = (np.abs(rng.standard_normal((nodes, m))) * 30 + 5).astype(np.float32)
+    w = np.einsum("gnm,gm->gn", c, x) + rng.normal(0, 1.0, (nodes, n)).astype(np.float32)
+    return c, w.astype(np.float32), x
+
+
+def _naive_numpy(c, w, lam=1e-3):
+    outs = []
+    for g in range(c.shape[0]):
+        gram = c[g].T @ c[g] + lam * np.eye(c.shape[2], dtype=np.float32)
+        rhs = c[g].T @ w[g]
+        outs.append(np.maximum(np.linalg.solve(gram, rhs), 0.0))
+    return np.stack(outs)
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(
+            out, jax.Array
+        ) else None
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = True) -> dict:
+    rng = np.random.default_rng(0)
+    nodes, n, m = (64, 240, 32) if quick else (512, 600, 64)
+    c, w, x_true = _make_fleet(rng, nodes, n, m)
+    cj, wj = jnp.asarray(c), jnp.asarray(w)
+
+    t_naive = _time(lambda: _naive_numpy(c, w), reps=3)
+
+    ridge_one = jax.jit(lambda c_, w_: solve_ridge(c_, w_, 1e-3))
+    def vectorized():
+        return [ridge_one(cj[g], wj[g]) for g in range(nodes)]
+    t_vec = _time(vectorized, reps=3)
+
+    fleet = jax.jit(jax.vmap(lambda c_, w_: solve_ridge(c_, w_, 1e-3)))
+    t_fleet = _time(lambda: fleet(cj, wj), reps=5)
+
+    # accuracy guard: all three agree
+    a = _naive_numpy(c, w)
+    b = np.asarray(fleet(cj, wj))
+    agree = float(np.max(np.abs(a - b)) < 1e-2)
+
+    segs = float(nodes)
+    return {
+        "nodes": nodes,
+        "naive_segs_per_s": segs / t_naive,
+        "vectorized_segs_per_s": segs / t_vec,
+        "fleet_segs_per_s": segs / t_fleet,
+        "fleet_speedup_vs_naive": t_naive / t_fleet,
+        "implementations_agree": agree,
+    }

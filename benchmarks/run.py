@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,...]
+
+Prints one line per metric and writes experiments/bench_results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import time
+import traceback
+
+MODULES = [
+    ("fig2_signal_quality", "Fig 2a: sensor pathology"),
+    ("fig3_isolated_energy", "Fig 3: isolation invalid as ground truth"),
+    ("fig5_sync", "Fig 5: skew correction"),
+    ("fig6_marginal_validation", "Fig 6 + Table 3: marginal-energy validation"),
+    ("fig7_symmetry", "Fig 7: symmetry + latency-variance"),
+    ("fig8_total_error", "Fig 8: total-error"),
+    ("fig9_pricing_variance", "Fig 9: pricing stability"),
+    ("fig10_capping", "Fig 10: software power capping"),
+    ("fig11_neighbors", "Fig 11: noisy neighbors"),
+    ("profiler_overhead", "Perf: fleet profiler throughput"),
+    ("kernel_bench", "Perf: kernel path"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale durations")
+    ap.add_argument("--only", default="", help="comma-separated module prefixes")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    results, failures = {}, 0
+    for mod_name, title in MODULES:
+        if only and not any(mod_name.startswith(o) for o in only):
+            continue
+        print(f"\n=== {mod_name}: {title} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            metrics = mod.run(quick=not args.full)
+            metrics["_seconds"] = round(time.time() - t0, 1)
+            results[mod_name] = metrics
+            for k, v in metrics.items():
+                print(f"  {k:36s} {v:.6g}" if isinstance(v, float) else f"  {k:36s} {v}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            results[mod_name] = {"error": True}
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote experiments/bench_results.json ({len(results)} modules, {failures} failures)")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""repro: FaasMeter (Energy-First Serverless Computing) as a JAX/TPU framework.
+
+An energy-first serving + training control plane for TPU pods:
+
+- ``repro.core``        -- the paper's contribution: statistical power
+  disaggregation, Kalman-filtered online estimation, Shapley fair attribution,
+  power capping, pricing, and the energy metrology framework (validation
+  metrics + marginal-energy ground truth).
+- ``repro.telemetry``   -- power-source substrate (IPMI/plug/RAPL-like
+  simulated sensors with matched noise/lag/quantization pathologies).
+- ``repro.workload``    -- Azure-trace-style FaaS workload generation.
+- ``repro.models``      -- the 10 assigned architectures (dense GQA, MoE,
+  Mamba2 hybrid, xLSTM, enc-dec, VLM) as scan-over-layers JAX models.
+- ``repro.training`` / ``repro.serving`` -- distributed train/serve runtimes.
+- ``repro.distributed`` -- mesh/sharding rules, checkpointing, collectives.
+- ``repro.kernels``     -- Pallas TPU kernels (flash attention, decode
+  attention, batched disaggregation solve) + jnp reference oracles.
+"""
+
+from repro.version import __version__
+
+__all__ = ["__version__"]

@@ -1,0 +1,28 @@
+"""Assigned architecture configs (one module per arch) + shape registry."""
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import (
+    ARCH_NAMES,
+    all_cells,
+    all_configs,
+    get_config,
+    get_shape,
+    is_skipped,
+    runnable_cells,
+    shapes_for,
+)
+from repro.configs.shapes import SHAPES, ShapeConfig
+
+__all__ = [
+    "ArchConfig",
+    "ARCH_NAMES",
+    "all_cells",
+    "all_configs",
+    "get_config",
+    "get_shape",
+    "is_skipped",
+    "runnable_cells",
+    "shapes_for",
+    "SHAPES",
+    "ShapeConfig",
+]

@@ -1,0 +1,79 @@
+"""The paper's contribution: FaasMeter energy metrology, in JAX.
+
+Module map (paper section -> module):
+
+- §4.1 statistical power disaggregation -> ``contribution``, ``disaggregation``
+- §4.2 online Kalman estimation         -> ``kalman``
+- §4.3 CPU power modeling               -> ``cpu_model``
+- §4.4 Shapley fair attribution         -> ``shapley``, ``footprints``
+- §5   skew sync + power capping        -> ``sync``, ``capping``
+- §5.1 validation metrics               -> ``metrics``
+- §6   pricing                          -> ``pricing``
+- baselines (Scaphandre / PowerAPI-like)-> ``baselines``
+- orchestrator                          -> ``profiler``
+"""
+
+from repro.core.contribution import (
+    activity_series,
+    contribution_matrix,
+    invocation_counts,
+    shared_principal_contribution,
+)
+from repro.core.disaggregation import (
+    DisaggregationConfig,
+    solve_nnls,
+    solve_ridge,
+    disaggregate,
+    per_invocation_energy,
+)
+from repro.core.kalman import KalmanConfig, KalmanState, kalman_init, kalman_step, run_kalman
+from repro.core.shapley import (
+    shapley_control_plane_share,
+    shapley_idle_share,
+    total_footprint,
+)
+from repro.core.metrics import (
+    cosine_similarity,
+    individual_difference,
+    total_power_error,
+    latency_normalized_variance,
+    coefficient_of_variation,
+    marginal_energy,
+)
+from repro.core.sync import estimate_skew, apply_shift, synchronize
+from repro.core.capping import CappingConfig, PowerCapController
+from repro.core.profiler import FaasMeterProfiler, ProfilerConfig, FootprintReport
+
+__all__ = [
+    "activity_series",
+    "contribution_matrix",
+    "invocation_counts",
+    "shared_principal_contribution",
+    "DisaggregationConfig",
+    "solve_nnls",
+    "solve_ridge",
+    "disaggregate",
+    "per_invocation_energy",
+    "KalmanConfig",
+    "KalmanState",
+    "kalman_init",
+    "kalman_step",
+    "run_kalman",
+    "shapley_control_plane_share",
+    "shapley_idle_share",
+    "total_footprint",
+    "cosine_similarity",
+    "individual_difference",
+    "total_power_error",
+    "latency_normalized_variance",
+    "coefficient_of_variation",
+    "marginal_energy",
+    "estimate_skew",
+    "apply_shift",
+    "synchronize",
+    "CappingConfig",
+    "PowerCapController",
+    "FaasMeterProfiler",
+    "ProfilerConfig",
+    "FootprintReport",
+]

@@ -1,0 +1,178 @@
+"""Contribution matrices C and A (paper §4.1).
+
+The key disaggregation parameter is the "function contribution to power"
+matrix ``C`` with shape (N windows, M functions): ``C[i, j]`` is the total
+time (seconds) that invocations of function ``j`` were running during window
+``i``.  ``A[i, j]`` counts invocations ("activations") of ``j`` starting in
+window ``i``.
+
+Invocation traces are flat arrays ``(fn_id, start, end)``; ``fn_id < 0``
+entries are padding and contribute nothing (this keeps every function
+jit-able with fixed shapes — the fleet profiler vmaps these over nodes).
+
+Exact overlap is computed with the *cumulative running-time* identity:
+
+    F_j(t)  = sum_k min(max(t - s_k, 0), e_k - s_k)   over invocations k of j
+    C[i, j] = F_j(t_{i+1}) - F_j(t_i)
+
+evaluated at the N+1 window edges.  A chunked ``lax.scan`` over invocations
+bounds peak memory at (chunk, N+1) regardless of trace length, which is what
+lets a single jitted call disaggregate hour-long fleet traces.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_CHUNK = 1024  # invocations per scan step; bounds peak memory at (CHUNK, N+1)
+
+
+def _pad_to_multiple(x: Array, multiple: int, fill) -> Array:
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((rem,), fill, dtype=x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("num_fns", "num_windows"))
+def contribution_matrix(
+    fn_id: Array,
+    start: Array,
+    end: Array,
+    *,
+    num_fns: int,
+    num_windows: int,
+    t0: float = 0.0,
+    delta: float = 1.0,
+) -> Array:
+    """Exact (N, M) running-time contribution matrix.
+
+    Args:
+      fn_id: (K,) int32 function ids; negative ids are padding.
+      start, end: (K,) float32 invocation start/end times (seconds).
+      num_fns: M, total number of unique functions (matrix width).
+      num_windows: N, number of measurement windows.
+      t0: left edge of window 0.
+      delta: window length in seconds (paper default: 1 s).
+
+    Returns:
+      (N, M) float32 matrix of seconds-of-runtime per window per function.
+    """
+    edges = t0 + delta * jnp.arange(num_windows + 1, dtype=jnp.float32)
+
+    fn_id = _pad_to_multiple(fn_id.astype(jnp.int32), _CHUNK, -1)
+    start = _pad_to_multiple(start.astype(jnp.float32), _CHUNK, 0.0)
+    end = _pad_to_multiple(end.astype(jnp.float32), _CHUNK, 0.0)
+    k = fn_id.shape[0]
+    fn_id = fn_id.reshape(k // _CHUNK, _CHUNK)
+    start = start.reshape(k // _CHUNK, _CHUNK)
+    end = end.reshape(k // _CHUNK, _CHUNK)
+
+    def body(acc, chunk):
+        cid, cs, ce = chunk
+        dur = jnp.maximum(ce - cs, 0.0)
+        # (CHUNK, N+1) cumulative running time of each invocation at each edge.
+        f = jnp.minimum(jnp.maximum(edges[None, :] - cs[:, None], 0.0), dur[:, None])
+        valid = (cid >= 0).astype(f.dtype)
+        f = f * valid[:, None]
+        seg = jnp.where(cid >= 0, cid, num_fns)  # padding -> overflow row
+        # accumulate per-function cumulative curves: (M+1, N+1)
+        acc = acc + jax.ops.segment_sum(f, seg, num_segments=num_fns + 1)
+        return acc, None
+
+    acc0 = jnp.zeros((num_fns + 1, num_windows + 1), dtype=jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (fn_id, start, end))
+    cum = acc[:num_fns]  # (M, N+1)
+    return (cum[:, 1:] - cum[:, :-1]).T  # (N, M)
+
+
+@functools.partial(jax.jit, static_argnames=("num_fns", "num_windows"))
+def invocation_counts(
+    fn_id: Array,
+    start: Array,
+    *,
+    num_fns: int,
+    num_windows: int,
+    t0: float = 0.0,
+    delta: float = 1.0,
+) -> Array:
+    """(N, M) activation-count matrix A: invocations *starting* per window."""
+    idx = jnp.floor((start - t0) / delta).astype(jnp.int32)
+    in_range = (idx >= 0) & (idx < num_windows) & (fn_id >= 0)
+    w = jnp.clip(idx, 0, num_windows - 1)
+    f = jnp.clip(fn_id, 0, num_fns - 1)
+    flat = w * num_fns + f
+    counts = jax.ops.segment_sum(
+        in_range.astype(jnp.float32), flat, num_segments=num_windows * num_fns
+    )
+    return counts.reshape(num_windows, num_fns)
+
+
+@functools.partial(jax.jit, static_argnames=("num_fns", "num_bins"))
+def activity_series(
+    fn_id: Array,
+    start: Array,
+    end: Array,
+    *,
+    num_fns: int,
+    num_bins: int,
+    t0: float = 0.0,
+    dt: float = 0.01,
+) -> Array:
+    """(T, M) concurrent-invocation counts on a fine time grid.
+
+    Event-based: +1 at the bin containing ``start``, -1 at the bin containing
+    ``end``, cumulative-summed along time.  Used by the telemetry simulator
+    (power is a function of instantaneous activity) and by the
+    direct-attribution baseline.
+    """
+    sbin = jnp.floor((start - t0) / dt).astype(jnp.int32)
+    ebin = jnp.floor((end - t0) / dt).astype(jnp.int32)
+    valid = fn_id >= 0
+    f = jnp.clip(fn_id, 0, num_fns - 1)
+
+    def scatter(bins, sign, ok):
+        ok = ok & (bins >= 0) & (bins < num_bins)
+        flat = jnp.clip(bins, 0, num_bins - 1) * num_fns + f
+        return jax.ops.segment_sum(
+            jnp.where(ok, sign, 0.0), flat, num_segments=num_bins * num_fns
+        ).reshape(num_bins, num_fns)
+
+    events = scatter(sbin, 1.0, valid) + scatter(ebin, -1.0, valid)
+    # Invocations that start before the grid but end inside it: seed the cumsum.
+    before = valid & (sbin < 0) & (ebin >= 0)
+    seed = jax.ops.segment_sum(before.astype(jnp.float32), f, num_segments=num_fns)
+    events = events.at[0].add(seed)
+    return jnp.cumsum(events, axis=0)
+
+
+@jax.jit
+def shared_principal_contribution(
+    principal_cpu_frac: Array,
+    system_cpu_frac: Array,
+    *,
+    delta: float = 1.0,
+    eps: float = 1e-6,
+) -> Array:
+    """Paper Eq. 2: normalized shared-principal contribution column.
+
+        c_cp = (control-plane CPU% / system-wide CPU%) * delta
+
+    Both inputs are (N,) per-window utilization fractions in [0, 1+].
+    The normalization corrects for function executions not consuming 100 %
+    CPU (otherwise raw CPU-time underestimates the control-plane share).
+    """
+    ratio = principal_cpu_frac / jnp.maximum(system_cpu_frac, eps)
+    return jnp.clip(ratio, 0.0, 1.0) * delta
+
+
+def augment_with_principals(c_matrix: Array, *principal_cols: Array) -> Array:
+    """Append shared-principal columns (control plane, OS, ...) to C (§4.1)."""
+    cols = [c_matrix] + [p[:, None] for p in principal_cols]
+    return jnp.concatenate(cols, axis=1)

@@ -1,0 +1,149 @@
+"""CPU/chip power modeling from performance counters (paper §4.3).
+
+A linear model theta maps a function's *normalized* counter vector S to its
+chip-level power:  X_CPU = theta(S).  The paper trains a linear-kernel SVR
+(SmartWatts/PowerAPI-style) over the standard counters (unhalted core/
+reference cycles, LLC misses, instructions retired); we keep the model linear
+and explainable, per the paper's design requirement.
+
+TPU adaptation: the counter vector is the step-counter analogue —
+(FLOPs, HBM bytes, collective bytes, duty cycle), each normalized by the
+system-wide totals of the interval; same normalization scheme as the paper
+(function counters / system counters).
+
+Two trainers:
+
+- ``fit_ridge``: closed-form ridge regression (default; exact, fast).
+- ``fit_linear_svr``: epsilon-insensitive linear SVR via proximal subgradient
+  descent in ``lax.fori_loop`` — the in-JAX stand-in for the paper's
+  sklearn SVR (no sklearn on the target hosts).
+
+Model health is monitored (observed chip power vs sum of predicted function
+powers); ``needs_retrain`` flags drift beyond the threshold (default 5 %),
+matching the paper's continuous-retraining loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class LinearPowerModel(NamedTuple):
+    weights: Array  # (F,) per-counter watts
+    bias: Array     # scalar watts
+
+
+@dataclasses.dataclass(frozen=True)
+class CpuModelConfig:
+    ridge_lambda: float = 1e-4
+    svr_epsilon: float = 0.5     # watts of insensitivity
+    svr_lr: float = 3e-2
+    svr_iters: int = 20_000
+    retrain_threshold: float = 0.05  # 5 % model error triggers retraining
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fit_ridge(features: Array, power: Array, lam: float = 1e-4) -> LinearPowerModel:
+    """Closed-form ridge fit of power ~ features.
+
+    Args:
+      features: (N, F) system-interval counter vectors (already normalized).
+      power: (N,) observed chip power (watts).
+    """
+    n, f = features.shape
+    ones = jnp.ones((n, 1), features.dtype)
+    xb = jnp.concatenate([features, ones], axis=1)
+    reg = lam * jnp.eye(f + 1, dtype=features.dtype)
+    reg = reg.at[f, f].set(0.0)  # don't penalize the bias
+    theta = jnp.linalg.solve(xb.T @ xb + reg, xb.T @ power)
+    return LinearPowerModel(weights=theta[:f], bias=theta[f])
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def fit_linear_svr(
+    features: Array,
+    power: Array,
+    lam: float = 1e-4,
+    epsilon: float = 0.5,
+    lr: float = 3e-2,
+    *,
+    iters: int = 20_000,
+) -> LinearPowerModel:
+    """Linear epsilon-SVR via subgradient descent on the primal.
+
+    loss = mean(max(|Xw + b - y| - eps, 0)) + lam/2 ||w||^2
+    """
+    n, f = features.shape
+    x_mean = jnp.mean(features, axis=0)
+    x_std = jnp.maximum(jnp.std(features, axis=0), 1e-8)
+    xs = (features - x_mean) / x_std
+
+    def loss(params):
+        w, b = params
+        resid = xs @ w + b - power
+        hinge = jnp.maximum(jnp.abs(resid) - epsilon, 0.0)
+        return jnp.mean(hinge) + 0.5 * lam * jnp.sum(w * w)
+
+    grad = jax.grad(loss)
+
+    def body(i, params):
+        g = grad(params)
+        step = lr / jnp.sqrt(1.0 + i)  # diminishing step for convergence
+        return (params[0] - step * g[0], params[1] - step * g[1])
+
+    w0 = jnp.zeros((f,), features.dtype)
+    b0 = jnp.asarray(jnp.mean(power), features.dtype)
+    w, b = jax.lax.fori_loop(0, iters, body, (w0, b0))
+    # De-standardize back to raw feature space.
+    w_raw = w / x_std
+    b_raw = b - jnp.sum(w * x_mean / x_std)
+    return LinearPowerModel(weights=w_raw, bias=b_raw)
+
+
+@jax.jit
+def predict_power(model: LinearPowerModel, features: Array) -> Array:
+    """X_CPU = theta(S).  features: (..., F) -> (...,) watts."""
+    return features @ model.weights + model.bias
+
+
+@jax.jit
+def predict_function_power(
+    model: LinearPowerModel, fn_features: Array, fn_active_frac: Array
+) -> Array:
+    """Per-function chip power from per-function normalized counters.
+
+    The bias (static chip power) is amortized by activity fraction so that
+    summing over functions reproduces the interval's chip power estimate.
+
+    Args:
+      fn_features: (M, F) per-function counters normalized by system totals.
+      fn_active_frac: (M,) fraction of the interval the function was running.
+    """
+    dynamic = fn_features @ model.weights
+    total_active = jnp.maximum(jnp.sum(fn_active_frac), 1e-9)
+    static_share = model.bias * fn_active_frac / total_active
+    return jnp.maximum(dynamic, 0.0) + static_share
+
+
+@jax.jit
+def model_error(model: LinearPowerModel, features: Array, power: Array) -> Array:
+    """Relative error of the model on held-out intervals (retraining signal)."""
+    pred = predict_power(model, features)
+    return jnp.mean(jnp.abs(pred - power) / jnp.maximum(power, 1e-9))
+
+
+def needs_retrain(
+    model: LinearPowerModel,
+    features: Array,
+    power: Array,
+    config: CpuModelConfig = CpuModelConfig(),
+) -> bool:
+    """Paper: retrain when observed-vs-predicted error exceeds 5 %."""
+    return float(model_error(model, features, power)) > config.retrain_threshold

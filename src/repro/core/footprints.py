@@ -1,0 +1,61 @@
+"""Full-spectrum footprint assembly (paper §4.4, Fig. 3's spectrum).
+
+A function's total energy profile comprises its *individual* contribution
+(function execution), its share of *control plane* energy, and its share of
+the server's *idle* energy.  This module turns per-function power estimates
+(from disaggregation + Kalman) into the spectrum of energy footprints over an
+accounting period.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shapley import (
+    per_invocation_footprint,
+    shapley_control_plane_share,
+    shapley_idle_share,
+    total_footprint,
+)
+
+Array = jax.Array
+
+
+class FootprintSpectrum(NamedTuple):
+    """Per-function energy accounting over a period (all joules, shape (M,))."""
+
+    j_indiv: Array          # individual energy (no idle): X_no_idle * tau * A
+    phi_cp: Array           # Shapley share of control-plane energy
+    phi_idle: Array         # Shapley share of idle energy
+    j_total: Array          # Eq. 4 total
+    per_invocation: Array   # J_total / A
+    per_invocation_indiv: Array  # J_indiv / A (developer-facing footprint)
+
+
+@jax.jit
+def assemble_spectrum(
+    x_power: Array,        # (M,) per-function power while running (no idle)
+    mean_latency: Array,   # (M,) mean invocation latency (s)
+    invocations: Array,    # (M,) invocation counts over the period
+    cp_energy: Array,      # scalar: control-plane energy over the period (J)
+    idle_energy: Array,    # scalar: idle energy over the period (J)
+) -> FootprintSpectrum:
+    """Assemble the full footprint spectrum for an accounting period."""
+    a = invocations.astype(jnp.float32)
+    active = a > 0
+    j_per_inv = x_power * mean_latency           # J = X * tau  (§4.1)
+    j_indiv = j_per_inv * a
+    phi_cp = shapley_control_plane_share(cp_energy, a)
+    phi_idle = shapley_idle_share(idle_energy, active)
+    j_total = total_footprint(j_indiv, phi_cp, phi_idle)
+    return FootprintSpectrum(
+        j_indiv=j_indiv,
+        phi_cp=phi_cp,
+        phi_idle=phi_idle,
+        j_total=j_total,
+        per_invocation=per_invocation_footprint(j_total, a),
+        per_invocation_indiv=per_invocation_footprint(j_indiv, a),
+    )

@@ -1,0 +1,74 @@
+"""Energy metrology: validation metrics and marginal-energy ground truth
+(paper §5.1, Table 1, Eq. 6).
+
+External validity:
+- ``individual_difference``  |J - J*| / J*            (per function)
+- ``cosine_similarity``      J . J* / (|J| |J*|)      (primary external metric)
+- ``marginal_energy``        Eq. 6 ground truth from paired traces
+
+Internal validity:
+- ``total_power_error``      E[ |W(t) - W_hat(t)| / W(t) ]  (efficiency proxy)
+- ``latency_normalized_variance``  sigma(J) / sigma(T)
+- ``coefficient_of_variation``     sigma(J) / E[J]     (pricing precision)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.jit
+def individual_difference(j: Array, j_star: Array) -> Array:
+    """Per-function relative difference to ground truth: |J - J*| / J*."""
+    return jnp.abs(j - j_star) / jnp.maximum(jnp.abs(j_star), 1e-12)
+
+
+@jax.jit
+def cosine_similarity(j: Array, j_star: Array) -> Array:
+    """Cosine similarity between footprint vectors — captures footprint
+    *ratios*, robust to uniform offsets from idle/shared attribution policy
+    differences (the paper's primary external-validity metric)."""
+    num = jnp.sum(j * j_star)
+    den = jnp.linalg.norm(j) * jnp.linalg.norm(j_star)
+    return num / jnp.maximum(den, 1e-12)
+
+
+@jax.jit
+def total_power_error(w: Array, w_hat: Array) -> Array:
+    """E[|W(t) - W_hat(t)| / W(t)] over windows — Shapley 'efficiency'."""
+    return jnp.mean(jnp.abs(w - w_hat) / jnp.maximum(jnp.abs(w), 1e-12))
+
+
+@jax.jit
+def latency_normalized_variance(j_var: Array, t_var: Array) -> Array:
+    """sigma(J)/sigma(T) per function — compares energy-pricing stability to
+    the latency-based pricing status quo."""
+    return jnp.sqrt(j_var) / jnp.maximum(jnp.sqrt(t_var), 1e-12)
+
+
+@jax.jit
+def coefficient_of_variation(samples: Array, axis: int = 0) -> Array:
+    """CoV = sigma / mean along ``axis`` (FaasMeter's 'precision', Fig. 9)."""
+    mean = jnp.mean(samples, axis=axis)
+    std = jnp.std(samples, axis=axis)
+    return std / jnp.maximum(jnp.abs(mean), 1e-12)
+
+
+def marginal_energy(
+    energy_full_trace: float,
+    energy_without_fn: float,
+    invocations_of_fn: int,
+) -> float:
+    """Eq. 6 — the external ground truth:
+
+        M_f = ( J(T(S)) - J(T(S - f)) ) / #invocations of f in S
+
+    Computed from *total* energy of two nearly identical workload traces —
+    one with and one without function f.  Does not include idle energy
+    (present in both traces), so compare against no-idle footprints or use
+    cosine similarity.
+    """
+    return (energy_full_trace - energy_without_fn) / max(invocations_of_fn, 1)

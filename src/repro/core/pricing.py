@@ -1,0 +1,77 @@
+"""Energy-based pricing for function invocations (paper §1, §4.4, §6.2).
+
+Cloud functions today are priced by GB-seconds (memory x latency).  FaasMeter
+enables *energy* (and carbon) pricing with the fair-pricing properties from
+economics: proportionality, accuracy, efficiency (completeness), stability,
+symmetry, linearity — inherited from the Shapley construction of the
+footprints.
+
+The price spectrum mirrors the footprint spectrum:
+
+- ``indiv``  : J_indiv only — what developers optimizing their function see.
+- ``total``  : J_indiv + phi_cp + phi_idle — full accounting; gives providers
+  the incentive to raise utilization (idle share shrinks per function).
+- ``carbon`` : total x grid carbon intensity (gCO2/kWh), the operational
+  carbon footprint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+JOULES_PER_KWH = 3.6e6
+
+
+@dataclasses.dataclass(frozen=True)
+class PricingConfig:
+    usd_per_kwh: float = 0.12
+    carbon_intensity_g_per_kwh: float = 400.0  # grid average
+    # Latency-based comparison price (AWS-Lambda-like): $ per GB-second.
+    usd_per_gb_second: float = 1.667e-5
+
+
+@jax.jit
+def energy_price_usd(j_total: Array, usd_per_kwh: float = 0.12) -> Array:
+    """Price (USD) per function over the accounting period from joules."""
+    return j_total / JOULES_PER_KWH * usd_per_kwh
+
+
+@jax.jit
+def carbon_footprint_g(j_total: Array, intensity_g_per_kwh: float = 400.0) -> Array:
+    """Operational carbon: energy x grid carbon intensity."""
+    return j_total / JOULES_PER_KWH * intensity_g_per_kwh
+
+
+@jax.jit
+def latency_price_usd(
+    latency_s: Array, mem_gb: Array, usd_per_gb_second: float = 1.667e-5
+) -> Array:
+    """Status-quo GB-second pricing, the paper's comparison baseline."""
+    return latency_s * mem_gb * usd_per_gb_second
+
+
+def price_report(
+    j_indiv: Array,
+    j_total: Array,
+    invocations: Array,
+    latency_s: Array,
+    mem_gb: Array,
+    config: PricingConfig = PricingConfig(),
+) -> dict:
+    """Per-function price table across the pricing spectrum."""
+    inv = jnp.maximum(invocations.astype(jnp.float32), 1.0)
+    return {
+        "indiv_usd_per_inv": energy_price_usd(j_indiv / inv, config.usd_per_kwh),
+        "total_usd_per_inv": energy_price_usd(j_total / inv, config.usd_per_kwh),
+        "carbon_g_per_inv": carbon_footprint_g(
+            j_total / inv, config.carbon_intensity_g_per_kwh
+        ),
+        "latency_usd_per_inv": latency_price_usd(
+            latency_s, mem_gb, config.usd_per_gb_second
+        ),
+    }

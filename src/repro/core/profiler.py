@@ -1,0 +1,288 @@
+"""FaasMeter profiler orchestrator (paper §4, Fig. 1).
+
+Pipeline per accounting segment:
+
+  1. synchronize the system power signal against the chip-power reference
+     (Eq. 5 skew correction, §5);
+  2. build contribution matrices C, A at window size delta, with the control
+     plane appended as a shared principal (§4.1, Eq. 2);
+  3. initial disaggregation over the N_init window -> X_0 (§4.2);
+  4. scan Kalman steps over subsequent N_K batches -> X trajectory (§4.2);
+  5. (combined mode) add the CPU-model estimate to the 'rest' disaggregation
+     X = X_CPU + X_Rest (§4.3);
+  6. assemble the Shapley footprint spectrum (§4.4, Eq. 4).
+
+All heavy math is jitted; this class is thin orchestration so the serving
+control plane can call it online (per segment) and the fleet controller can
+vmap the underlying kernels over nodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import contribution as contrib
+from repro.core import cpu_model as cpumod
+from repro.core import sync as syncmod
+from repro.core.disaggregation import DisaggregationConfig, disaggregate
+from repro.core.footprints import FootprintSpectrum, assemble_spectrum
+from repro.core.kalman import KalmanConfig, kalman_init, run_kalman
+from repro.core.metrics import total_power_error
+
+Array = jax.Array
+
+
+class Telemetry(NamedTuple):
+    """Signals resampled onto the delta window grid (length N each)."""
+
+    system_power: Array          # (N,) watts, full-system (IPMI/plug-like)
+    chip_power: Array | None     # (N,) watts, chip/CPU (RAPL-like); sync ref
+    idle_watts: float            # static idle power of the node
+    cp_cpu_frac: Array | None    # (N,) control-plane CPU fraction
+    sys_cpu_frac: Array | None   # (N,) system-wide CPU fraction
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfilerConfig:
+    delta: float = 1.0             # disaggregation window (s), paper default
+    init_windows: int = 100        # N_init ~ 100 s initial estimate (§6)
+    step_windows: int = 60         # N_K = 60 s Kalman steps (§6)
+    mode: str = "pure"             # pure | combined (§4.3)
+    kalman: KalmanConfig = KalmanConfig()
+    disagg: DisaggregationConfig = DisaggregationConfig()
+    sync_max_shift: int = 16       # bound on skew search (windows)
+    account_control_plane: bool = True
+
+
+class FootprintReport(NamedTuple):
+    spectrum: FootprintSpectrum      # per-function energy spectrum (M,)
+    x_power: Array                   # (M,) final per-function power (watts)
+    x_trajectory: Array              # (S, M) Kalman trajectory
+    x_cp: Array                      # scalar: control-plane power estimate
+    mean_latency: Array              # (M,)
+    invocations: Array               # (M,)
+    skew_windows: float              # estimated sensor skew (windows)
+    total_error: float               # internal-validity Total-Error
+    cp_energy: float                 # control-plane energy over segment (J)
+    idle_energy: float               # idle energy over segment (J)
+
+
+def _per_fn_latency_stats(fn_id, start, end, num_fns):
+    dur = jnp.maximum(end - start, 0.0)
+    valid = fn_id >= 0
+    seg = jnp.where(valid, fn_id, num_fns)
+    counts = jax.ops.segment_sum(valid.astype(jnp.float32), seg, num_segments=num_fns + 1)[
+        :num_fns
+    ]
+    lat_sum = jax.ops.segment_sum(jnp.where(valid, dur, 0.0), seg, num_segments=num_fns + 1)[
+        :num_fns
+    ]
+    lat_sumsq = jax.ops.segment_sum(
+        jnp.where(valid, dur * dur, 0.0), seg, num_segments=num_fns + 1
+    )[:num_fns]
+    mean = lat_sum / jnp.maximum(counts, 1.0)
+    return counts, mean, lat_sum, lat_sumsq
+
+
+class FaasMeterProfiler:
+    """Stateless-per-call profiler; hold one per node (or vmap the internals)."""
+
+    def __init__(self, config: ProfilerConfig = ProfilerConfig()):
+        self.config = config
+
+    def profile(
+        self,
+        fn_id: Array,
+        start: Array,
+        end: Array,
+        *,
+        num_fns: int,
+        duration: float,
+        telemetry: Telemetry,
+        fn_counters: Array | None = None,
+        counter_model: cpumod.LinearPowerModel | None = None,
+    ) -> FootprintReport:
+        """Produce the footprint spectrum for one trace segment.
+
+        Args:
+          fn_id/start/end: (K,) invocation trace arrays (fn_id < 0 = padding).
+          num_fns: number of unique functions M.
+          duration: segment length in seconds.
+          telemetry: window-grid power signals (length N = duration/delta).
+          fn_counters: (M, F) normalized per-function step counters
+            (combined mode only).
+          counter_model: trained LinearPowerModel (combined mode only).
+        """
+        cfg = self.config
+        delta = cfg.delta
+        n_windows = int(round(duration / delta))
+        w_sys = telemetry.system_power[:n_windows]
+
+        # --- 1. Synchronize system power against the chip-power reference.
+        skew = 0.0
+        if telemetry.chip_power is not None:
+            w_sys, skew_arr = syncmod.synchronize(
+                w_sys, telemetry.chip_power[:n_windows], max_shift=cfg.sync_max_shift
+            )
+            skew = float(skew_arr)
+
+        # --- 2. Contribution matrices (+ control plane shared principal).
+        c = contrib.contribution_matrix(
+            fn_id, start, end, num_fns=num_fns, num_windows=n_windows, delta=delta
+        )
+        a = contrib.invocation_counts(
+            fn_id, start, num_fns=num_fns, num_windows=n_windows, delta=delta
+        )
+        cp_col = None
+        if cfg.account_control_plane and telemetry.cp_cpu_frac is not None:
+            cp_col = contrib.shared_principal_contribution(
+                telemetry.cp_cpu_frac[:n_windows],
+                telemetry.sys_cpu_frac[:n_windows],
+                delta=delta,
+            )
+            c_aug = contrib.augment_with_principals(c, cp_col)
+        else:
+            c_aug = c
+        m_aug = c_aug.shape[1]
+
+        # --- 3+4. Initial disaggregation + Kalman trajectory.
+        target = self._target_signal(w_sys, telemetry)
+        init_n = min(cfg.init_windows, n_windows)
+        x0 = disaggregate(c_aug[:init_n], target[:init_n], cfg.disagg)
+
+        s = max((n_windows - init_n) // cfg.step_windows, 0)
+        if s > 0:
+            n_used = init_n + s * cfg.step_windows
+            c_steps = c_aug[init_n:n_used].reshape(s, cfg.step_windows, m_aug)
+            w_steps = target[init_n:n_used].reshape(s, cfg.step_windows)
+            a_steps, lat_sums, lat_sumsqs = self._per_step_stats(
+                fn_id, start, end, num_fns, m_aug, init_n, s, cp_col
+            )
+            state = kalman_init(m_aug, x0=x0)
+            state, traj = run_kalman(
+                state, c_steps, w_steps, a_steps, lat_sums, lat_sumsqs, cfg.kalman
+            )
+            x_final = state.x
+        else:
+            traj = x0[None, :]
+            x_final = x0
+
+        # --- 5. Combined mode: X = X_CPU + X_Rest (§4.3).
+        if cfg.mode == "combined":
+            if fn_counters is None or counter_model is None or telemetry.chip_power is None:
+                raise ValueError("combined mode needs fn_counters, counter_model, chip_power")
+            active_frac = jnp.sum(c, axis=0) / duration
+            x_cpu = cpumod.predict_function_power(counter_model, fn_counters, active_frac)
+            x_fns = x_final[:num_fns] + x_cpu
+        else:
+            x_fns = x_final[:num_fns]
+
+        # --- 6. Shapley spectrum.
+        counts, mean_lat, _, _ = _per_fn_latency_stats(fn_id, start, end, num_fns)
+        x_cp = x_final[num_fns] if cp_col is not None else jnp.asarray(0.0)
+        cp_energy = float(x_cp * jnp.sum(cp_col)) if cp_col is not None else 0.0
+        idle_energy = telemetry.idle_watts * duration
+        spectrum = assemble_spectrum(
+            x_fns, mean_lat, counts, jnp.asarray(cp_energy), jnp.asarray(idle_energy)
+        )
+
+        # Internal validity: reconstruct W_hat(t) from the *time-varying*
+        # estimates (X_0 over the init window, then each Kalman step's X).
+        offset = telemetry.idle_watts
+        if cfg.mode == "combined":
+            offset = telemetry.chip_power[:n_windows] + self._rest_idle(telemetry)
+        w_hat_init = c_aug[:init_n] @ x0 + (
+            offset[:init_n] if hasattr(offset, "shape") else offset
+        )
+        parts = [w_hat_init]
+        if s > 0:
+            per_step = jnp.einsum("snm,sm->sn", c_steps, traj).reshape(-1)
+            off_steps = (
+                offset[init_n : init_n + s * cfg.step_windows]
+                if hasattr(offset, "shape")
+                else offset
+            )
+            parts.append(per_step + off_steps)
+        w_hat = jnp.concatenate([jnp.atleast_1d(p) for p in parts])
+        n_hat = w_hat.shape[0]
+        # Total-Error against the *synchronized* signal — the prediction
+        # targets the de-skewed series (comparing against the raw lagged
+        # signal would charge the sensor's reporting delay to the model).
+        terr = float(total_power_error(w_sys[:n_hat], w_hat))
+        return FootprintReport(
+            spectrum=spectrum,
+            x_power=x_fns,
+            x_trajectory=traj,
+            x_cp=x_cp,
+            mean_latency=mean_lat,
+            invocations=counts,
+            skew_windows=skew,
+            total_error=terr,
+            cp_energy=cp_energy,
+            idle_energy=idle_energy,
+        )
+
+    def _target_signal(self, w_sys: Array, telemetry: Telemetry) -> Array:
+        """Disaggregation target per mode (always idle-subtracted: X_No_Idle)."""
+        cfg = self.config
+        if cfg.mode == "combined":
+            # 'rest' power: system minus chip; chip side is modeled separately.
+            rest = w_sys - telemetry.chip_power[: w_sys.shape[0]]
+            return jnp.maximum(rest - self._rest_idle(telemetry), 0.0)
+        return jnp.maximum(w_sys - telemetry.idle_watts, 0.0)
+
+    def _rest_idle(self, telemetry: Telemetry) -> float:
+        # Idle power of the non-chip components; approximated as total idle
+        # minus the chip's floor (min observed chip power).
+        chip_floor = float(jnp.min(telemetry.chip_power))
+        return max(telemetry.idle_watts - chip_floor, 0.0)
+
+    def _per_step_stats(self, fn_id, start, end, num_fns, m_aug, init_n, s, cp_col):
+        """Per-Kalman-step invocation counts + latency moments, by start time."""
+        cfg = self.config
+        t_begin = init_n * cfg.delta
+        step_len = cfg.step_windows * cfg.delta
+        step_idx = jnp.floor((start - t_begin) / step_len).astype(jnp.int32)
+        valid = (fn_id >= 0) & (step_idx >= 0) & (step_idx < s)
+        seg = jnp.where(valid, step_idx * num_fns + jnp.clip(fn_id, 0, num_fns - 1), s * num_fns)
+        dur = jnp.maximum(end - start, 0.0)
+
+        def scat(vals):
+            out = jax.ops.segment_sum(
+                jnp.where(valid, vals, 0.0), seg, num_segments=s * num_fns + 1
+            )[:-1]
+            return out.reshape(s, num_fns)
+
+        ones = jnp.ones_like(dur)
+        a_steps = scat(ones)
+        lat_sums = scat(dur)
+        lat_sumsqs = scat(dur * dur)
+        if m_aug > num_fns:
+            # Shared principals: always-active row; one pseudo-invocation per
+            # step keeps its Kalman gain alive, zero latency variance.
+            pad = jnp.ones((s, m_aug - num_fns), jnp.float32)
+            a_steps = jnp.concatenate([a_steps, pad], axis=1)
+            lat_sums = jnp.concatenate([lat_sums, pad * 0.0], axis=1)
+            lat_sumsqs = jnp.concatenate([lat_sumsqs, pad * 0.0], axis=1)
+        return a_steps, lat_sums, lat_sumsqs
+
+
+def fleet_profile(
+    profiler: FaasMeterProfiler,
+    traces: list[tuple[Array, Array, Array]],
+    telemetries: list[Telemetry],
+    *,
+    num_fns: int,
+    duration: float,
+) -> list[FootprintReport]:
+    """Profile many nodes.  Orchestration-level loop; the per-node math is
+    jitted and shape-stable so XLA caches a single executable across nodes."""
+    return [
+        profiler.profile(f, st, en, num_fns=num_fns, duration=duration, telemetry=tel)
+        for (f, st, en), tel in zip(traces, telemetries)
+    ]

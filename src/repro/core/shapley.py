@@ -1,0 +1,77 @@
+"""Fair attribution of shared power via Shapley-value principles (paper §4.4).
+
+Exact Shapley values need energy readings over exponentially many coalition
+permutations — infeasible online.  FaasMeter instead *constructs* footprints
+that satisfy the four Shapley properties in a best-effort manner:
+
+1. Efficiency: footprints sum to total system energy (driven by the Kalman
+   filter's net-error minimization; checked by ``metrics.total_power_error``).
+2. Null player: non-executing functions get 0 (by construction of C).
+3. Symmetry: identical functions get identical footprints.
+4. Linearity: shared-resource shares add across resources.
+
+Attribution policy (with [48]'s argument for static resources):
+
+- idle energy is a *static* shared resource -> split **evenly** over the
+  active functions:            phi_idle = J_idle / M_active
+- control-plane energy is *dynamic* (scales with use) -> split
+  **per-invocation**:          phi_cp   = J_cp * A_i / sum(A)
+
+and the full-spectrum total (Eq. 4):
+
+    J_total = J_indiv + phi_cp + phi_idle
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.jit
+def shapley_idle_share(idle_energy: Array, active_mask: Array) -> Array:
+    """Evenly split the static idle energy over active functions.
+
+    Args:
+      idle_energy: scalar joules of idle energy over the accounting period.
+      active_mask: (M,) bool/0-1, functions with >=1 invocation in the period.
+
+    Returns:
+      (M,) phi_idle, zero for inactive functions (null-player).
+    """
+    active = active_mask.astype(jnp.float32)
+    m_active = jnp.maximum(jnp.sum(active), 1.0)
+    return idle_energy * active / m_active
+
+
+@jax.jit
+def shapley_control_plane_share(cp_energy: Array, invocations: Array) -> Array:
+    """Split dynamic control-plane energy proportional to invocation counts.
+
+    phi_cp[i] = J_cp * A_i / sum(A).   (M,) in joules.
+    """
+    a = invocations.astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(a), 1.0)
+    return cp_energy * a / total
+
+
+@jax.jit
+def total_footprint(
+    j_indiv: Array, phi_cp: Array, phi_idle: Array
+) -> Array:
+    """Eq. 4: J_total = J_indiv + phi_cp + phi_idle (per function, joules).
+
+    Linearity holds by construction: shares from independent shared resources
+    are summed.  Efficiency requires sum(J_total) ~= total system energy,
+    which the caller validates against metered totals.
+    """
+    return j_indiv + phi_cp + phi_idle
+
+
+@jax.jit
+def per_invocation_footprint(j_total: Array, invocations: Array) -> Array:
+    """Footprint per single invocation: J_total / A (0 where A == 0)."""
+    a = invocations.astype(jnp.float32)
+    return jnp.where(a > 0, j_total / jnp.maximum(a, 1.0), 0.0)

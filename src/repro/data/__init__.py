@@ -1,0 +1,1 @@
+"""Data pipeline substrate (deterministic, spec-driven, seekable)."""

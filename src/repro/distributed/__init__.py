@@ -1,0 +1,1 @@
+"""Distributed runtime: sharding rules, meshes, checkpointing, collectives."""

@@ -1,0 +1,218 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Parameters and activations are annotated with *logical* axes ("embed",
+"qkv", "mlp", "vocab", "expert", "batch", "seq", "kv_heads", ...); rule
+tables map logical axes onto mesh axes.  A mapping is applied only when
+
+  1. the dimension is divisible by the product of the mesh-axis sizes, and
+  2. none of those mesh axes is already used by another dimension of the
+     same tensor (GSPMD requires each mesh axis at most once per spec).
+
+Otherwise the dimension falls back along the rule's candidate chain and
+ultimately to replication.  This is what lets one rule table cover all ten
+assigned architectures (e.g. qwen2.5's 40 heads are not divisible by
+model=16, but its flattened 40*128=5120 projection dim is).
+
+Two built-in rule tables:
+
+- ``TRAIN_RULES``: FSDP over "data" (weights' embed dim), TP over "model"
+  (qkv/mlp/vocab/expert dims), batch over ("pod", "data"); gradients
+  all-reduce over "pod" (pure DP across pods).
+- ``SERVE_RULES``: weights TP over "model" and replicated over "data"
+  (low-latency serving), batch over ("pod", "data"), KV cache batch-sharded
+  with kv-heads on "model" when divisible (falls back to sequence).
+
+Models call :func:`shard_activation` at block boundaries; it is a no-op
+unless a rule context is active (set by the launchers via
+:func:`use_rules`), keeping model code mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+# Each rule: logical axis -> tuple of candidate mesh-axis tuples, tried in
+# order; () means replicate.
+Rules = dict[str, tuple[tuple[str, ...], ...]]
+
+TRAIN_RULES: Rules = {
+    "batch": (("pod", "data"), ("data",), ()),
+    "seq": ((),),
+    "embed": (("data",), ()),          # FSDP shard of weight rows
+    "act_embed": ((),),                # activations keep embed replicated
+    "qkv": (("model",), ()),           # flattened heads*head_dim
+    "heads": (("model",), ()),
+    "kv_heads": (("model",), ()),
+    "o_in": (("model",), ()),
+    "mlp": (("model",), ()),
+    "vocab": (("model",), ()),
+    "lm_head": (("model",), ()),      # unembed output dim (logits vocab)
+    "expert": (("model",), ()),
+    "expert_mlp": ((),),
+    "kv_seq": (("model",), ()),        # decode KV-cache sequence fallback
+    "layers": ((),),
+    "state": ((),),
+    "conv": ((),),
+    "cap": (("pod", "data"), ("data",), ()),  # MoE capacity slots
+    "frontend": ((),),
+}
+
+SERVE_RULES: Rules = {
+    **TRAIN_RULES,
+    "batch": (("pod", "data"), ("data",), ()),
+    "embed": ((),),                    # weights replicated over data for serve
+    "kv_heads": (("model",), ()),
+}
+
+#: Expert-parallel-first variant (§Perf H-B3): the "model" axis is reserved
+#: for experts; attention/shared-MLP weights drop TP (their per-layer
+#: activation all-reduces vanish — they are small relative to expert FFNs
+#: in fine-grained MoE), FSDP over "data" stays.
+EP_RULES: Rules = {
+    **TRAIN_RULES,
+    "qkv": ((),),
+    "heads": ((),),
+    "kv_heads": ((),),
+    "o_in": ((),),
+    "mlp": ((),),
+}
+
+#: ZeRO-3 / pure-FSDP variant (§Perf H-A2): the "model" axis joins the batch
+#: axis (TP degree 1) so per-layer TP activation all-reduces vanish; weights
+#: shard their row dim over the combined (data x model) = 256-way axis and
+#: are all-gathered per layer per pass.  Wins when activation-AR bytes
+#: exceed weight-gather bytes (dense train at B_loc x S x d >> params/layer).
+#: NOT for MoE archs: expert parallelism needs the "model" axis.
+ZERO3_RULES: Rules = {
+    **TRAIN_RULES,
+    "batch": (("pod", "data", "model"), ("data", "model"), ("data",), ()),
+    "embed": (("data", "model"), ("data",), ()),
+    "qkv": ((),),
+    "heads": ((),),
+    "kv_heads": ((),),
+    "o_in": ((),),
+    "mlp": ((),),
+    # vocab REPLICATED, embed-dim sharded: `take` gathers over a sharded
+    # vocab dim force SPMD to replicate the whole table (measured: +6.3 GB
+    # on nemotron's 256 k-vocab); with the embed dim sharded the lookup is
+    # local and the (much smaller) activation gathers/psums do the work.
+    # The unembed ("lm_head") stays vocab-sharded: it only feeds einsums,
+    # and sharding it keeps logits AND the unembed gradient sharded
+    # (replicated dW was +12.6 GB on nemotron).
+    "vocab": ((),),
+    "lm_head": (("data", "model"), ("model",), ()),
+    "expert": ((),),
+    "kv_seq": ((),),
+}
+
+
+_ctx = threading.local()
+
+
+def _active() -> tuple[Mesh, Rules] | None:
+    return getattr(_ctx, "active", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Rules):
+    """Activate (mesh, rules) so model-internal ``shard_activation`` calls
+    emit with_sharding_constraint; no-op outside the context."""
+    prev = _active()
+    _ctx.active = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.active = prev
+
+
+def _mesh_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+#: When two dims of one tensor compete for the same mesh axis, the higher-
+#: priority logical axis wins (e.g. a KV cache prefers kv_heads on "model",
+#: falling back to kv_seq only when the head count is not divisible).
+_PRIORITY = (
+    "batch", "vocab", "lm_head", "expert", "qkv", "mlp", "kv_heads", "heads",
+    "o_in", "embed", "kv_seq", "cap", "seq",
+)
+_PRIO = {name: i for i, name in enumerate(_PRIORITY)}
+
+
+def spec_for(
+    logical: Sequence[str | None], shape: Sequence[int], mesh: Mesh, rules: Rules
+) -> P:
+    """Resolve logical axes -> PartitionSpec under divisibility + axis-reuse
+    constraints, visiting dims in logical-axis priority order."""
+    used: set[str] = set()
+    entries: list[Any] = [None] * len(logical)
+    order = sorted(
+        range(len(logical)),
+        key=lambda i: _PRIO.get(logical[i], len(_PRIORITY)) if logical[i] else 1e9,
+    )
+    for i in order:
+        name, dim = logical[i], shape[i]
+        if name is None:
+            continue
+        for cand in rules.get(name, ((),)):
+            if not cand:
+                break
+            if any(a in used for a in cand):
+                continue
+            if any(a not in mesh.shape for a in cand):
+                continue
+            if dim % _mesh_size(mesh, cand) != 0:
+                continue
+            entries[i] = cand if len(cand) > 1 else cand[0]
+            used.update(cand)
+            break
+    # Trim trailing Nones (canonical form).
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sharding_for(
+    logical: Sequence[str | None], shape: Sequence[int], mesh: Mesh, rules: Rules
+) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical, shape, mesh, rules))
+
+
+def tree_shardings(logical_tree: Any, abstract_tree: Any, mesh: Mesh, rules: Rules) -> Any:
+    """Map a pytree of logical-axis tuples + ShapeDtypeStructs to shardings."""
+    return jax.tree.map(
+        lambda axes, a: sharding_for(axes, a.shape, mesh, rules),
+        logical_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def shard_activation(x: Array, logical: Sequence[str | None]) -> Array:
+    """Constrain an activation's sharding if a rule context is active."""
+    active = _active()
+    if active is None:
+        return x
+    mesh, rules = active
+    spec = spec_for(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def abstract_with_sharding(abstract_tree: Any, logical_tree: Any, mesh: Mesh, rules: Rules) -> Any:
+    """Attach shardings to ShapeDtypeStructs (dry-run input specs)."""
+    return jax.tree.map(
+        lambda a, axes: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=sharding_for(axes, a.shape, mesh, rules)
+        ),
+        abstract_tree,
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )

@@ -1,0 +1,85 @@
+"""Jitted public entry points for the compute hot-spots.
+
+Dispatch policy: on TPU backends the Pallas kernels run (explicit BlockSpec
+VMEM tiling, MXU-aligned); on CPU — including the 512-fake-device dry-run —
+the pure-jnp references in ``ref.py`` execute, which share blocked structure
+(and therefore an honest memory profile) with the kernels.  Set
+``REPRO_FORCE_KERNELS=interpret`` to route through the Pallas kernels in
+interpret mode (used by the kernel test sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+Array = jax.Array
+
+
+def _kernel_mode() -> str:
+    forced = os.environ.get("REPRO_FORCE_KERNELS", "")
+    if forced:
+        return forced  # "interpret" | "pallas" | "ref"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> Array:
+    """Blocked GQA attention (B, S, H, d) x (B, T, Hkv, d) -> (B, S, H, d)."""
+    mode = _kernel_mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import flash_attention as fa
+
+        return fa.flash_attention(
+            q, k, v, causal=causal, q_block=q_block, kv_block=kv_block,
+            interpret=(mode == "interpret"),
+        )
+    return ref.flash_attention(q, k, v, causal, q_block, kv_block)
+
+
+def decode_attention(
+    q: Array, k_cache: Array, v_cache: Array, lengths: Array, *, kv_block: int = 2048
+) -> Array:
+    """Single-token GQA attention against a KV cache: (B, H, d)."""
+    mode = _kernel_mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import decode_attention as da
+
+        return da.decode_attention(
+            q, k_cache, v_cache, lengths, kv_block=kv_block,
+            interpret=(mode == "interpret"),
+        )
+    return ref.decode_attention(q, k_cache, v_cache, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def disagg_gram(c: Array, w: Array) -> tuple[Array, Array]:
+    """Batched normal-equation assembly (C^T C, C^T W) for the fleet solve."""
+    mode = _kernel_mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import disagg_solve as ds
+
+        return ds.disagg_gram(c, w, interpret=(mode == "interpret"))
+    return ref.disagg_gram(c, w)
+
+
+def rmsnorm(x: Array, gamma: Array, eps: float = 1e-5) -> Array:
+    """Fused RMSNorm (TPU) / jnp reference (CPU)."""
+    mode = _kernel_mode()
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import rmsnorm as rn
+
+        return rn.rmsnorm(x, gamma, eps=eps, interpret=(mode == "interpret"))
+    return ref.rmsnorm(x, gamma, eps)

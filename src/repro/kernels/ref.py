@@ -1,0 +1,307 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the *semantics* of the kernels — used (a) as the CPU/dry-run
+execution path (memory-sane: blocked online-softmax with a hand-written
+FlashAttention backward, never materializing S x S score matrices), and
+(b) as the ground truth that ``tests/test_kernels.py`` sweeps the Pallas
+kernels against in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(q: Array, num_kv: int) -> Array:
+    """(B, S, H, d) -> (B, S, Hkv, G, d)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def attention_dense(
+    q: Array, k: Array, v: Array, *, causal: bool = True, scale: float | None = None
+) -> Array:
+    """Unblocked GQA attention — the simplest possible oracle (small shapes
+    only; materializes the score matrix)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qg = _gqa_expand(q, hkv).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        t = k.shape[1]
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash attention with a hand-written (recomputing) backward pass.
+# ---------------------------------------------------------------------------
+
+
+def _flash_fwd_inner(qg, kb, vb, qi, *, causal, offset, scale, q_block, kv_block, nk):
+    """Online-softmax pass of one q block over its kv blocks.
+
+    qg: (B, qb, Hkv, G, d); kb/vb: (B, nk, kvb, Hkv, d).
+    Returns out (B, qb, Hkv, G, d) fp32 and lse (B, Hkv, G, qb).
+    """
+    b, qb, hkv, g, d = qg.shape
+    q32 = qg.astype(jnp.float32)
+
+    def kv_step(ki, carry):
+        m, l, acc = carry
+        kk = kb[:, ki].astype(jnp.float32)
+        vv = vb[:, ki].astype(jnp.float32)
+        scores = jnp.einsum("bqkgd,btkd->bkgqt", q32, kk) * scale
+        if causal:
+            q_pos = qi * q_block + jnp.arange(q_block) + offset
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqt,btkd->bkgqd", p, vv)
+        return m_new, l_new, acc * corr[..., None] + pv
+
+    m0 = jnp.full((b, hkv, g, qb), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, qb), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, qb, d), jnp.float32)
+    if causal:
+        hi = jnp.minimum((qi * q_block + q_block + offset + kv_block - 1) // kv_block, nk)
+    else:
+        hi = nk
+    m, l, acc = jax.lax.fori_loop(0, hi, kv_step, (m0, l0, a0))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4), lse  # (B, qb, Hkv, G, d), (B, Hkv, G, qb)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(
+    q: Array,               # (B, S, H, d)
+    k: Array,               # (B, T, Hkv, d)
+    v: Array,               # (B, T, Hkv, d)
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> Array:
+    """Blocked online-softmax GQA attention (FlashAttention semantics).
+
+    Memory is O(q_block x kv_block) per head regardless of S, in both the
+    forward and the hand-written recomputing backward — so the HLO the
+    dry-run lowers has an honest memory profile for training too.
+    """
+    out, _ = _flash_fwd(q, k, v, causal, q_block, kv_block)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, q_block, kv_block):
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, t)
+    assert s % q_block == 0 and t % kv_block == 0, (s, q_block, t, kv_block)
+    nq, nk = s // q_block, t // kv_block
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    offset = t - s
+
+    qg = q.reshape(b, nq, q_block, hkv, g, d)
+    kb = k.reshape(b, nk, kv_block, hkv, d)
+    vb = v.reshape(b, nk, kv_block, hkv, d)
+
+    def per_q(i):
+        return _flash_fwd_inner(
+            qg[:, i], kb, vb, i,
+            causal=causal, offset=offset, scale=scale,
+            q_block=q_block, kv_block=kv_block, nk=nk,
+        )
+
+    outs, lses = jax.lax.map(per_q, jnp.arange(nq))
+    # outs: (nq, B, qb, Hkv, G, d) -> (B, S, H, d)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d).astype(q.dtype)
+    # lses: (nq, B, Hkv, G, qb) -> (B, Hkv, G, S)
+    lse = jnp.moveaxis(lses, 0, -2).reshape(b, hkv, g, s)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_block, kv_block, res, dout):
+    q, k, v, out, lse = res
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, t)
+    nq, nk = s // q_block, t // kv_block
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    offset = t - s
+
+    qg = q.reshape(b, nq, q_block, hkv, g, d)
+    og = out.reshape(b, nq, q_block, hkv, g, d)
+    dog = dout.reshape(b, nq, q_block, hkv, g, d)
+    lseg = lse.reshape(b, hkv, g, nq, q_block)
+    kb = k.reshape(b, nk, kv_block, hkv, d)
+    vb = v.reshape(b, nk, kv_block, hkv, d)
+    # D = rowsum(dO * O): (B, nq, qb, Hkv, G)
+    dsum = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), axis=-1)
+
+    def _p_block(qi, ki):
+        """Recompute the (masked, normalized) probability block."""
+        q32 = qg[:, qi].astype(jnp.float32)
+        kk = kb[:, ki].astype(jnp.float32)
+        scores = jnp.einsum("bqkgd,btkd->bkgqt", q32, kk) * scale
+        if causal:
+            q_pos = qi * q_block + jnp.arange(q_block) + offset
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        return jnp.exp(scores - lseg[:, :, :, qi][..., None])  # (B,Hkv,G,qb,kvb)
+
+    def _ds_block(qi, ki, p):
+        do32 = dog[:, qi].astype(jnp.float32)
+        vv = vb[:, ki].astype(jnp.float32)
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", do32, vv)
+        return p * (dp - dsum[:, qi].transpose(0, 2, 3, 1)[..., None])
+
+    # dq: loop over q blocks, accumulate over this block's kv range.
+    def dq_step(qi):
+        def inner(ki, acc):
+            p = _p_block(qi, ki)
+            ds = _ds_block(qi, ki, p)
+            kk = kb[:, ki].astype(jnp.float32)
+            return acc + jnp.einsum("bkgqt,btkd->bqkgd", ds, kk) * scale
+
+        hi = (
+            jnp.minimum((qi * q_block + q_block + offset + kv_block - 1) // kv_block, nk)
+            if causal
+            else nk
+        )
+        acc0 = jnp.zeros((b, q_block, hkv, g, d), jnp.float32)
+        return jax.lax.fori_loop(0, hi, inner, acc0)
+
+    dq = jax.lax.map(dq_step, jnp.arange(nq))          # (nq, B, qb, Hkv, G, d)
+    dq = jnp.moveaxis(dq, 0, 1).reshape(b, s, h, d).astype(q.dtype)
+
+    # dk/dv: loop over kv blocks, accumulate over contributing q blocks.
+    def dkv_step(ki):
+        def inner(qi, carry):
+            dk_acc, dv_acc = carry
+            p = _p_block(qi, ki)
+            ds = _ds_block(qi, ki, p)
+            q32 = qg[:, qi].astype(jnp.float32)
+            do32 = dog[:, qi].astype(jnp.float32)
+            dk_acc = dk_acc + jnp.einsum("bkgqt,bqkgd->btkd", ds, q32) * scale
+            dv_acc = dv_acc + jnp.einsum("bkgqt,bqkgd->btkd", p, do32)
+            return dk_acc, dv_acc
+
+        lo = (
+            jnp.maximum((ki * kv_block - offset) // q_block, 0) if causal else 0
+        )
+        z = jnp.zeros((b, kv_block, hkv, d), jnp.float32)
+        dk_b, dv_b = jax.lax.fori_loop(lo, nq, inner, (z, z))
+        return dk_b, dv_b
+
+    dks, dvs = jax.lax.map(dkv_step, jnp.arange(nk))   # (nk, B, kvb, Hkv, d)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, t, hkv, d).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, t, hkv, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def decode_attention(
+    q: Array,            # (B, H, d) single query token per sequence
+    k_cache: Array,      # (B, S, Hkv, d)
+    v_cache: Array,      # (B, S, Hkv, d)
+    lengths: Array,      # (B,) valid KV length per sequence
+) -> Array:
+    """Single-token GQA attention against a (possibly partially filled) KV
+    cache; masked beyond ``lengths``.  Returns (B, H, d)."""
+    b, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def decode_attention_quant(
+    q: Array,            # (B, H, d)
+    k_cache: Array,      # (B, S, Hkv, d) int8
+    v_cache: Array,      # (B, S, Hkv, d) int8
+    k_scale: Array,      # (B, S, Hkv) f32/bf16 per-row scales
+    v_scale: Array,
+    lengths: Array,      # (B,)
+) -> Array:
+    """Decode attention over an int8-quantized KV cache.
+
+    Dequantization is folded around the contractions so the int8 tensors are
+    never materialized at higher precision:  scores = (q . k_q) * k_scale,
+    and  out = (p * v_scale) . v_q  — HBM reads stay at 1 byte/element,
+    which is the whole point (decode is KV-bandwidth-bound).
+    """
+    b, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32))
+    scores = scores * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :] * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    pv = p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bkgt,btkd->bkgd", pv, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def quantize_kv(x: Array) -> tuple[Array, Array]:
+    """Per-(position, head) symmetric int8 quantization of K or V rows.
+
+    x: (B, S, Hkv, d) -> (int8 same shape, scales (B, S, Hkv))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def disagg_gram(c: Array, w: Array) -> tuple[Array, Array]:
+    """Normal-equation assembly for the disaggregation solve (paper Eq. 1).
+
+    Args:
+      c: (..., N, M) contribution windows; w: (..., N) power targets.
+    Returns:
+      gram (..., M, M) = C^T C and rhs (..., M) = C^T W in fp32.
+    """
+    c32 = c.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    gram = jnp.einsum("...nm,...nk->...mk", c32, c32)
+    rhs = jnp.einsum("...nm,...n->...m", c32, w32)
+    return gram, rhs
+
+
+def rmsnorm(x: Array, gamma: Array, eps: float = 1e-5) -> Array:
+    """Reference for the fused RMSNorm kernel."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)).astype(x.dtype)

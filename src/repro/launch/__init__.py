@@ -1,0 +1,1 @@
+"""Launchers: meshes, multi-pod dry-run, roofline, train/serve drivers."""

@@ -1,0 +1,226 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_EXTRA", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device count
+at first init, and the dry-run needs 512 placeholder host devices so
+``jax.make_mesh`` can build the production meshes.  Nothing here allocates
+tensors: parameters, optimizer state, batches, and KV caches all enter as
+ShapeDtypeStructs.
+
+Per cell this script prints/records:
+
+- ``compiled.memory_analysis()``  -> bytes per device (proves it fits)
+- ``compiled.cost_analysis()``    -> FLOPs / bytes for the roofline
+- collective bytes parsed from the compiled HLO (all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute)
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_shape, runnable_cells
+from repro.distributed import sharding as shd
+from repro.distributed.collectives import collective_bytes, collective_bytes_structured
+from repro.launch import mesh as meshlib
+from repro.models import build, model_flops
+from repro.models.common import abstract, logical_axes
+from repro.models.model_zoo import spec_abstract, spec_logical
+from repro.training import optimizer as opt
+from repro.training.train_step import (
+    abstract_state,
+    make_train_step,
+    state_logical,
+)
+
+
+def _shardings_from_logical(logical_tree, abstract_tree, mesh, rules):
+    return jax.tree.map(
+        lambda ax, a: shd.sharding_for(ax, a.shape, mesh, rules),
+        logical_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def lower_cell(
+    arch: str, shape_name: str, *, multi_pod: bool = False, opt_config=None,
+    accum_steps: int = 1, cast_params: bool = False, rules_name: str = "train",
+    cfg_overrides: dict | None = None,
+):
+    """Lower + compile one cell.  Returns the record dict."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = get_shape(shape_name)
+    api = build(cfg)
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    opt_config = opt_config or opt.OptimizerConfig()
+
+    t0 = time.time()
+    if shape.kind == "train":
+        rules = {"zero3": shd.ZERO3_RULES, "ep": shd.EP_RULES}.get(rules_name, shd.TRAIN_RULES)
+        step = make_train_step(
+            api, opt_config, accum_steps=accum_steps, cast_params=cast_params
+        )
+        st_abs = abstract_state(api, opt_config)
+        st_sh = _shardings_from_logical(state_logical(api, opt_config), st_abs, mesh, rules)
+        b_specs = api.train_inputs(shape)
+        b_abs = spec_abstract(b_specs)
+        b_sh = _shardings_from_logical(spec_logical(b_specs), b_abs, mesh, rules)
+        with shd.use_rules(mesh, rules):
+            jitted = jax.jit(
+                step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(st_abs, b_abs)
+    elif shape.kind == "prefill":
+        rules = shd.SERVE_RULES
+        p_abs = abstract(api.params_def, jnp.bfloat16)
+        p_sh = _shardings_from_logical(logical_axes(api.params_def), p_abs, mesh, rules)
+        b_specs = api.prefill_inputs(shape)
+        b_abs = spec_abstract(b_specs)
+        b_sh = _shardings_from_logical(spec_logical(b_specs), b_abs, mesh, rules)
+        with shd.use_rules(mesh, rules):
+            jitted = jax.jit(api.prefill, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(p_abs, b_abs)
+    else:  # decode
+        rules = shd.SERVE_RULES
+        p_abs = abstract(api.params_def, jnp.bfloat16)
+        p_sh = _shardings_from_logical(logical_axes(api.params_def), p_abs, mesh, rules)
+        c_specs = api.cache_spec(shape)
+        c_abs = spec_abstract(c_specs)
+        c_sh = _shardings_from_logical(spec_logical(c_specs), c_abs, mesh, rules)
+        d_specs = api.decode_inputs(shape)
+        d_abs = spec_abstract(d_specs)
+        d_sh = _shardings_from_logical(spec_logical(d_specs), d_abs, mesh, rules)
+        with shd.use_rules(mesh, rules):
+            jitted = jax.jit(
+                api.decode,
+                in_shardings=(p_sh, c_sh, d_sh["token"], d_sh["pos"]),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(p_abs, c_abs, d_abs["token"], d_abs["pos"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    coll_structured = collective_bytes_structured(hlo_text)
+
+    n_dev = 512 if multi_pod else 256
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "accum_steps": accum_steps,
+        "cast_params": cast_params,
+        "rules": rules_name if shape.kind == "train" else "serve",
+        "cfg_overrides": cfg_overrides or {},
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "collective_bytes_structured": coll_structured,
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes_est": int(
+                mem.argument_size_in_bytes
+                + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes
+            ),
+        },
+        "model_flops": model_flops(cfg, shape),
+        "param_count": cfg.param_count(),
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--bf16-params", action="store_true")
+    ap.add_argument("--rules", default="train", choices=["train", "zero3", "ep"])
+    ap.add_argument("--override", default="", help="k=v,... ArchConfig overrides")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.override.split(","):
+        if kv:
+            k, v = kv.split("=")
+            for cast in (int, float, str):
+                try:
+                    overrides[k] = cast(v)
+                    break
+                except ValueError:
+                    continue
+
+    cells = runnable_cells() if args.all else [(args.arch, args.shape)]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}{args.tag}"
+        try:
+            rec = lower_cell(
+                arch, shape, multi_pod=args.multi_pod, accum_steps=args.accum,
+                cast_params=args.bf16_params, rules_name=args.rules,
+                cfg_overrides=overrides,
+            )
+            path = os.path.join(args.out, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(
+                f"OK  {tag:60s} compile={rec['compile_s']:7.1f}s "
+                f"flops/dev={rec['flops_per_device']:.3e} "
+                f"peak_mem/dev={rec['memory']['peak_bytes_est']/2**30:.2f}GiB "
+                f"coll={rec['collective_bytes'].get('total', 0)/2**20:.1f}MiB",
+                flush=True,
+            )
+        except Exception:
+            failures += 1
+            print(f"FAIL {tag}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state (the dry-run sets device-count env
+flags before first jax init; everything else sees the real 1-CPU host)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Single-host mesh for smoke tests and CPU examples."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link (~4 links/chip on v5e torus)
+CHIP_IDLE_W = 60.0            # telemetry power-model floor
+CHIP_DYN_W = 160.0            # dynamic watts at full utilization

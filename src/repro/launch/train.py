@@ -1,0 +1,124 @@
+"""Training launcher: ``--arch <id> [--reduced] --steps N``.
+
+On this CPU container the reduced configs train for real (the quickstart /
+fault-tolerance path); on a TPU pod the same launcher takes the full config
+and the production mesh.  XLA latency-hiding / async-collective flags are
+enabled for TPU backends.
+
+Example::
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m --reduced \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+
+def _tpu_xla_flags() -> None:
+    if os.environ.get("REPRO_TPU_FLAGS"):
+        os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + (
+            " --xla_tpu_enable_latency_hiding_scheduler=true"
+            " --xla_tpu_enable_async_collective_fusion=true"
+            " --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true"
+            " --xla_tpu_overlap_compute_collective_tc=true"
+        )
+
+
+_tpu_xla_flags()
+
+import jax  # noqa: E402
+
+from repro.configs.registry import get_config  # noqa: E402
+from repro.configs.shapes import ShapeConfig  # noqa: E402
+from repro.data.pipeline import DataConfig, batch_iterator  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch.mesh import make_local_mesh, make_production_mesh  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.training import optimizer as opt  # noqa: E402
+from repro.training.train_step import (  # noqa: E402
+    batch_shardings,
+    init_state,
+    make_train_step,
+    state_shardings,
+)
+from repro.training.trainer import Trainer, TrainerConfig  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", choices=["local", "pod", "multipod"], default="local")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    api = build(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    ocfg = opt.OptimizerConfig(
+        learning_rate=args.lr, total_steps=args.steps,
+        warmup_steps=max(args.steps // 10, 1),
+        compress_grads=args.compress_grads,
+    )
+    mesh = {
+        "local": make_local_mesh,
+        "pod": lambda: make_production_mesh(multi_pod=False),
+        "multipod": lambda: make_production_mesh(multi_pod=True),
+    }[args.mesh]()
+    rules = shd.TRAIN_RULES
+
+    st_sh = state_shardings(api, ocfg, mesh, rules)
+    b_sh = batch_shardings(api.train_inputs(shape), mesh, rules)
+    with shd.use_rules(mesh, rules):
+        step = jax.jit(
+            make_train_step(api, ocfg, accum_steps=args.accum),
+            in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        )
+        state = init_state(api, jax.random.PRNGKey(args.seed), ocfg)
+        state = jax.device_put(state, st_sh)
+
+        def data_factory(start_step: int):
+            return batch_iterator(
+                api, shape, DataConfig(seed=args.seed),
+                start_step=start_step, shardings=b_sh,
+            )
+
+        trainer = Trainer(
+            lambda s, b: step(s, b),
+            state,
+            data_factory,
+            TrainerConfig(
+                total_steps=args.steps,
+                checkpoint_every=args.ckpt_every,
+                checkpoint_dir=args.ckpt_dir,
+                log_every=10,
+            ),
+            state_shardings=st_sh,
+            on_step=lambda i, m: print(
+                f"step {i:5d} loss={float(m['loss']):.4f} "
+                f"lr={float(m.get('lr', 0)):.2e} t={m['step_time_s']:.3f}s",
+                flush=True,
+            ) if i % 10 == 0 else None,
+        )
+        report = trainer.run()
+    print(
+        f"done: {report.steps_run} steps, final loss {report.final_loss:.4f}, "
+        f"resumed_from={report.resumed_from}, stragglers={report.straggler_steps}"
+    )
+
+
+if __name__ == "__main__":
+    main()

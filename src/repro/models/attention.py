@@ -1,0 +1,143 @@
+"""Grouped-query attention: params, full-sequence apply, prefill, decode.
+
+Projections are stored *flattened* — wq: (d_model, H*head_dim) — so tensor
+parallelism shards the flat output dim even when the head count is not
+divisible by the model axis (qwen2.5's 40 heads over model=16; the flat
+5120 dim shards cleanly).  The score/value contractions route through
+``repro.kernels.ops`` (Pallas on TPU, blocked-jnp reference on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.kernels import ops
+from repro.models.common import Param, apply_rope
+
+Array = jax.Array
+
+
+def attention_params(cfg: ArchConfig, *, cross: bool = False) -> dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": Param((d, qd), ("embed", "qkv")),
+        "wk": Param((d, kvd), ("embed", "qkv")),
+        "wv": Param((d, kvd), ("embed", "qkv")),
+        "wo": Param((qd, d), ("o_in", "embed"), scale=1.0),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = Param((qd,), ("qkv",), init="zeros")
+        p["bk"] = Param((kvd,), ("qkv",), init="zeros")
+        p["bv"] = Param((kvd,), ("qkv",), init="zeros")
+    return p
+
+
+def _project_qkv(p: dict, x: Array, kv_x: Array, cfg: ArchConfig):
+    """(B, S, d) -> q (B,S,H,hd), k/v (B,T,Hkv,hd)."""
+    b, s, _ = x.shape
+    t = kv_x.shape[1]
+    dt = x.dtype
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,df->btf", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,df->btf", kv_x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, t, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def attention_apply(
+    p: dict,
+    x: Array,                      # (B, S, d)
+    positions: Array,              # (B, S)
+    cfg: ArchConfig,
+    *,
+    causal: bool = True,
+    memory: Array | None = None,   # (B, T, d) cross-attention source
+    use_rope: bool = True,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train, prefill, encoder, cross)."""
+    kv_x = memory if memory is not None else x
+    q, k, v = _project_qkv(p, x, kv_x, cfg)
+    if use_rope and memory is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, ("batch", "seq", "heads", None))
+    k = shard_activation(k, ("batch", "seq", "kv_heads", None))
+    out = ops.flash_attention(q, k, v, causal=causal)
+    b, s, _, _ = q.shape
+    out = out.reshape(b, s, cfg.q_dim)
+    y = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(
+    p: dict,
+    x: Array,                 # (B, 1, d) current token activations
+    pos: Array,               # scalar int32: write/attend position
+    k_cache: Array,           # (B, S_max, Hkv, hd)
+    v_cache: Array,
+    cfg: ArchConfig,
+    *,
+    memory_kv: tuple[Array, Array] | None = None,  # cross-attn (k_mem, v_mem)
+    use_rope: bool = True,
+    kv_scales: tuple[Array, Array] | None = None,  # int8 cache row scales
+):
+    """Single-token decode step.
+
+    Returns (y (B,1,d), k_cache, v_cache) — plus (k_scale, v_scale) when the
+    cache is int8-quantized (``cfg.kv_cache_dtype == "int8"``, §Perf H-C1:
+    decode is KV-bandwidth-bound, int8 halves the bytes per step).
+    """
+    b = x.shape[0]
+    if memory_kv is not None:
+        # Cross-attention: static memory, no cache update, no rope.
+        k_mem, v_mem = memory_kv
+        q = jnp.einsum("bsd,df->bsf", x, p["wq"].astype(x.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+        q = q.reshape(b, cfg.num_heads, cfg.head_dim)
+        lengths = jnp.full((b,), k_mem.shape[1], jnp.int32)
+        out = ops.decode_attention(q, k_mem, v_mem, lengths)
+        y = jnp.einsum("bf,fd->bd", out.reshape(b, cfg.q_dim), p["wo"].astype(x.dtype))
+        return y[:, None, :], k_cache, v_cache
+
+    positions = jnp.broadcast_to(pos, (b, 1))
+    q, k, v = _project_qkv(p, x, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    lengths = jnp.full((b,), pos + 1, jnp.int32)
+
+    if kv_scales is not None:
+        from repro.kernels import ref as _ref
+
+        k_q, k_s = _ref.quantize_kv(k)
+        v_q, v_s = _ref.quantize_kv(v)
+        k_scale, v_scale = kv_scales
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_q, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_q, (0, pos, 0, 0))
+        k_scale = jax.lax.dynamic_update_slice(k_scale, k_s.astype(k_scale.dtype), (0, pos, 0))
+        v_scale = jax.lax.dynamic_update_slice(v_scale, v_s.astype(v_scale.dtype), (0, pos, 0))
+        out = _ref.decode_attention_quant(q[:, 0], k_cache, v_cache, k_scale, v_scale, lengths)
+        y = jnp.einsum("bf,fd->bd", out.reshape(b, cfg.q_dim), p["wo"].astype(x.dtype))
+        return y[:, None, :], k_cache, v_cache, (k_scale, v_scale)
+
+    # Write the new K/V at ``pos``.
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    k_cache = shard_activation(k_cache, ("batch", "kv_seq", "kv_heads", None))
+    v_cache = shard_activation(v_cache, ("batch", "kv_seq", "kv_heads", None))
+    out = ops.decode_attention(q[:, 0], k_cache, v_cache, lengths)
+    y = jnp.einsum("bf,fd->bd", out.reshape(b, cfg.q_dim), p["wo"].astype(x.dtype))
+    return y[:, None, :], k_cache, v_cache

@@ -1,0 +1,41 @@
+"""Channel mixers: SwiGLU (llama-family) and squared-ReLU (nemotron-4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Param
+
+Array = jax.Array
+
+
+def mlp_params(cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": Param((d, f), ("embed", "mlp")),
+            "w_up": Param((d, f), ("embed", "mlp")),
+            "w_down": Param((f, d), ("mlp", "embed")),
+        }
+    if cfg.mlp == "sq_relu":
+        return {
+            "w_up": Param((d, f), ("embed", "mlp")),
+            "w_down": Param((f, d), ("mlp", "embed")),
+        }
+    raise ValueError(f"unknown mlp kind {cfg.mlp!r}")
+
+
+def mlp_apply(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    dt = x.dtype
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.silu(gate) * up
+    else:
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        r = jax.nn.relu(up)
+        h = r * r  # squared ReLU (nemotron-4)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))

@@ -1,0 +1,202 @@
+"""Mamba2 block (zamba2 backbone) via the chunked SSD formulation.
+
+TPU adaptation: instead of the CUDA selective-scan, sequences are processed
+in chunks of ``cfg.ssm_chunk`` — intra-chunk terms are dense MXU einsums and
+the inter-chunk state recurrence is a ``lax.scan`` over chunk states, so the
+compute is matmul-dominated (MXU) rather than elementwise-scan-dominated.
+
+B/C projections are per-head ((S, H, N), the multi-head SSD variant) so the
+head axis shards over "model" exactly like attention heads; the per-head
+state (P x N) stays device-local in both train and decode.
+
+State carried for decode: ``h`` (B, H, P, N) fp32 and the depthwise-conv
+tail ``conv`` (B, ssm_conv-1, d_inner).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.models.common import Param, rms_norm
+
+Array = jax.Array
+
+
+def mamba_params(cfg: ArchConfig) -> dict:
+    d, di, h, n = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    return {
+        "w_zx": Param((d, 2 * di), ("embed", "mlp")),
+        "w_bc": Param((d, 2 * h * n), ("embed", "qkv")),
+        "w_dt": Param((d, h), ("embed", "heads"), scale=0.1),
+        "dt_bias": Param((h,), ("heads",), init="zeros"),
+        "a_log": Param((h,), ("heads",), init="zeros"),
+        "d_skip": Param((h,), ("heads",), init="ones"),
+        "conv_w": Param((cfg.ssm_conv, di), ("conv", "mlp"), scale=0.5),
+        "conv_b": Param((di,), ("mlp",), init="zeros"),
+        "gamma_gate": Param((di,), ("mlp",), init="ones"),
+        "w_out": Param((di, d), ("mlp", "embed")),
+    }
+
+
+def _project(p: dict, x: Array, cfg: ArchConfig):
+    """x (B,S,d) -> z (B,S,di), xin (B,S,di), b/c (B,S,H,N), dt (B,S,H)."""
+    b, s, _ = x.shape
+    di, h, n = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    dt_ = x.dtype
+    zx = jnp.einsum("bsd,df->bsf", x, p["w_zx"].astype(dt_))
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = jnp.einsum("bsd,df->bsf", x, p["w_bc"].astype(dt_)).reshape(b, s, 2, h, n)
+    bmat, cmat = bc[:, :, 0], bc[:, :, 1]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    return z, xin, bmat, cmat, dt
+
+
+def _conv1d(xin: Array, conv_w: Array, conv_b: Array, tail: Array | None):
+    """Causal depthwise conv over time.  tail: (B, K-1, di) history or None.
+
+    Returns (y, new_tail)."""
+    k = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xin.shape[0], k - 1, xin.shape[-1]), xin.dtype)
+    padded = jnp.concatenate([tail, xin], axis=1)
+    # sum_k w[k] * x[t - (K-1) + k]
+    y = sum(
+        padded[:, i : i + xin.shape[1]] * conv_w[i].astype(xin.dtype)
+        for i in range(k)
+    )
+    y = jax.nn.silu(y + conv_b.astype(xin.dtype))
+    new_tail = padded[:, -(k - 1) :] if k > 1 else tail
+    return y, new_tail
+
+
+def ssd_chunked(
+    xh: Array,       # (B, S, H, P) values / conv-activated input, head-split
+    dt: Array,       # (B, S, H) fp32 write strengths
+    da: Array,       # (B, S, H) fp32 log-decays (mamba: dt * -exp(a_log))
+    bmat: Array,     # (B, S, H, N) write keys
+    cmat: Array,     # (B, S, H, N) read queries
+    chunk: int,
+    h0: Array | None = None,   # (B, H, P, N) initial state
+):
+    """Chunked state-space dual form:  h += exp(da)*h + dt*x(x)B;  y = C.h.
+
+    Shared by Mamba2 (da = dt * A) and the mLSTM matrix memory (da = log f,
+    dt = exp-input-gate) — both are gated linear attention in this form.
+    Intra-chunk terms are dense MXU einsums; the inter-chunk recurrence is a
+    scan over nc = S/chunk states.  Returns (y (B,S,H,P) fp32, h_final).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    s_orig = s
+    if s % q:
+        # Ragged tail: pad with dt = da = 0 steps — decay exp(0)=1 and zero
+        # write strength leave the carried state exactly invariant, and the
+        # padded outputs are sliced off below.
+        pad = q - s % q
+        zpad = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        xh, dt, da, bmat, cmat = map(zpad, (xh, dt, da, bmat, cmat))
+        s = s + pad
+    nc = s // q
+    x32 = xh.astype(jnp.float32).reshape(b, nc, q, h, p)
+    b32 = bmat.astype(jnp.float32).reshape(b, nc, q, h, n)
+    c32 = cmat.astype(jnp.float32).reshape(b, nc, q, h, n)
+    dtc = dt.reshape(b, nc, q, h)
+    dac = da.reshape(b, nc, q, h)
+    cum = jnp.cumsum(dac, axis=2)                    # (B, nc, Q, H) inclusive
+
+    # Intra-chunk: y[i] += sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) dt_j x_j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", c32, b32)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores * decay, dtc, x32)
+
+    # Chunk states: S_c = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T  (B,nc,H,P,N)
+    tail_decay = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjh,bcjhp,bcjhn->bchpn", tail_decay, dtc, x32, b32)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def scan_body(hprev, inp):
+        s_c, dec = inp                                   # (B,H,P,N), (B,H)
+        hnew = hprev * dec[:, :, None, None] + s_c
+        return hnew, hprev
+
+    hinit = (
+        jnp.zeros((b, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+    h_final, h_prevs = jax.lax.scan(
+        scan_body,
+        hinit,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,H,P,N)
+
+    # Inter-chunk: y[i] += exp(cum_i) * C_i . H_{c-1}
+    y_inter = jnp.einsum(
+        "bcih,bcihn,bchpn->bcihp", jnp.exp(cum), c32, h_prevs
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y[:, :s_orig], h_final
+
+
+def mamba_apply(
+    p: dict,
+    x: Array,                   # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    state: tuple[Array, Array] | None = None,  # (h, conv_tail) for chunked decode
+    return_state: bool = False,
+):
+    """Full-sequence Mamba2 mixer.  Returns y or (y, (h, conv_tail))."""
+    b, s, _ = x.shape
+    di, hh, pp = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xin, bmat, cmat, dt = _project(p, x, cfg)
+    h0, tail = state if state is not None else (None, None)
+    xc, new_tail = _conv1d(xin, p["conv_w"], p["conv_b"], tail)
+    xh = xc.reshape(b, s, hh, pp)
+    xh = shard_activation(xh, ("batch", None, "heads", None))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, h_final = ssd_chunked(xh, dt, dt * a, bmat, cmat, cfg.ssm_chunk, h0)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gamma_gate"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"].astype(x.dtype))
+    if return_state:
+        return out, (h_final, new_tail)
+    return out
+
+
+def mamba_decode(
+    p: dict,
+    x: Array,                   # (B, 1, d)
+    h: Array,                   # (B, H, P, N) fp32
+    conv_tail: Array,           # (B, K-1, di)
+    cfg: ArchConfig,
+):
+    """Single-token recurrent step.  Returns (y (B,1,d), h, conv_tail)."""
+    b = x.shape[0]
+    hh, pp = cfg.ssm_heads, cfg.ssm_head_dim
+    z, xin, bmat, cmat, dt = _project(p, x, cfg)     # seq dim = 1
+    xc, new_tail = _conv1d(xin, p["conv_w"], p["conv_b"], conv_tail)
+    xh = xc.reshape(b, hh, pp).astype(jnp.float32)
+    dt1 = dt[:, 0]                                   # (B, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a)                         # (B, H)
+    b1 = bmat[:, 0].astype(jnp.float32)              # (B, H, N)
+    c1 = cmat[:, 0].astype(jnp.float32)
+    h_new = h * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt1, xh, b1
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", c1, h_new)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gamma_gate"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"].astype(x.dtype))
+    return out, h_new, new_tail

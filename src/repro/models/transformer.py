@@ -1,0 +1,417 @@
+"""Decoder-only LM stacks: dense GQA, MoE, VLM, and the Zamba2 hybrid.
+
+Scan-over-layers design: per-layer parameters are declared once and stacked
+along a leading "layers" axis (``common.stack_params``); the forward pass is
+one ``jax.lax.scan`` whose body is the (optionally remat'd) block.  This
+keeps the lowered HLO O(1) in network depth — a 40-layer granite train step
+and a 2-layer smoke config lower to the same-sized program — which is what
+makes 80 dry-run compiles tractable, and is also how XLA pipelines the
+per-layer collectives (one body, one schedule).
+
+Three entry points per stack, matching the assigned shape kinds:
+
+- ``*_train``   : tokens -> logits (full sequence, causal, remat'd)
+- ``*_prefill`` : tokens -> (last-position logits, decode cache)
+- ``*_decode``  : one token + cache -> (logits, cache)   [serve_step]
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.models.attention import (
+    attention_apply,
+    attention_decode,
+    attention_params,
+)
+from repro.models.common import (
+    Param,
+    apply_rope,
+    maybe_remat,
+    rms_norm,
+    softcap,
+    stack_params,
+)
+from repro.models.mlp import mlp_apply, mlp_params
+from repro.models.moe import moe_apply, moe_params
+from repro.models.ssm import mamba_apply, mamba_decode, mamba_params
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def _block_params(cfg: ArchConfig, *, moe: bool) -> dict:
+    p = {
+        "ln1": Param((cfg.d_model,), (None,), init="ones"),
+        "ln2": Param((cfg.d_model,), (None,), init="ones"),
+        "attn": attention_params(cfg),
+    }
+    p["mixer"] = moe_params(cfg) if moe else mlp_params(cfg)
+    return p
+
+
+def decoder_params(cfg: ArchConfig) -> dict:
+    """Stacked parameter tree for dense / moe / vlm decoders."""
+    d, v = cfg.d_model, cfg.padded_vocab
+    moe = cfg.family == "moe"
+    n_scan = cfg.num_layers - (1 if (moe and cfg.first_dense) else 0)
+    params: dict[str, Any] = {
+        "embed": Param((v, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "ln_f": Param((d,), (None,), init="ones"),
+        "layers": stack_params(_block_params(cfg, moe=moe), n_scan),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = Param((d, v), ("embed", "lm_head"), fan_in=d)
+    if moe and cfg.first_dense:
+        params["dense0"] = _block_params(cfg, moe=False)
+    if cfg.family == "vlm":
+        # Frontend projector: precomputed ViT patch embeddings -> d_model.
+        params["proj"] = {
+            "w": Param((cfg.frontend_dim, d), ("frontend", "embed")),
+            "ln": Param((cfg.frontend_dim,), (None,), init="ones"),
+        }
+    return params
+
+
+def hybrid_params(cfg: ArchConfig) -> dict:
+    """Zamba2: stacked Mamba2 backbone + ONE weight-shared attention block."""
+    d, v = cfg.d_model, cfg.padded_vocab
+    backbone = {
+        "ln": Param((d,), (None,), init="ones"),
+        "mamba": mamba_params(cfg),
+    }
+    return {
+        "embed": Param((v, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "ln_f": Param((d,), (None,), init="ones"),
+        "unembed": Param((d, v), ("embed", "lm_head"), fan_in=d),
+        "layers": stack_params(backbone, cfg.num_layers),
+        "shared": _block_params(cfg, moe=False),  # the shared attention block
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params: dict, tokens: Array, cfg: ArchConfig) -> Array:
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h.astype(jnp.dtype(cfg.compute_dtype))
+    return shard_activation(h, ("batch", "seq", "act_embed"))
+
+
+def lm_logits(params: dict, h: Array, cfg: ArchConfig) -> Array:
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    w = params["unembed"] if "unembed" in params else params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+    logits = softcap(logits, cfg.logit_softcap)
+    return shard_activation(logits, ("batch", "seq", "vocab"))
+
+
+def project_frontend(params: dict, embeds: Array, cfg: ArchConfig) -> Array:
+    """VLM stub frontend: norm + linear projector to d_model."""
+    p = params["proj"]
+    x = rms_norm(embeds.astype(jnp.dtype(cfg.compute_dtype)), p["ln"], cfg.norm_eps)
+    return jnp.einsum("bpd,df->bpf", x, p["w"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(p: dict, h: Array, positions: Array, cfg: ArchConfig, *, moe: bool):
+    """Pre-norm attention + channel mixer.  Returns (h, aux_loss)."""
+    a = attention_apply(p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps), positions, cfg)
+    h = h + a
+    x = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if moe:
+        m, aux = moe_apply(p["mixer"], x, cfg)
+    else:
+        m, aux = mlp_apply(p["mixer"], x, cfg), jnp.asarray(0.0, jnp.float32)
+    h = h + m
+    h = shard_activation(h, ("batch", "seq", "act_embed"))
+    return h, aux
+
+
+def _dense_block_prefill(p: dict, h: Array, positions: Array, cfg: ArchConfig, *, moe: bool):
+    """Like ``_dense_block`` but also returns the block's (k, v)."""
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    a, (k, v) = attention_apply(p["attn"], x, positions, cfg, return_kv=True)
+    h = h + a
+    x2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if moe:
+        m, _ = moe_apply(p["mixer"], x2, cfg)
+    else:
+        m = mlp_apply(p["mixer"], x2, cfg)
+    h = h + m
+    h = shard_activation(h, ("batch", "seq", "act_embed"))
+    return h, (k, v)
+
+
+def _dense_block_decode(
+    p: dict, h: Array, pos: Array, k_c: Array, v_c: Array, cfg: ArchConfig,
+    *, moe: bool, scales: tuple | None = None,
+):
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if scales is not None:
+        a, k_c, v_c, scales = attention_decode(
+            p["attn"], x, pos, k_c, v_c, cfg, kv_scales=scales
+        )
+    else:
+        a, k_c, v_c = attention_decode(p["attn"], x, pos, k_c, v_c, cfg)
+    h = h + a
+    x2 = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if moe:
+        m, _ = moe_apply(p["mixer"], x2, cfg)
+    else:
+        m = mlp_apply(p["mixer"], x2, cfg)
+    if scales is not None:
+        return h + m, k_c, v_c, scales
+    return h + m, k_c, v_c
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE / VLM decoder stack
+# ---------------------------------------------------------------------------
+
+
+def decoder_hidden(params: dict, h: Array, positions: Array, cfg: ArchConfig):
+    """Run the full decoder over hidden states.  Returns (h, aux_loss)."""
+    moe = cfg.family == "moe"
+    aux0 = jnp.asarray(0.0, jnp.float32)
+    if "dense0" in params:
+        block0 = maybe_remat(
+            lambda p, x: _dense_block(p, x, positions, cfg, moe=False), cfg.remat
+        )
+        h, _ = block0(params["dense0"], h)
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x, a = _dense_block(layer_p, x, positions, cfg, moe=moe)
+        return (x, aux + a), None
+
+    scan_body = maybe_remat(body, cfg.remat)
+    (h, aux), _ = jax.lax.scan(scan_body, (h, aux0), params["layers"])
+    return h, aux
+
+
+def decoder_hidden_states(
+    params: dict, tokens: Array, cfg: ArchConfig, *, prefix_embeds: Array | None = None
+):
+    """tokens -> final hidden states (pre-ln_f) + moe aux."""
+    h = embed_tokens(params, tokens, cfg)
+    if prefix_embeds is not None:
+        pre = project_frontend(params, prefix_embeds, cfg)
+        h = jnp.concatenate([pre, h], axis=1)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return decoder_hidden(params, h, positions, cfg)
+
+
+def decoder_train(params: dict, tokens: Array, cfg: ArchConfig, *, prefix_embeds: Array | None = None):
+    """tokens (B, S) [-> optionally with (B, P, F) frontend prefix] -> logits."""
+    h, aux = decoder_hidden_states(params, tokens, cfg, prefix_embeds=prefix_embeds)
+    return lm_logits(params, h, cfg), aux
+
+
+def decoder_prefill(params: dict, tokens: Array, cfg: ArchConfig, *, prefix_embeds: Array | None = None):
+    """Prefill: returns (last-position logits (B, 1, V), cache dict)."""
+    h = embed_tokens(params, tokens, cfg)
+    if prefix_embeds is not None:
+        pre = project_frontend(params, prefix_embeds, cfg)
+        h = jnp.concatenate([pre, h], axis=1)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    moe = cfg.family == "moe"
+
+    if "dense0" in params:
+        h, (k0, v0) = _dense_block_prefill(params["dense0"], h, positions, cfg, moe=False)
+        extra = {"k0": k0, "v0": v0}
+    else:
+        extra = {}
+
+    def body(x, layer_p):
+        x, (k, v) = _dense_block_prefill(layer_p, x, positions, cfg, moe=moe)
+        return x, (k, v)
+
+    h, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+    if cfg.kv_cache_dtype == "int8":
+        from repro.kernels import ref as _ref
+
+        kq, ks_s = _ref.quantize_kv(ks)
+        vq, vs_s = _ref.quantize_kv(vs)
+        cache = {"k": kq, "v": vq, "k_scale": ks_s, "v_scale": vs_s, **extra}
+    else:
+        cache = {"k": ks, "v": vs, **extra}  # (L, B, S, Hkv, hd)
+    logits = lm_logits(params, h[:, -1:], cfg)
+    return logits, cache
+
+
+def decoder_decode(params: dict, cache: dict, token: Array, pos: Array, cfg: ArchConfig):
+    """One decode step.  token (B, 1) int32, pos scalar int32 (write index).
+
+    The cache KV buffers are (L, B, S_max, Hkv, hd); sequences share pos.
+    """
+    h = embed_tokens(params, token, cfg)
+    moe = cfg.family == "moe"
+    if "k0" in cache:
+        h, k0, v0 = _dense_block_decode(
+            params["dense0"], h, pos, cache["k0"], cache["v0"], cfg, moe=False
+        )
+        extra = {"k0": k0, "v0": v0}
+    else:
+        extra = {}
+
+    if cfg.kv_cache_dtype == "int8":
+
+        def body_q(x, inp):
+            layer_p, k_c, v_c, k_s, v_s = inp
+            x, k_c, v_c, (k_s, v_s) = _dense_block_decode(
+                layer_p, x, pos, k_c, v_c, cfg, moe=moe, scales=(k_s, v_s)
+            )
+            return x, (k_c, v_c, k_s, v_s)
+
+        h, (ks, vs, kss, vss) = jax.lax.scan(
+            body_q, h,
+            (params["layers"], cache["k"], cache["v"], cache["k_scale"], cache["v_scale"]),
+        )
+        logits = lm_logits(params, h, cfg)
+        return logits, {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss, **extra}
+
+    def body(x, inp):
+        layer_p, k_c, v_c = inp
+        x, k_c, v_c = _dense_block_decode(layer_p, x, pos, k_c, v_c, cfg, moe=moe)
+        return x, (k_c, v_c)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], cache["k"], cache["v"]))
+    logits = lm_logits(params, h, cfg)
+    return logits, {"k": ks, "v": vs, **extra}
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid stack
+# ---------------------------------------------------------------------------
+
+
+def _n_attn_points(cfg: ArchConfig) -> int:
+    """Number of shared-attention application points (layers 0, k, 2k, ...)."""
+    k = max(cfg.attn_every, 1)
+    return (cfg.num_layers + k - 1) // k
+
+
+def hybrid_train(params: dict, tokens: Array, cfg: ArchConfig):
+    h = embed_tokens(params, tokens, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    k_every = max(cfg.attn_every, 1)
+    shared = params["shared"]
+
+    def body(carry, inp):
+        x, _ = carry
+        layer_p, idx = inp
+
+        def with_attn(x):
+            y, _ = _dense_block(shared, x, positions, cfg, moe=False)
+            return y
+
+        x = jax.lax.cond(idx % k_every == 0, with_attn, lambda x: x, x)
+        x = x + mamba_apply(layer_p["mamba"], rms_norm(x, layer_p["ln"], cfg.norm_eps), cfg)
+        x = shard_activation(x, ("batch", "seq", "act_embed"))
+        return (x, jnp.asarray(0.0, jnp.float32)), None
+
+    scan_body = maybe_remat(body, cfg.remat)
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (h, _), _ = jax.lax.scan(scan_body, (h, jnp.asarray(0.0, jnp.float32)), (params["layers"], idxs))
+    return lm_logits(params, h, cfg), jnp.asarray(0.0, jnp.float32)
+
+
+def hybrid_prefill(params: dict, tokens: Array, cfg: ArchConfig):
+    """Prefill: returns (logits (B,1,V), cache).
+
+    Cache: attention KV per *application point* (napp slots, carried through
+    the layer scan and updated in place — never expanded to per-layer), plus
+    per-layer SSM state and conv tail.
+    """
+    h = embed_tokens(params, tokens, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    k_every = max(cfg.attn_every, 1)
+    napp = _n_attn_points(cfg)
+    shared = params["shared"]
+    kv_dtype = jnp.dtype(cfg.compute_dtype)
+    ak0 = jnp.zeros((napp, b, s, cfg.num_kv_heads, cfg.head_dim), kv_dtype)
+    ak0 = shard_activation(ak0, (None, "batch", "kv_seq", "kv_heads", None))
+
+    def body(carry, inp):
+        x, ak, av = carry
+        layer_p, idx = inp
+
+        def with_attn(args):
+            x, ak, av = args
+            y, (k, v) = _dense_block_prefill(shared, x, positions, cfg, moe=False)
+            p_idx = idx // k_every
+            ak = jax.lax.dynamic_update_index_in_dim(ak, k.astype(ak.dtype), p_idx, 0)
+            av = jax.lax.dynamic_update_index_in_dim(av, v.astype(av.dtype), p_idx, 0)
+            return y, ak, av
+
+        x, ak, av = jax.lax.cond(idx % k_every == 0, with_attn, lambda a: a, (x, ak, av))
+        y, (ssm_h, tail) = mamba_apply(
+            layer_p["mamba"], rms_norm(x, layer_p["ln"], cfg.norm_eps), cfg,
+            return_state=True,
+        )
+        x = x + y
+        return (x, ak, av), (ssm_h, tail)
+
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (h, ak, av), (ssm_hs, tails) = jax.lax.scan(
+        body, (h, ak0, ak0), (params["layers"], idxs)
+    )
+    cache = {"attn_k": ak, "attn_v": av, "ssm_h": ssm_hs, "conv": tails}
+    return lm_logits(params, h[:, -1:], cfg), cache
+
+
+def hybrid_decode(params: dict, cache: dict, token: Array, pos: Array, cfg: ArchConfig):
+    h = embed_tokens(params, token, cfg)
+    k_every = max(cfg.attn_every, 1)
+    shared = params["shared"]
+
+    def body(carry, inp):
+        x, ak, av = carry
+        layer_p, idx, ssm_h, tail = inp
+
+        def with_attn(args):
+            x, ak, av = args
+            p_idx = idx // k_every
+            k_c = jax.lax.dynamic_index_in_dim(ak, p_idx, 0, keepdims=False)
+            v_c = jax.lax.dynamic_index_in_dim(av, p_idx, 0, keepdims=False)
+            y, k_c, v_c = _dense_block_decode(shared, x, pos, k_c, v_c, cfg, moe=False)
+            ak = jax.lax.dynamic_update_index_in_dim(ak, k_c, p_idx, 0)
+            av = jax.lax.dynamic_update_index_in_dim(av, v_c, p_idx, 0)
+            return y, ak, av
+
+        x, ak, av = jax.lax.cond(idx % k_every == 0, with_attn, lambda a: a, (x, ak, av))
+        y, ssm_h, tail = mamba_decode(
+            layer_p["mamba"], rms_norm(x, layer_p["ln"], cfg.norm_eps), ssm_h, tail, cfg
+        )
+        x = x + y
+        return (x, ak, av), (ssm_h, tail)
+
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (h, ak, av), (ssm_hs, tails) = jax.lax.scan(
+        body,
+        (h, cache["attn_k"], cache["attn_v"]),
+        (params["layers"], idxs, cache["ssm_h"], cache["conv"]),
+    )
+    new_cache = {"attn_k": ak, "attn_v": av, "ssm_h": ssm_hs, "conv": tails}
+    logits = lm_logits(params, h, cfg)
+    return logits, new_cache

@@ -1,0 +1,302 @@
+"""xLSTM stack (xlstm-350m): alternating mLSTM / sLSTM blocks.
+
+- **mLSTM** (matrix memory, exponential gating) is gated linear attention:
+  C_t = f_t C_{t-1} + i_t v_t k_t^T,  y_t = C_t q_t / max(|n_t q_t|, 1).
+  TPU adaptation: runs through the same chunked SSD form as Mamba2
+  (``ssm.ssd_chunked``) with da = log f, dt = exp-input-gate — intra-chunk
+  terms are MXU einsums, the inter-chunk recurrence is a scan over chunk
+  states.  The normalizer n is carried *inside* the state by augmenting the
+  value vector with a constant 1 (state is (P+1) x N), so numerator and
+  denominator share one recurrence.  The paper's max-state stabilizer is
+  replaced by clipping the exponential input gate pre-activation (+ the
+  normalizer floor); smoke tests assert finiteness (DESIGN.md notes this).
+- **sLSTM** (scalar memory, block-diagonal recurrence) is genuinely
+  sequential — per-step recurrent matmuls over h_{t-1} — and runs as a
+  ``lax.scan`` over time with the standard m_t max-stabilizer.  This is the
+  paper's own characterization (sLSTM trades parallelism for state mixing).
+
+Blocks "carry their own expansion" (d_ff = 0): the mLSTM block up-projects
+2x and gates; the sLSTM block operates at d_model with an output projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_activation
+from repro.models.common import Param, rms_norm
+from repro.models.ssm import ssd_chunked
+
+Array = jax.Array
+
+_IGATE_CLIP = 8.0  # exp-input-gate pre-activation clip (stability)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_params(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.num_heads
+    p = di // h
+    return {
+        "ln": Param((d,), (None,), init="ones"),
+        "w_in": Param((d, 2 * di), ("embed", "mlp")),
+        "w_qkv": Param((h, p, 3 * p), ("heads", None, None), fan_in=p),
+        "w_if": Param((di, 2 * h), ("mlp", "heads"), scale=0.1),
+        "b_if": Param((2 * h,), ("heads",), init="zeros"),
+        "gamma": Param((di,), ("mlp",), init="ones"),
+        "w_out": Param((di, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_gates_qkv(blk: dict, x: Array, cfg: ArchConfig):
+    """x (B,S,d) -> q,k,v (B,S,H,P), log_f (B,S,H), i_w (B,S,H), z (B,S,di)."""
+    b, s, _ = x.shape
+    d = cfg.d_model
+    di = 2 * d
+    hh = cfg.num_heads
+    pp = di // hh
+    dt = x.dtype
+    xz = jnp.einsum("bsd,df->bsf", x, blk["w_in"].astype(dt))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xh = xin.reshape(b, s, hh, pp)
+    qkv = jnp.einsum("bshp,hpq->bshq", xh, blk["w_qkv"].astype(dt))
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    gates = (
+        jnp.einsum("bsf,fg->bsg", xin, blk["w_if"].astype(dt)).astype(jnp.float32)
+        + blk["b_if"].astype(jnp.float32)
+    )
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)       # (B,S,H) each
+    log_f = -jax.nn.softplus(-f_pre)                  # log sigmoid(f_pre)
+    i_w = jnp.exp(jnp.clip(i_pre, -_IGATE_CLIP, _IGATE_CLIP))
+    return q, k, v, log_f, i_w, z, xh
+
+
+def _mlstm_out(blk: dict, num: Array, den: Array, z: Array, cfg: ArchConfig, x: Array):
+    """Normalize, per-head norm, gate, down-project."""
+    b, s = num.shape[0], num.shape[1]
+    di = 2 * cfg.d_model
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), blk["gamma"], cfg.norm_eps)
+    return jnp.einsum("bsf,fd->bsd", y, blk["w_out"].astype(x.dtype))
+
+
+def mlstm_apply(
+    blk: dict,
+    x: Array,                       # (B, S, d) pre-norm input
+    cfg: ArchConfig,
+    *,
+    state: Array | None = None,     # (B, H, P+1, P) matrix memory (+normalizer)
+    return_state: bool = False,
+):
+    b, s, _ = x.shape
+    xn = rms_norm(x, blk["ln"], cfg.norm_eps)
+    q, k, v, log_f, i_w, z, _ = _mlstm_gates_qkv(blk, xn, cfg)
+    pp = v.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(pp, jnp.float32))
+    # Augment value with 1 so the normalizer n shares the state recurrence.
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((b, s, cfg.num_heads, 1), jnp.float32)], -1
+    )
+    y_aug, h_final = ssd_chunked(
+        v_aug,                       # values (P+1)
+        i_w,                         # write strengths
+        log_f,                       # log decays
+        (k.astype(jnp.float32) * scale),  # write keys (N=P)
+        q.astype(jnp.float32),       # read queries
+        cfg.ssm_chunk if cfg.ssm_chunk > 0 else 256,
+        state,
+    )
+    num, den = y_aug[..., :pp], y_aug[..., pp]
+    out = x + _mlstm_out(blk, num, den, z, cfg, x)
+    out = shard_activation(out, ("batch", "seq", "act_embed"))
+    if return_state:
+        return out, h_final
+    return out
+
+
+def mlstm_decode(blk: dict, x: Array, state: Array, cfg: ArchConfig):
+    """Single-token step.  x (B,1,d), state (B,H,P+1,P).  Returns (y, state)."""
+    xn = rms_norm(x, blk["ln"], cfg.norm_eps)
+    q, k, v, log_f, i_w, z, _ = _mlstm_gates_qkv(blk, xn, cfg)
+    b = x.shape[0]
+    pp = v.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(pp, jnp.float32))
+    v1 = jnp.concatenate(
+        [v[:, 0].astype(jnp.float32), jnp.ones((b, cfg.num_heads, 1), jnp.float32)], -1
+    )                                                 # (B,H,P+1)
+    k1 = k[:, 0].astype(jnp.float32) * scale          # (B,H,P)
+    q1 = q[:, 0].astype(jnp.float32)
+    f1 = jnp.exp(log_f[:, 0])                         # (B,H)
+    i1 = i_w[:, 0]
+    state = state * f1[..., None, None] + i1[..., None, None] * (
+        v1[..., :, None] * k1[..., None, :]
+    )
+    y_aug = jnp.einsum("bhn,bhpn->bhp", q1, state)    # (B,H,P+1)
+    num, den = y_aug[..., :pp], y_aug[..., pp]
+    out = x + _mlstm_out(blk, num[:, None], den[:, None], z, cfg, x)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_params(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    p = d // h
+    return {
+        "ln": Param((d,), (None,), init="ones"),
+        "w_x": Param((d, 4 * d), ("embed", "mlp")),
+        "r": Param((4, h, p, p), (None, "heads", None, None), fan_in=p, scale=0.5),
+        "b": Param((4, h, p), (None, "heads", None), init="zeros"),
+        "gamma": Param((d,), (None,), init="ones"),
+        "w_out": Param((d, d), ("embed", "embed2")),
+    }
+
+
+def _slstm_cell(blk, pre_x, carry, cfg: ArchConfig):
+    """One sLSTM time step.  pre_x: (B,4,H,P) input pre-activations."""
+    c, n, m, h_prev = carry                           # (B,H,P) each, fp32
+    rec = jnp.einsum("bhp,ghpq->bghq", h_prev, blk["r"].astype(jnp.float32))
+    pre = pre_x.astype(jnp.float32) + rec + blk["b"].astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    m_new = jnp.maximum(f_pre + m, i_pre)             # exp-gating stabilizer
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_pre + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_pre)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_apply(
+    blk: dict,
+    x: Array,                       # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    state: tuple | None = None,     # (c, n, m, h) each (B,H,P) fp32
+    return_state: bool = False,
+):
+    b, s, d = x.shape
+    hh = cfg.num_heads
+    pp = d // hh
+    xn = rms_norm(x, blk["ln"], cfg.norm_eps)
+    pre = jnp.einsum("bsd,df->bsf", xn, blk["w_x"].astype(x.dtype))
+    pre = pre.reshape(b, s, 4, hh, pp)
+    if state is None:
+        z = jnp.zeros((b, hh, pp), jnp.float32)
+        state = (z, z, jnp.full((b, hh, pp), -1e30, jnp.float32), z)
+
+    def step(carry, px):
+        return _slstm_cell(blk, px, carry, cfg)
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, blk["gamma"], cfg.norm_eps)
+    out = x + jnp.einsum("bsd,df->bsf", y, blk["w_out"].astype(x.dtype))
+    out = shard_activation(out, ("batch", "seq", "act_embed"))
+    if return_state:
+        return out, state
+    return out
+
+
+def slstm_decode(blk: dict, x: Array, state: tuple, cfg: ArchConfig):
+    """Single-token step.  x (B,1,d)."""
+    b, _, d = x.shape
+    hh = cfg.num_heads
+    pp = d // hh
+    xn = rms_norm(x, blk["ln"], cfg.norm_eps)
+    pre = jnp.einsum("bsd,df->bsf", xn, blk["w_x"].astype(x.dtype))
+    pre = pre.reshape(b, 4, hh, pp)
+    state, h_new = _slstm_cell(blk, pre, state, cfg)
+    y = h_new.reshape(b, 1, d).astype(x.dtype)
+    y = rms_norm(y, blk["gamma"], cfg.norm_eps)
+    out = x + jnp.einsum("bsd,df->bsf", y, blk["w_out"].astype(x.dtype))
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# Stack: scan over (mLSTM, sLSTM) pairs
+# ---------------------------------------------------------------------------
+
+from repro.models.common import maybe_remat, softcap, stack_params  # noqa: E402
+
+
+def xlstm_params(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    assert cfg.num_layers % 2 == 0, "xLSTM stack alternates mLSTM/sLSTM pairs"
+    pair = {"m": mlstm_params(cfg), "s": slstm_params(cfg)}
+    return {
+        "embed": Param((v, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "ln_f": Param((d,), (None,), init="ones"),
+        "unembed": Param((d, v), ("embed", "lm_head"), fan_in=d),
+        "pairs": stack_params(pair, cfg.num_layers // 2),
+    }
+
+
+def _embed(params, tokens, cfg):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    return shard_activation(h, ("batch", "seq", "act_embed"))
+
+
+def _logits(params, h, cfg):
+    h = rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(h.dtype))
+    return shard_activation(softcap(logits, cfg.logit_softcap), ("batch", "seq", "vocab"))
+
+
+def xlstm_train(params: dict, tokens: Array, cfg: ArchConfig):
+    h = _embed(params, tokens, cfg)
+
+    def body(x, pair_p):
+        x = mlstm_apply(pair_p["m"], x, cfg)
+        x = slstm_apply(pair_p["s"], x, cfg)
+        return x, None
+
+    h, _ = jax.lax.scan(maybe_remat(body, cfg.remat), h, params["pairs"])
+    return _logits(params, h, cfg), jnp.asarray(0.0, jnp.float32)
+
+
+def xlstm_prefill(params: dict, tokens: Array, cfg: ArchConfig):
+    h = _embed(params, tokens, cfg)
+
+    def body(x, pair_p):
+        x, m_state = mlstm_apply(pair_p["m"], x, cfg, return_state=True)
+        x, s_state = slstm_apply(pair_p["s"], x, cfg, return_state=True)
+        return x, (m_state, s_state)
+
+    h, (m_states, s_states) = jax.lax.scan(body, h, params["pairs"])
+    cache = {
+        "m": m_states,                                 # (L/2, B, H, P+1, P)
+        "s_c": s_states[0], "s_n": s_states[1],
+        "s_m": s_states[2], "s_h": s_states[3],        # (L/2, B, H, P) each
+    }
+    return _logits(params, h[:, -1:], cfg), cache
+
+
+def xlstm_decode(params: dict, cache: dict, token: Array, pos: Array, cfg: ArchConfig):
+    del pos  # recurrent: position enters only through state
+    h = _embed(params, token, cfg)
+
+    def body(x, inp):
+        pair_p, m_state, sc, sn, sm, sh = inp
+        x, m_state = mlstm_decode(pair_p["m"], x, m_state, cfg)
+        x, s_state = slstm_decode(pair_p["s"], x, (sc, sn, sm, sh), cfg)
+        return x, (m_state, *s_state)
+
+    h, (m_states, sc, sn, sm, sh) = jax.lax.scan(
+        body, h,
+        (params["pairs"], cache["m"], cache["s_c"], cache["s_n"], cache["s_m"], cache["s_h"]),
+    )
+    new_cache = {"m": m_states, "s_c": sc, "s_n": sn, "s_m": sm, "s_h": sh}
+    return _logits(params, h, cfg), new_cache

@@ -1,0 +1,1 @@
+"""Serving runtime: engines, scheduler, energy-first control plane."""

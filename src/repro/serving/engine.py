@@ -1,0 +1,97 @@
+"""Serve engine: jitted prefill/decode execution for one model instance.
+
+One ``ServeEngine`` = one warm "sandbox" in FaaS terms: materialized params
+plus compiled prefill/decode executables for a (batch, seq) bucket.  The
+control plane keeps a keep-alive cache of engines (eviction = cold start on
+next invocation) and meters every invocation through FaasMeter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeConfig
+from repro.models.model_zoo import ModelApi
+from repro.serving.kv_cache import init_cache
+
+
+@dataclasses.dataclass
+class InvocationRecord:
+    function: str
+    start: float
+    end: float
+    kind: str          # prefill | decode | generate
+    tokens: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.end - self.start
+
+
+class ServeEngine:
+    """Compiled prefill + decode for one arch at one shape bucket."""
+
+    def __init__(self, api: ModelApi, shape: ShapeConfig, params: Any, *, clock=time.perf_counter):
+        self.api = api
+        self.shape = shape
+        self.params = params
+        self.clock = clock
+        self._prefill = jax.jit(api.prefill)
+        self._decode = jax.jit(api.decode, donate_argnums=(1,))
+        self.records: list[InvocationRecord] = []
+        self.cold = True
+
+    def warmup(self, batch: dict) -> None:
+        """Cold start: trigger compilation (FaaS init overhead analogue)."""
+        logits, cache = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        self.cold = False
+        self._warm_cache = cache
+
+    def prefill(self, batch: dict, *, t0: float | None = None):
+        start = self.clock() if t0 is None else t0
+        logits, cache = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        end = self.clock()
+        ntok = int(jnp.size(batch["tokens"]))
+        self.records.append(InvocationRecord("prefill", start, end, "prefill", ntok))
+        return logits, cache
+
+    def generate(self, batch: dict, steps: int, *, greedy: bool = True):
+        """Prefill then ``steps`` greedy decode steps.  Returns token matrix."""
+        from repro.models.model_zoo import extend_cache
+
+        start = self.clock()
+        logits, cache = self._prefill(self.params, batch)
+        cache = extend_cache(self.api, cache, steps)
+        b = logits.shape[0]
+        pos0 = batch["tokens"].shape[1]
+        toks = [jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)]
+        for i in range(steps - 1):
+            logits, cache = self._decode(
+                self.params, cache, toks[-1][:, None], jnp.asarray(pos0 + i, jnp.int32)
+            )
+            toks.append(jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32))
+        out = jnp.stack(toks, axis=1)
+        jax.block_until_ready(out)
+        end = self.clock()
+        self.records.append(
+            InvocationRecord("generate", start, end, "generate", int(b * steps))
+        )
+        return out
+
+    def decode_step(self, cache, token, pos):
+        start = self.clock()
+        logits, cache = self._decode(self.params, cache, token, jnp.asarray(pos, jnp.int32))
+        jax.block_until_ready(logits)
+        end = self.clock()
+        self.records.append(InvocationRecord("decode", start, end, "decode", logits.shape[0]))
+        return logits, cache
+
+    def fresh_cache(self):
+        return init_cache(self.api, self.shape)

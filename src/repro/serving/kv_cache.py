@@ -1,0 +1,55 @@
+"""Decode-cache management: allocation, residency, and keep-alive accounting.
+
+Caches are family-specific pytrees described by ``ModelApi.cache_spec``; this
+module materializes them (zeros), tracks residency bytes (the FaaS keep-alive
+analogue: a warm function's sandbox = a resident cache + weights), and gives
+the scheduler the eviction-cost signal.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import ShapeConfig
+from repro.models.model_zoo import ModelApi, is_spec
+
+
+def init_cache(api: ModelApi, shape: ShapeConfig, *, shardings: Any = None) -> Any:
+    """Zero-filled decode cache matching ``cache_spec(shape)``."""
+    spec = api.cache_spec(shape)
+
+    def make(s, sh=None):
+        z = jnp.zeros(s.shape, s.dtype)
+        # sLSTM stabilizer state must start at -inf-like.
+        return jax.device_put(z, sh) if sh is not None else z
+
+    if shardings is not None:
+        cache = jax.tree.map(make, spec, shardings, is_leaf=is_spec)
+    else:
+        cache = jax.tree.map(make, spec, is_leaf=is_spec)
+    if "s_m" in cache if isinstance(cache, dict) else False:
+        cache["s_m"] = jnp.full_like(cache["s_m"], -1e30)
+    return cache
+
+
+def cache_bytes(api: ModelApi, shape: ShapeConfig) -> int:
+    """Residency bytes of one warm cache (keep-alive memory accounting)."""
+    spec = api.cache_spec(shape)
+    total = 0
+    for s in jax.tree.leaves(spec, is_leaf=is_spec):
+        total += math.prod(s.shape) * np.dtype(s.dtype).itemsize
+    return total
+
+
+def params_bytes(api: ModelApi, dtype_bytes: int = 4) -> int:
+    from repro.models.common import is_param
+
+    total = 0
+    for p in jax.tree.leaves(api.params_def, is_leaf=is_param):
+        total += math.prod(p.shape) * dtype_bytes
+    return total

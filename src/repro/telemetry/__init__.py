@@ -1,0 +1,27 @@
+"""Telemetry substrate: power models, simulated sensor front-ends, counters.
+
+On real deployments these modules wrap host telemetry readers (IPMI/BMC,
+plug meters via SCPI, RAPL, tegrastats — paper §5).  This container has no
+power sensors, so the same interfaces are backed by a physically-grounded
+simulator whose ground truth the profiler never sees: the profiler only gets
+the degraded signals, making marginal-energy validation a genuine test.
+"""
+
+from repro.telemetry.power_model import PowerModelConfig, NodePowerModel
+from repro.telemetry.sources import SensorConfig, PowerSignal, sense, resample_to_windows
+from repro.telemetry.counters import window_counters, function_counters
+from repro.telemetry.simulator import NodeSimulator, SimResult, SimulatorConfig
+
+__all__ = [
+    "PowerModelConfig",
+    "NodePowerModel",
+    "SensorConfig",
+    "PowerSignal",
+    "sense",
+    "resample_to_windows",
+    "window_counters",
+    "function_counters",
+    "NodeSimulator",
+    "SimResult",
+    "SimulatorConfig",
+]

@@ -1,0 +1,61 @@
+"""Step counters: the TPU-native analogue of perf counters (paper §4.3).
+
+The paper's CPU model consumes UNHALTED_CYCLES / LLC_MISSES /
+INSTRUCTIONS_RETIRED per function, normalized by the system-wide totals.
+Our invocation classes carry (FLOPs, HBM bytes) per invocation — the
+quantities a compiled step's ``cost_analysis()`` exposes — plus busy time.
+Features per interval (F = 3): [gflop rate, hbm GB rate, duty cycle], each
+normalized exactly like the paper normalizes counters.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_FEATURES = 3
+
+
+def window_counters(
+    c_matrix: np.ndarray,   # (N, M) seconds of runtime per window
+    gflops: np.ndarray,     # (M,) per invocation
+    hbm_gb: np.ndarray,     # (M,)
+    mean_latency: np.ndarray,  # (M,)
+    delta: float,
+) -> np.ndarray:
+    """(N, F) system-wide counter features per window."""
+    lat = np.maximum(mean_latency, 1e-6)
+    gflop_rate = gflops / lat   # GFLOP/s while running
+    hbm_rate = hbm_gb / lat
+    feats = np.stack(
+        [
+            c_matrix @ gflop_rate,          # GFLOPs in window
+            c_matrix @ hbm_rate,            # HBM GB in window
+            np.sum(c_matrix, axis=1),       # busy seconds in window
+        ],
+        axis=1,
+    )
+    return feats / delta
+
+
+def function_counters(
+    c_matrix: np.ndarray,
+    gflops: np.ndarray,
+    hbm_gb: np.ndarray,
+    mean_latency: np.ndarray,
+) -> np.ndarray:
+    """(M, F) per-function counters normalized by system totals (paper's
+    'function counters / system-wide counters' scheme)."""
+    lat = np.maximum(mean_latency, 1e-6)
+    busy = np.sum(c_matrix, axis=0)                      # (M,) total seconds
+    totals = np.array(
+        [
+            np.sum(busy * gflops / lat),
+            np.sum(busy * hbm_gb / lat),
+            np.sum(busy),
+        ]
+    )
+    totals = np.maximum(totals, 1e-9)
+    per_fn = np.stack(
+        [busy * gflops / lat, busy * hbm_gb / lat, busy], axis=1
+    )
+    return per_fn / totals[None, :]

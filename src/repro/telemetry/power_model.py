@@ -1,0 +1,90 @@
+"""Ground-truth node power model (simulator side).
+
+True node power on a fine time grid:
+
+    P(t) = P_idle + g( sum_j act[t, j] * p_j ) + P_cp(t)
+
+- ``act`` is the (T, M) concurrent-invocation activity series;
+- ``p_j`` is function j's true dynamic draw per concurrent invocation;
+- ``g`` is a mild sublinear compression modeling shared power states
+  (voltage/frequency scaling under load — why the paper's Fig. 3 isolated
+  footprints depend on load, and why Fig. 11 neighbors move footprints by a
+  few percent);
+- ``P_cp`` is the control plane: a base draw plus per-invocation handling
+  work (the paper: up to 600 ms of control-plane time per invocation on
+  OpenWhisk; Iluvatar ~ a few ms-scale, here configurable).
+
+The *chip* power (RAPL-like view) sees only each function's ``cpu_frac``
+share of its dynamic power plus the chip idle floor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModelConfig:
+    idle_w: float = 95.0            # paper's server idles at 95 W
+    chip_idle_w: float = 40.0       # chip floor, part of idle_w
+    sublinearity: float = 0.97      # g(p) = p * (p / p_ref)^(s-1); 1.0 = linear
+    sublinear_ref_w: float = 100.0
+    cp_base_w: float = 3.0          # control-plane resident draw
+    cp_per_inv_j: float = 0.8       # control-plane joules of work per invocation
+    cp_handling_s: float = 0.05     # spread of that work around each start
+    cp_cpu_capacity_w: float = 30.0 # watts == 100 % of one control-plane core
+
+
+class NodePowerModel:
+    """Computes true power series from activity; numpy, simulator-side only."""
+
+    def __init__(self, config: PowerModelConfig, dyn_power_w: np.ndarray, cpu_frac: np.ndarray):
+        self.config = config
+        self.dyn_power_w = np.asarray(dyn_power_w, np.float64)   # (M,)
+        self.cpu_frac = np.asarray(cpu_frac, np.float64)         # (M,)
+
+    def _compress(self, p_dyn: np.ndarray) -> np.ndarray:
+        s = self.config.sublinearity
+        if s >= 1.0:
+            return p_dyn
+        ref = self.config.sublinear_ref_w
+        return np.where(p_dyn > 0, p_dyn * (np.maximum(p_dyn, 1e-9) / ref) ** (s - 1.0), 0.0)
+
+    def control_plane_power(self, starts: np.ndarray, t_grid: np.ndarray, dt: float) -> np.ndarray:
+        """(T,) control-plane draw: base + per-invocation handling work
+        spread uniformly over ``cp_handling_s`` after each start."""
+        cfg = self.config
+        cp = np.full(t_grid.shape, cfg.cp_base_w, np.float64)
+        if starts.size:
+            width = max(cfg.cp_handling_s, dt)
+            w_power = cfg.cp_per_inv_j / width
+            idx0 = np.floor(starts / dt).astype(np.int64)
+            nbins = max(int(np.ceil(width / dt)), 1)
+            for k in range(nbins):
+                idx = idx0 + k
+                ok = (idx >= 0) & (idx < t_grid.shape[0])
+                np.add.at(cp, idx[ok], w_power)
+        return cp
+
+    def system_power(self, activity: np.ndarray, cp_power: np.ndarray) -> np.ndarray:
+        """(T,) true full-system power."""
+        p_dyn = activity @ self.dyn_power_w
+        return self.config.idle_w + self._compress(p_dyn) + cp_power
+
+    def chip_power(self, activity: np.ndarray, cp_power: np.ndarray) -> np.ndarray:
+        """(T,) true chip power (what a RAPL-like sensor measures)."""
+        p_cpu = activity @ (self.dyn_power_w * self.cpu_frac)
+        return self.config.chip_idle_w + self._compress(p_cpu) + cp_power
+
+    def cp_cpu_fraction(self, cp_power: np.ndarray) -> np.ndarray:
+        """Control-plane CPU utilization fraction (for Eq. 2)."""
+        dyn = np.maximum(cp_power - 0.0, 0.0)
+        return np.clip(dyn / self.config.cp_cpu_capacity_w, 0.0, 1.0)
+
+    def sys_cpu_fraction(self, activity: np.ndarray, cp_power: np.ndarray) -> np.ndarray:
+        """System-wide CPU utilization proxy used to normalize Eq. 2."""
+        busy = activity @ (self.dyn_power_w * self.cpu_frac) + cp_power
+        cap = self.config.cp_cpu_capacity_w + float(np.max(busy)) or 1.0
+        return np.clip(busy / cap, 1e-3, 1.0)

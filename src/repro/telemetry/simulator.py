@@ -1,0 +1,172 @@
+"""Node telemetry simulator: the measurement platform stand-in (paper §6).
+
+Wires trace -> activity -> true power -> sensor front-ends -> window-grid
+telemetry for the profiler.  Ground truth (true power series, per-function
+true energies) stays on the SimResult for *validation only* — the profiler
+consumes only the degraded, lagged, quantized signals.
+
+Platform presets mirror the paper's three:
+
+- ``server``:  idle 95 W, IPMI-like system source (1 Hz, laggy, 4 W quant)
+- ``desktop``: idle 15 W, plug-like system source (4 Hz, clean)
+- ``edge``:    idle 8 W, tegrastats-like (2 Hz), no RAPL-like chip source
+  (pure-disaggregation mode only, like the Jetson in the paper)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.profiler import Telemetry
+from repro.telemetry import sources as src
+from repro.telemetry.power_model import NodePowerModel, PowerModelConfig
+from repro.workload.functions import FunctionRegistry
+from repro.workload.trace import InvocationTrace
+
+
+@dataclasses.dataclass(frozen=True)
+class SimulatorConfig:
+    dt: float = 0.02                  # fine simulation grid (s)
+    delta: float = 1.0                # profiler window (s)
+    platform: str = "server"          # server | desktop | edge
+    system_sensor: src.SensorConfig | None = None   # override preset
+    chip_sensor: src.SensorConfig | None = src.RAPL_LIKE
+    power: PowerModelConfig | None = None
+    seed: int = 0
+
+
+_PLATFORMS = {
+    "server": dict(idle_w=95.0, chip_idle_w=40.0, sensor=src.IPMI_LIKE, has_chip=True),
+    "desktop": dict(idle_w=15.0, chip_idle_w=6.0, sensor=src.PLUG_LIKE, has_chip=True),
+    "edge": dict(
+        idle_w=8.0,
+        chip_idle_w=3.0,
+        sensor=src.SensorConfig(rate_hz=2.0, tau_s=0.5, lag_s=1.0, noise_w=0.4, quant_w=0.25),
+        has_chip=False,
+    ),
+}
+
+
+@dataclasses.dataclass
+class SimResult:
+    telemetry: Telemetry               # window-grid inputs for the profiler
+    num_windows: int
+    measured_energy_j: float           # integral of the *sensed* system signal
+    true_energy_j: float               # integral of the true series (oracle)
+    true_fn_energy_j: np.ndarray       # (M,) oracle dynamic energy per function
+    true_fn_power_w: np.ndarray        # (M,) oracle dynamic power while running
+    true_cp_energy_j: float
+    system_signal: src.PowerSignal     # raw sensed signals (fig benchmarks)
+    chip_signal: src.PowerSignal | None
+    activity: np.ndarray               # (T, M) fine-grid concurrency
+    fine_dt: float
+
+
+def _activity_numpy(trace: InvocationTrace, num_bins: int, dt: float) -> np.ndarray:
+    """(T, M) event-based concurrency counts (simulator-side numpy twin of
+    repro.core.contribution.activity_series; cross-checked in tests)."""
+    act = np.zeros((num_bins, trace.num_fns), np.float64)
+    events = np.zeros((num_bins + 1, trace.num_fns), np.float64)
+    valid = trace.fn_id >= 0
+    sbin = np.clip(np.floor(trace.start / dt).astype(np.int64), 0, num_bins)
+    ebin = np.clip(np.floor(trace.end / dt).astype(np.int64), 0, num_bins)
+    for f, s, e, ok in zip(trace.fn_id, sbin, ebin, valid):
+        if ok:
+            events[s, f] += 1.0
+            events[e, f] -= 1.0
+    act = np.cumsum(events[:num_bins], axis=0)
+    return act
+
+
+class NodeSimulator:
+    def __init__(self, registry: FunctionRegistry, config: SimulatorConfig = SimulatorConfig()):
+        self.registry = registry
+        self.config = config
+        plat = _PLATFORMS[config.platform]
+        pcfg = config.power or PowerModelConfig(
+            idle_w=plat["idle_w"], chip_idle_w=plat["chip_idle_w"]
+        )
+        self.power_cfg = pcfg
+        self.model = NodePowerModel(
+            pcfg,
+            dyn_power_w=np.array([s.dyn_power_w for s in registry.specs]),
+            cpu_frac=np.array([s.cpu_frac for s in registry.specs]),
+        )
+        self.system_sensor = config.system_sensor or plat["sensor"]
+        self.chip_sensor = config.chip_sensor if plat["has_chip"] else None
+
+    def simulate(self, trace: InvocationTrace, seed: int | None = None) -> SimResult:
+        cfg = self.config
+        rng = np.random.default_rng(cfg.seed if seed is None else seed)
+        dt = cfg.dt
+        num_bins = int(round(trace.duration / dt))
+        n_windows = int(round(trace.duration / cfg.delta))
+
+        act = _activity_numpy(trace, num_bins, dt)
+        t_grid = (np.arange(num_bins) + 0.5) * dt
+        valid_starts = trace.start[trace.fn_id >= 0]
+        cp_power = self.model.control_plane_power(valid_starts, t_grid, dt)
+        true_sys = self.model.system_power(act, cp_power)
+        true_chip = self.model.chip_power(act, cp_power)
+
+        sys_sig = src.sense(true_sys, dt, self.system_sensor, rng)
+        chip_sig = src.sense(true_chip, dt, self.chip_sensor, rng) if self.chip_sensor else None
+
+        w_sys = src.resample_to_windows(sys_sig, n_windows, cfg.delta)
+        w_chip = (
+            src.resample_to_windows(chip_sig, n_windows, cfg.delta)
+            if chip_sig is not None
+            else None
+        )
+
+        cp_frac_fine = self.model.cp_cpu_fraction(cp_power)
+        sys_frac_fine = self.model.sys_cpu_fraction(act, cp_power)
+        bins_per_win = int(round(cfg.delta / dt))
+        cp_frac = cp_frac_fine[: n_windows * bins_per_win].reshape(n_windows, -1).mean(1)
+        sys_frac = sys_frac_fine[: n_windows * bins_per_win].reshape(n_windows, -1).mean(1)
+
+        # Oracle per-function dynamic energy: linear share of the compressed
+        # dynamic power (attribution of the compression is proportional).
+        p_lin = act @ self.model.dyn_power_w                       # (T,)
+        p_cmp = self.model._compress(p_lin)
+        scale = np.where(p_lin > 0, p_cmp / np.maximum(p_lin, 1e-9), 1.0)
+        fn_energy = (act * self.model.dyn_power_w[None, :] * scale[:, None]).sum(0) * dt
+        busy_s = act.sum(0) * dt
+        fn_power = np.where(busy_s > 0, fn_energy / np.maximum(busy_s, 1e-9), 0.0)
+
+        import jax.numpy as jnp
+
+        telemetry = Telemetry(
+            system_power=jnp.asarray(w_sys, jnp.float32),
+            chip_power=jnp.asarray(w_chip, jnp.float32) if w_chip is not None else None,
+            idle_watts=float(self.power_cfg.idle_w),
+            cp_cpu_frac=jnp.asarray(cp_frac, jnp.float32),
+            sys_cpu_frac=jnp.asarray(sys_frac, jnp.float32),
+        )
+        return SimResult(
+            telemetry=telemetry,
+            num_windows=n_windows,
+            measured_energy_j=sys_sig.energy_j(),
+            true_energy_j=float(np.sum(true_sys) * dt),
+            true_fn_energy_j=fn_energy,
+            true_fn_power_w=fn_power,
+            true_cp_energy_j=float(np.sum(cp_power) * dt),
+            system_signal=sys_sig,
+            chip_signal=chip_sig,
+            activity=act,
+            fine_dt=dt,
+        )
+
+    def marginal_energy(
+        self, trace: InvocationTrace, fn: int, seed: int | None = None
+    ) -> float:
+        """Paper Eq. 6 ground-truth protocol: run T(S) and T(S - f) through
+        the *measured* (coarse) energy totals and divide by f's invocations."""
+        from repro.workload.trace import drop_function
+
+        full = self.simulate(trace, seed=seed)
+        without = self.simulate(drop_function(trace, fn), seed=seed)
+        n_inv = trace.invocations_of(fn)
+        return (full.measured_energy_j - without.measured_energy_j) / max(n_inv, 1)

@@ -1,0 +1,115 @@
+"""Simulated power-sensor front-ends with each source's pathology (paper §3.1,
+§5, Fig. 2a/Fig. 5).
+
+Degradation chain applied to the true power series, in measurement order:
+
+  true power -> sensor smoothing (1st-order IIR, time constant tau_s)
+             -> decimation to the sensor rate
+             -> reporting lag (shift by lag_s)
+             -> additive Gaussian noise
+             -> quantization (watt resolution)
+
+Presets:
+
+- ``ipmi_like``:  1 Hz, tau 2 s, lag 3 s, 4 W quantization, 2 W noise —
+  the paper's server BMC: "poor resolution and large jumps", "significant lag".
+- ``plug_like``:  4 Hz, tau 0.2 s, lag 0.5 s, 0.1 W quantization — the
+  GPM-8310-style external meter (0.25 s sampling in the paper).
+- ``rapl_like``: 10 Hz, tau ~0, no lag, jitter noise — fast but chip-only.
+- ``battery_like``: 0.5 Hz ACPI discharge counter (edge devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SensorConfig:
+    rate_hz: float
+    tau_s: float = 0.0       # sensor smoothing time constant
+    lag_s: float = 0.0       # reporting-path delay
+    noise_w: float = 0.0     # additive Gaussian sigma
+    quant_w: float = 0.0     # quantization step (0 = none)
+
+
+IPMI_LIKE = SensorConfig(rate_hz=1.0, tau_s=2.0, lag_s=3.0, noise_w=2.0, quant_w=4.0)
+PLUG_LIKE = SensorConfig(rate_hz=4.0, tau_s=0.2, lag_s=0.5, noise_w=0.3, quant_w=0.1)
+RAPL_LIKE = SensorConfig(rate_hz=10.0, tau_s=0.05, lag_s=0.0, noise_w=0.8, quant_w=0.0)
+BATTERY_LIKE = SensorConfig(rate_hz=0.5, tau_s=5.0, lag_s=2.0, noise_w=1.0, quant_w=0.5)
+
+PRESETS = {
+    "ipmi": IPMI_LIKE,
+    "plug": PLUG_LIKE,
+    "rapl": RAPL_LIKE,
+    "battery": BATTERY_LIKE,
+}
+
+
+@dataclasses.dataclass
+class PowerSignal:
+    times: np.ndarray   # (n,) sample timestamps (s)
+    watts: np.ndarray   # (n,)
+    rate_hz: float
+
+    def energy_j(self) -> float:
+        """Trapezoidal integral — what 'total energy from coarse measurements'
+        means for the marginal-energy protocol (Eq. 6)."""
+        return float(np.trapezoid(self.watts, self.times))
+
+
+def sense(
+    true_power: np.ndarray,
+    dt: float,
+    config: SensorConfig,
+    rng: np.random.Generator,
+) -> PowerSignal:
+    """Apply the degradation chain of ``config`` to a fine-grid true series."""
+    t = true_power.astype(np.float64)
+
+    # 1. sensor smoothing: first-order IIR on the fine grid.
+    if config.tau_s > 0:
+        from scipy.signal import lfilter, lfiltic
+
+        a = dt / (config.tau_s + dt)
+        # y[i] = (1-a) y[i-1] + a x[i], seeded at the first true value.
+        zi = lfiltic([a], [1.0, -(1.0 - a)], y=[t[0]])
+        t, _ = lfilter([a], [1.0, -(1.0 - a)], t, zi=zi)
+
+    # 2. decimate to the sensor rate (sample-and-hold at sample instants).
+    period = 1.0 / config.rate_hz
+    n = int(np.floor(len(t) * dt / period))
+    idx = np.minimum((np.arange(1, n + 1) * period / dt).astype(np.int64) - 1, len(t) - 1)
+    samples = t[idx]
+    times = (np.arange(1, n + 1)) * period
+
+    # 3. reporting lag: the value reported at time t was measured at t - lag.
+    lag_samples = int(round(config.lag_s / period))
+    if lag_samples > 0:
+        samples = np.concatenate([np.full(lag_samples, samples[0]), samples[:-lag_samples]])
+
+    # 4. noise, 5. quantization.
+    if config.noise_w > 0:
+        samples = samples + rng.normal(0.0, config.noise_w, size=samples.shape)
+    if config.quant_w > 0:
+        samples = np.round(samples / config.quant_w) * config.quant_w
+
+    return PowerSignal(times=times, watts=samples.astype(np.float64), rate_hz=config.rate_hz)
+
+
+def resample_to_windows(signal: PowerSignal, num_windows: int, delta: float) -> np.ndarray:
+    """(N,) mean power per delta window (energy-preserving resampling)."""
+    out = np.empty(num_windows, np.float64)
+    edges = np.arange(num_windows + 1) * delta
+    idx = np.searchsorted(signal.times, edges)
+    last = signal.watts[0] if len(signal.watts) else 0.0
+    for i in range(num_windows):
+        lo, hi = idx[i], idx[i + 1]
+        if hi > lo:
+            out[i] = float(np.mean(signal.watts[lo:hi]))
+            last = out[i]
+        else:
+            out[i] = last  # hold when the sensor is slower than the window
+    return out

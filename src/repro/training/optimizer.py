@@ -1,0 +1,147 @@
+"""Optimizer: AdamW with global-norm clipping and warmup-cosine schedule,
+plus an int8 error-feedback gradient compressor for the cross-pod axis.
+
+Self-contained (no optax on the target hosts); the state is a pytree of the
+same structure as the params, so it inherits the params' shardings leaf for
+leaf — optimizer state is FSDP-sharded exactly like the weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # int8 error-feedback gradient compression across the "pod" axis.
+    compress_grads: bool = False
+
+
+class AdamState(NamedTuple):
+    mu: Any        # first moment, same tree as params
+    nu: Any        # second moment
+    count: Array   # scalar int32 step
+    err: Any       # error-feedback residuals (zeros tree when compression off)
+
+
+def init(params: Any, config: OptimizerConfig) -> AdamState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    err = jax.tree.map(jnp.zeros_like, params) if config.compress_grads else None
+    return AdamState(mu=zeros, nu=jax.tree.map(jnp.zeros_like, params),
+                     count=jnp.zeros((), jnp.int32), err=err)
+
+
+def schedule(step: Array, config: OptimizerConfig) -> Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(config.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step - config.warmup_steps)
+        / jnp.maximum(config.total_steps - config.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    decay = config.min_lr_ratio + (1.0 - config.min_lr_ratio) * cos
+    return config.learning_rate * warm * decay
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: Array) -> tuple[Array, Array]:
+    """Symmetric per-tensor int8 quantization.  Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads: Any, err: Any) -> tuple[Any, Any]:
+    """Error-feedback int8 round trip: g' = deq(quant(g + err)).
+
+    The residual (g + err) - g' is carried to the next step, so the
+    compression is unbiased over time (Karimireddy et al. style EF-SGD).
+    On a real pod this wraps the cross-pod all-reduce (the int8 payload is
+    what crosses DCN); ``distributed.collectives.compressed_psum`` is the
+    shard_map collective form.
+    """
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(target)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), (target - deq).astype(e.dtype)
+
+    pairs = jax.tree.map(one, grads, err)
+    new_grads = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_err
+
+
+# ---------------------------------------------------------------------------
+# AdamW update
+# ---------------------------------------------------------------------------
+
+
+def update(
+    grads: Any, state: AdamState, params: Any, config: OptimizerConfig
+) -> tuple[Any, AdamState, dict[str, Array]]:
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    new_err = state.err
+    if config.compress_grads and state.err is not None:
+        grads, new_err = ef_compress(grads, state.err)
+
+    grads, grad_norm = clip_by_global_norm(grads, config.clip_norm)
+    count = state.count + 1
+    lr = schedule(count.astype(jnp.float32), config)
+    b1, b2 = config.beta1, config.beta2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def leaf(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1.0 - b1) * g32
+        v_new = b2 * v + (1.0 - b2) * g32 * g32
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        step_ = m_hat / (jnp.sqrt(v_hat) + config.eps)
+        p_new = p.astype(jnp.float32) - lr * (step_ + config.weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(leaf, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = AdamState(mu=new_mu, nu=new_nu, count=count, err=new_err)
+    return new_params, new_state, {"grad_norm": grad_norm, "lr": lr}

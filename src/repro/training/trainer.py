@@ -1,0 +1,115 @@
+"""Fault-tolerant training loop: checkpoint/restart, watchdog, metrics.
+
+Runnability-at-scale features exercised here (and in tests):
+
+- **Auto-resume**: on start the trainer restores the newest *valid*
+  checkpoint (crash-mid-save leaves no complete manifest, so a damaged tail
+  checkpoint is skipped) and the data iterator seeks to the restored step —
+  a killed job relaunches bit-identically.
+- **Async checkpointing**: device->host snapshot is synchronous (cheap),
+  the filesystem write overlaps the next steps.
+- **Straggler watchdog**: per-step wall time vs a running median; outliers
+  beyond ``watchdog_factor`` are counted and surfaced (at fleet scale this
+  signal drives hot-spare swap / requeue — here it feeds metrics and tests).
+- **Elastic re-shard**: restore works onto any mesh via the sharding tree
+  (see ``distributed.checkpoint``); changing mesh shape between runs is a
+  config change, not a migration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import numpy as np
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.training.train_step import TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = ""
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    watchdog_factor: float = 3.0   # step > factor x median => straggler
+    watchdog_warmup: int = 5       # ignore first steps (compile)
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int = 0
+    resumed_from: int | None = None
+    straggler_steps: int = 0
+    losses: list = dataclasses.field(default_factory=list)
+    step_times: list = dataclasses.field(default_factory=list)
+
+    @property
+    def final_loss(self) -> float:
+        return self.losses[-1] if self.losses else float("nan")
+
+
+class Trainer:
+    def __init__(
+        self,
+        step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]],
+        init_state: TrainState,
+        data_iter_factory: Callable[[int], Iterator[dict]],
+        config: TrainerConfig = TrainerConfig(),
+        *,
+        state_shardings: Any = None,
+        on_step: Callable[[int, dict], None] | None = None,
+    ):
+        self.step_fn = step_fn
+        self.state = init_state
+        self.data_iter_factory = data_iter_factory
+        self.config = config
+        self.on_step = on_step
+        self._shardings = state_shardings
+        self.ckpt = (
+            CheckpointManager(config.checkpoint_dir, keep=config.keep_checkpoints)
+            if config.checkpoint_dir
+            else None
+        )
+
+    def run(self) -> TrainerReport:
+        cfg = self.config
+        report = TrainerReport()
+        start = 0
+        if self.ckpt is not None:
+            restored = self.ckpt.restore_latest(self.state, shardings=self._shardings)
+            if restored is not None:
+                start, self.state = restored
+                report.resumed_from = start
+        data = self.data_iter_factory(start)
+
+        times: list[float] = []
+        for step in range(start, cfg.total_steps):
+            batch = next(data)
+            t0 = time.perf_counter()
+            self.state, metrics = self.step_fn(self.state, batch)
+            loss = float(jax.device_get(metrics["loss"]))
+            dt = time.perf_counter() - t0
+            report.steps_run += 1
+            report.losses.append(loss)
+            report.step_times.append(dt)
+
+            # Straggler watchdog.
+            if len(times) >= cfg.watchdog_warmup:
+                med = float(np.median(times[-50:]))
+                if dt > cfg.watchdog_factor * med:
+                    report.straggler_steps += 1
+            times.append(dt)
+
+            if self.on_step is not None:
+                self.on_step(step, {**metrics, "step_time_s": dt})
+            if self.ckpt is not None and (step + 1) % cfg.checkpoint_every == 0:
+                self.ckpt.save(step + 1, self.state)
+        if self.ckpt is not None:
+            self.ckpt.save(cfg.total_steps, self.state, blocking=True)
+            self.ckpt.wait()
+        return report

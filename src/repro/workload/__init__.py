@@ -1,0 +1,18 @@
+"""FaaS workload substrate: function registry, traces, Azure-style generation."""
+
+from repro.workload.functions import FunctionSpec, FunctionRegistry, paper_functions, arch_functions
+from repro.workload.trace import InvocationTrace, concat_traces, drop_function, pad_trace
+from repro.workload.azure import WorkloadConfig, generate_trace
+
+__all__ = [
+    "FunctionSpec",
+    "FunctionRegistry",
+    "paper_functions",
+    "arch_functions",
+    "InvocationTrace",
+    "concat_traces",
+    "drop_function",
+    "pad_trace",
+    "WorkloadConfig",
+    "generate_trace",
+]

@@ -1,0 +1,26 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py (its own
+process) forces 512 placeholder devices."""
+
+import numpy as np
+import pytest
+
+from repro.workload.azure import WorkloadConfig, generate_trace
+from repro.workload.functions import paper_functions
+
+
+@pytest.fixture(scope="session")
+def registry():
+    return paper_functions()
+
+
+@pytest.fixture(scope="session")
+def short_trace(registry):
+    """~3 minute, 4-function Poisson trace (fast profiler tests)."""
+    sub = registry
+    return generate_trace(sub, WorkloadConfig(duration_s=180.0, load=1.0, seed=7))
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

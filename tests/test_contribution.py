@@ -1,0 +1,94 @@
+"""C/A matrix construction vs brute-force numpy oracles (paper §4.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.contribution import (
+    activity_series,
+    augment_with_principals,
+    contribution_matrix,
+    invocation_counts,
+    shared_principal_contribution,
+)
+
+
+def _brute_c(fn_id, start, end, num_fns, num_windows, delta):
+    c = np.zeros((num_windows, num_fns))
+    for f, s, e in zip(fn_id, start, end):
+        if f < 0:
+            continue
+        for w in range(num_windows):
+            lo, hi = w * delta, (w + 1) * delta
+            c[w, f] += max(0.0, min(e, hi) - max(s, lo))
+    return c
+
+
+def test_contribution_matrix_exact(rng):
+    k, m, n = 200, 5, 30
+    fn_id = rng.integers(-1, m, size=k).astype(np.int32)
+    start = rng.uniform(0, 28, size=k).astype(np.float32)
+    end = (start + rng.uniform(0.05, 4.0, size=k)).astype(np.float32)
+    c = contribution_matrix(
+        jnp.asarray(fn_id), jnp.asarray(start), jnp.asarray(end),
+        num_fns=m, num_windows=n,
+    )
+    want = _brute_c(fn_id, start, end, m, n, 1.0)
+    np.testing.assert_allclose(np.asarray(c), want, atol=1e-3)
+
+
+def test_contribution_mass_conservation(rng):
+    """sum(C) == total in-range runtime (invariant the fleet profiler relies on)."""
+    k, m, n = 500, 8, 60
+    fn_id = rng.integers(0, m, size=k).astype(np.int32)
+    start = rng.uniform(0, n - 5.0, size=k).astype(np.float32)
+    end = (start + rng.uniform(0.01, 4.9, size=k)).astype(np.float32)
+    end = np.minimum(end, n * 1.0).astype(np.float32)
+    c = contribution_matrix(
+        jnp.asarray(fn_id), jnp.asarray(start), jnp.asarray(end),
+        num_fns=m, num_windows=n,
+    )
+    assert abs(float(jnp.sum(c)) - float(np.sum(end - start))) < 1e-2
+
+
+def test_invocation_counts(rng):
+    fn_id = np.array([0, 1, 1, 2, -1], np.int32)
+    start = np.array([0.5, 0.2, 1.7, 9.9, 3.0], np.float32)
+    a = invocation_counts(jnp.asarray(fn_id), jnp.asarray(start), num_fns=3, num_windows=10)
+    a = np.asarray(a)
+    assert a[0, 0] == 1 and a[0, 1] == 1 and a[1, 1] == 1 and a[9, 2] == 1
+    assert a.sum() == 4  # padding ignored
+
+
+def test_activity_series_matches_simulator_twin(rng):
+    from repro.telemetry.simulator import _activity_numpy
+    from repro.workload.trace import InvocationTrace
+
+    k, m = 100, 4
+    fn_id = rng.integers(-1, m, size=k).astype(np.int32)
+    start = rng.uniform(0, 50, size=k).astype(np.float32)
+    end = (start + rng.uniform(0.05, 3.0, size=k)).astype(np.float32)
+    trace = InvocationTrace(fn_id, start, end, num_fns=m, duration=60.0)
+    dt = 0.05
+    bins = int(60.0 / dt)
+    ours = activity_series(
+        jnp.asarray(fn_id), jnp.asarray(start), jnp.asarray(end),
+        num_fns=m, num_bins=bins, dt=dt,
+    )
+    twin = _activity_numpy(trace, bins, dt)
+    np.testing.assert_allclose(np.asarray(ours), twin, atol=1e-6)
+
+
+def test_shared_principal_normalization():
+    """Eq. 2: c_cp = (cp% / sys%) * delta, clipped to [0, delta]."""
+    cp = jnp.asarray([0.1, 0.5, 0.0, 0.9])
+    sysf = jnp.asarray([0.2, 0.5, 0.5, 0.3])
+    col = shared_principal_contribution(cp, sysf, delta=1.0)
+    np.testing.assert_allclose(np.asarray(col), [0.5, 1.0, 0.0, 1.0], atol=1e-6)
+
+
+def test_augment_with_principals():
+    c = jnp.ones((4, 2))
+    col = jnp.full((4,), 0.5)
+    aug = augment_with_principals(c, col)
+    assert aug.shape == (4, 3)
+    np.testing.assert_allclose(np.asarray(aug[:, 2]), 0.5)

@@ -1,0 +1,86 @@
+"""Disaggregation solvers: exact recovery, modes, fleet batching (Eq. 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.disaggregation import (
+    DisaggregationConfig,
+    disaggregate,
+    per_invocation_energy,
+    solve_nnls,
+    solve_ridge,
+)
+
+
+def _synthetic(rng, n=200, m=6, noise=0.0):
+    c = np.abs(rng.standard_normal((n, m))) * (rng.random((n, m)) > 0.5)
+    x_true = np.abs(rng.standard_normal(m)) * 30.0 + 5.0
+    w = c @ x_true + noise * rng.standard_normal(n)
+    return jnp.asarray(c, jnp.float32), jnp.asarray(w, jnp.float32), x_true
+
+
+def test_ridge_recovers_noiseless(rng):
+    c, w, x_true = _synthetic(rng)
+    x = solve_ridge(c, w, 1e-6)
+    np.testing.assert_allclose(np.asarray(x), x_true, rtol=1e-3)
+
+
+def test_nnls_recovers_noiseless(rng):
+    c, w, x_true = _synthetic(rng)
+    x = solve_nnls(c, w, 1e-6, iters=2000)
+    np.testing.assert_allclose(np.asarray(x), x_true, rtol=5e-2, atol=0.5)
+
+
+def test_nnls_nonnegative_under_noise(rng):
+    c, w, _ = _synthetic(rng, noise=5.0)
+    x = solve_nnls(c, w, 1e-3)
+    assert float(jnp.min(x)) >= 0.0
+
+
+def test_zero_column_null_player(rng):
+    """Functions that never run get exactly zero power (paper §4.4 prop 2)."""
+    c, w, _ = _synthetic(rng)
+    c = c.at[:, 3].set(0.0)
+    for solver in (lambda: solve_ridge(c, w, 1e-3), lambda: solve_nnls(c, w, 1e-3)):
+        assert float(solver()[3]) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_modes(rng):
+    c, w, _ = _synthetic(rng)
+    idle = 40.0
+    x_full = disaggregate(c, w + 0.0, DisaggregationConfig(mode="full"))
+    x_noidle = disaggregate(c, w + idle, DisaggregationConfig(mode="no_idle"), w_idle=idle)
+    # adding a constant idle offset and subtracting it again: same solution
+    np.testing.assert_allclose(np.asarray(x_full), np.asarray(x_noidle), rtol=1e-4, atol=1e-3)
+    with pytest.raises(ValueError):
+        disaggregate(c, w, DisaggregationConfig(mode="rest"))
+    with pytest.raises(ValueError):
+        disaggregate(c, w, DisaggregationConfig(mode="bogus"))
+
+
+def test_per_invocation_energy():
+    x = jnp.asarray([10.0, 20.0])
+    tau = jnp.asarray([0.5, 2.0])
+    np.testing.assert_allclose(np.asarray(per_invocation_energy(x, tau)), [5.0, 40.0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(2, 8),
+    n=st.integers(20, 80),
+    seed=st.integers(0, 10_000),
+)
+def test_property_recovery_and_nonnegativity(m, n, seed):
+    """Property: on noiseless synthetic data with enough windows, NNLS
+    reproduces C X = W (residual ~ 0) with non-negative X."""
+    rng = np.random.default_rng(seed)
+    c = np.abs(rng.standard_normal((n, m))) * (rng.random((n, m)) > 0.3)
+    x_true = np.abs(rng.standard_normal(m)) * 20.0 + 1.0
+    w = c @ x_true
+    x = solve_nnls(jnp.asarray(c, jnp.float32), jnp.asarray(w, jnp.float32), 1e-6, iters=1500)
+    assert float(jnp.min(x)) >= 0.0
+    resid = np.linalg.norm(c @ np.asarray(x) - w) / max(np.linalg.norm(w), 1e-9)
+    assert resid < 0.05

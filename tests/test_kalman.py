@@ -1,0 +1,84 @@
+"""Kalman-filtered online estimation (paper §4.2, Fig. 4)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kalman import KalmanConfig, kalman_init, kalman_step, run_kalman
+
+
+def _step_inputs(rng, m, n_w, x_true, active_mask, lat=1.0):
+    c = np.zeros((n_w, m), np.float32)
+    for j in range(m):
+        if active_mask[j]:
+            c[:, j] = np.abs(rng.standard_normal(n_w)) * 0.5
+    w = c @ x_true
+    a = active_mask.astype(np.float32) * n_w * 0.5
+    lat_sum = a * lat
+    lat_sumsq = a * lat * lat
+    return (jnp.asarray(c), jnp.asarray(w), jnp.asarray(a),
+            jnp.asarray(lat_sum), jnp.asarray(lat_sumsq))
+
+
+def test_inactive_functions_unchanged(rng):
+    m = 4
+    x_true = np.array([10.0, 20.0, 30.0, 40.0], np.float32)
+    state = kalman_init(m, x0=jnp.asarray(x_true))
+    active = np.array([True, True, False, True])
+    inputs = _step_inputs(rng, m, 20, x_true * active, active)
+    new_state, x = kalman_step(state, *inputs)
+    assert float(x[2]) == x_true[2]  # untouched
+    assert float(new_state.p[2]) == float(state.p[2])
+
+
+def test_new_function_takes_fresh_estimate(rng):
+    m = 3
+    x_true = np.array([15.0, 25.0, 35.0], np.float32)
+    state = kalman_init(m)  # nothing seen yet
+    active = np.array([True, False, True])
+    inputs = _step_inputs(rng, m, 40, x_true * active, active)
+    _, x = kalman_step(state, *inputs)
+    # new active functions get the fresh NNLS estimate directly
+    assert abs(float(x[0]) - 15.0) < 2.0
+    assert abs(float(x[2]) - 35.0) < 3.5
+    assert float(x[1]) == 0.0
+
+
+def test_convergence_under_stationary_load(rng):
+    """From a wrong prior, the trajectory converges toward the true powers."""
+    m, steps, n_w = 3, 30, 30
+    x_true = np.array([12.0, 28.0, 45.0], np.float32)
+    active = np.ones(m, bool)
+    cs, ws, a_s, ls, lq = [], [], [], [], []
+    for _ in range(steps):
+        c, w, a, l1, l2 = _step_inputs(rng, m, n_w, x_true, active)
+        cs.append(c); ws.append(w); a_s.append(a); ls.append(l1); lq.append(l2)
+    state = kalman_init(m, x0=jnp.asarray([30.0, 30.0, 30.0]))
+    state, traj = run_kalman(
+        state, jnp.stack(cs), jnp.stack(ws), jnp.stack(a_s),
+        jnp.stack(ls), jnp.stack(lq), KalmanConfig(),
+    )
+    err0 = np.abs(np.asarray(traj[0]) - x_true).mean()
+    errN = np.abs(np.asarray(traj[-1]) - x_true).mean()
+    assert errN < err0 * 0.35
+    np.testing.assert_allclose(np.asarray(state.x), x_true, rtol=0.25)
+
+
+def test_latency_welford_moments(rng):
+    """Running latency variance matches the batch statistics."""
+    from repro.core.kalman import latency_variance
+
+    m = 2
+    state = kalman_init(m)
+    lats = rng.uniform(0.5, 2.0, size=50).astype(np.float32)
+    # feed in 5 chunks of 10 for function 0
+    for chunk in np.split(lats, 5):
+        inputs = (
+            jnp.zeros((4, m)), jnp.zeros((4,)),
+            jnp.asarray([float(len(chunk)), 0.0]),
+            jnp.asarray([float(chunk.sum()), 0.0]),
+            jnp.asarray([float((chunk ** 2).sum()), 0.0]),
+        )
+        state, _ = kalman_step(state, *inputs)
+    got = float(latency_variance(state)[0])
+    want = float(np.var(lats, ddof=1))
+    assert abs(got - want) / want < 1e-3

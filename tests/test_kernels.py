@@ -1,0 +1,114 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.disaggregation import solve_ridge
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.disagg_solve import disagg_gram, disagg_solve
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,t,h,hkv,d,causal",
+    [
+        (2, 128, 128, 4, 2, 64, True),
+        (1, 96, 160, 4, 4, 32, True),     # decode-style offset (t > s)
+        (2, 64, 64, 8, 2, 128, False),
+        (1, 160, 160, 2, 1, 16, True),    # non-divisible by blocks
+    ],
+)
+def test_flash_attention_vs_oracle(b, s, t, h, hkv, d, causal, dtype, rng):
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, t, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, t, hkv, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_block=32, kv_block=64, interpret=True)
+    want = ref.attention_dense(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_matches_blocked_ref(rng):
+    """Kernel vs the blocked custom-VJP reference (the training path)."""
+    q = jnp.asarray(rng.standard_normal((2, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 128, 2, 32)), jnp.float32)
+    out = flash_attention(q, k, v, q_block=64, kv_block=64, interpret=True)
+    want = ref.flash_attention(q, k, v, True, 64, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,hkv,d",
+    [(2, 256, 4, 2, 64), (3, 100, 8, 8, 32), (1, 512, 16, 4, 128)],
+)
+def test_decode_attention_vs_oracle(b, s, h, hkv, d, dtype, rng):
+    q = jnp.asarray(rng.standard_normal((b, h, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), dtype)
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    out = decode_attention(q, k, v, lengths, kv_block=64, interpret=True)
+    want = ref.decode_attention(q, k, v, lengths)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("g,n,m", [(4, 300, 12), (1, 1000, 64), (2, 64, 5)])
+def test_disagg_gram_vs_oracle(g, n, m, rng):
+    c = jnp.asarray(np.abs(rng.standard_normal((g, n, m))), jnp.float32)
+    w = jnp.asarray(np.abs(rng.standard_normal((g, n))), jnp.float32)
+    gram, rhs = disagg_gram(c, w, n_block=128, interpret=True)
+    gw, rw = ref.disagg_gram(c, w)
+    np.testing.assert_allclose(np.asarray(gram), np.asarray(gw), atol=2e-3, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(rhs), np.asarray(rw), atol=2e-3, rtol=1e-4)
+
+
+def test_disagg_solve_matches_core_solver(rng):
+    c = jnp.asarray(np.abs(rng.standard_normal((200, 10))), jnp.float32)
+    x_true = jnp.asarray(np.abs(rng.standard_normal(10)), jnp.float32)
+    w = c @ x_true
+    xk = disagg_solve(c, w, 1e-4, interpret=True)
+    xr = solve_ridge(c, w, 1e-4)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr), atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(4, 7, 64), (100, 128), (3, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_vs_oracle(shape, dtype, rng):
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    g = jnp.asarray(rng.standard_normal(shape[-1]), jnp.float32)
+    out = rmsnorm(x, g, row_block=16, interpret=True)
+    want = ref.rmsnorm(x, g)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_ref_flash_backward_matches_dense(rng):
+    """The hand-written recomputing VJP vs autodiff through the dense oracle."""
+    import jax
+
+    q = jnp.asarray(rng.standard_normal((1, 64, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 16)), jnp.float32)
+
+    def f_blocked(q, k, v):
+        return jnp.sum(ref.flash_attention(q, k, v, True, 32, 32) ** 2)
+
+    def f_dense(q, k, v):
+        return jnp.sum(ref.attention_dense(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(f_blocked, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_dense, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4, rtol=1e-3)

@@ -1,0 +1,102 @@
+"""End-to-end profiler validation on simulated telemetry (paper §5.1, §6.1).
+
+The profiler sees only degraded sensor signals; ground truth lives in the
+simulator.  These are the paper's own validation protocols in miniature:
+cosine similarity vs true footprints, the marginal-energy protocol (Eq. 6),
+and noisy-neighbor independence (Fig. 11).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import cosine_similarity
+from repro.core.profiler import FaasMeterProfiler, ProfilerConfig
+from repro.serving.control_plane import EnergyFirstControlPlane
+from repro.telemetry.simulator import NodeSimulator, SimulatorConfig
+from repro.workload.azure import WorkloadConfig, generate_trace
+from repro.workload.trace import drop_function
+
+
+PCFG = ProfilerConfig(init_windows=60, step_windows=30)
+
+
+def _profile(trace, platform="desktop", seed=0):
+    cp = EnergyFirstControlPlane(
+        __import__("repro.workload.functions", fromlist=["paper_functions"]).paper_functions(),
+        SimulatorConfig(platform=platform, seed=seed),
+        PCFG,
+    )
+    return cp, cp.profile_trace(trace)
+
+
+def test_footprints_match_truth_desktop(registry, short_trace):
+    cp, prof = _profile(short_trace)
+    truth = prof.sim.true_fn_energy_j / np.maximum(
+        np.asarray([short_trace.invocations_of(j) for j in range(short_trace.num_fns)]), 1
+    )
+    est = np.asarray(prof.report.spectrum.per_invocation_indiv)
+    cos = float(cosine_similarity(jnp.asarray(est), jnp.asarray(truth)))
+    assert cos > 0.95, (cos, est, truth)
+
+
+def test_footprints_robust_on_laggy_server(registry, short_trace):
+    """IPMI-like: 1 Hz, 3 s lag, 4 W quantization — still accurate (Table 3)."""
+    cp, prof = _profile(short_trace, platform="server")
+    truth = prof.sim.true_fn_energy_j
+    est = np.asarray(prof.report.spectrum.j_indiv)
+    cos = float(cosine_similarity(jnp.asarray(est), jnp.asarray(truth)))
+    assert cos > 0.93, cos
+
+
+def test_total_error_small(registry, short_trace):
+    _, prof = _profile(short_trace)
+    assert prof.report.total_error < 0.25
+
+
+def test_marginal_energy_protocol(registry):
+    """Eq. 6: drop-one traces; FaasMeter footprint ~ marginal ground truth."""
+    trace = generate_trace(registry, WorkloadConfig(duration_s=240.0, load=0.8, seed=3))
+    cp, prof = _profile(trace)
+    marg = np.array([cp.marginal_energy(trace, j) for j in range(trace.num_fns)])
+    est = np.asarray(prof.report.spectrum.per_invocation_indiv)
+    cos = float(cosine_similarity(jnp.asarray(est), jnp.asarray(marg)))
+    assert cos > 0.90, (cos, est, marg)
+
+
+def test_drop_function_preserves_other_invocations(registry, short_trace):
+    reduced = drop_function(short_trace, 2)
+    assert reduced.invocations_of(2) == 0
+    for j in (0, 1, 3):
+        assert reduced.invocations_of(j) == short_trace.invocations_of(j)
+
+
+def test_noisy_neighbors_independence(registry):
+    """Fig. 11: footprints of target functions move <15 % when the co-located
+    neighbor changes (dd vs ml_train)."""
+    targets = [1, 3]  # image, AES
+    base = WorkloadConfig(duration_s=240.0, load=0.8, seed=11)
+    trace = generate_trace(registry, base)
+    with_dd = drop_function(trace, 6)        # drop ml_train -> neighbor dd
+    with_ml = drop_function(trace, 0)        # drop dd -> neighbor ml_train
+    _, p1 = _profile(with_dd)
+    _, p2 = _profile(with_ml)
+    f1 = np.asarray(p1.report.spectrum.per_invocation_indiv)[targets]
+    f2 = np.asarray(p2.report.spectrum.per_invocation_indiv)[targets]
+    rel = np.abs(f1 - f2) / np.maximum(f2, 1e-9)
+    assert np.all(rel < 0.2), rel
+
+
+def test_skew_detected_on_server(registry, short_trace):
+    """IPMI reporting lag (3 s) plus the sensor's IIR smoothing group delay
+    (tau = 2 s) => total skew ~ 5 windows; the synchronizer must find it."""
+    _, prof = _profile(short_trace, platform="server")
+    assert 2.0 <= prof.report.skew_windows <= 6.5
+
+
+@pytest.mark.parametrize("platform", ["desktop", "server", "edge"])
+def test_all_platforms_run(registry, short_trace, platform):
+    _, prof = _profile(short_trace, platform=platform)
+    spec = prof.report.spectrum
+    assert np.all(np.isfinite(np.asarray(spec.j_total)))
+    assert float(jnp.sum(spec.j_total)) > 0

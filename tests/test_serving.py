@@ -1,0 +1,149 @@
+"""Serving: scheduler (capping/keep-alive/stragglers), capping controller,
+control-plane capped execution, metered server."""
+
+import numpy as np
+import pytest
+
+from repro.core.capping import CappingConfig, PowerCapController
+from repro.serving.control_plane import EnergyFirstControlPlane
+from repro.serving.scheduler import (
+    EnergyAwareScheduler,
+    Invocation,
+    KeepAliveCache,
+    SchedulerConfig,
+)
+from repro.telemetry.simulator import SimulatorConfig
+from repro.workload.azure import WorkloadConfig, generate_trace
+from repro.workload.functions import paper_functions
+
+
+class TestCapController:
+    def test_admits_under_cap(self):
+        c = PowerCapController(CappingConfig(power_cap_watts=200.0, control_interval_s=1.0))
+        c.observe_power(100.0)
+        assert c.admit(50.0)
+
+    def test_defers_over_cap(self):
+        c = PowerCapController(CappingConfig(power_cap_watts=120.0, control_interval_s=1.0))
+        c.observe_power(100.0)
+        assert not c.admit(50.0)
+        assert c.stats.deferred == 1
+
+    def test_optimistic_accounting_blocks_burst(self):
+        """A burst inside one control interval can't blow through the cap."""
+        c = PowerCapController(CappingConfig(power_cap_watts=200.0, control_interval_s=1.0))
+        c.observe_power(100.0)
+        admitted = sum(c.admit(40.0) for _ in range(5))
+        assert admitted <= 3
+
+    def test_overshoot_tracking(self):
+        c = PowerCapController(CappingConfig(power_cap_watts=100.0))
+        for w in (90, 105, 95, 110):
+            c.observe_power(float(w))
+        assert c.stats.overshoot_samples == 2
+        assert c.stats.max_overshoot_frac == pytest.approx(0.10)
+
+    def test_static_buffer_fallback(self):
+        c = PowerCapController(
+            CappingConfig(power_cap_watts=100.0, use_footprints=False, static_buffer_watts=20.0)
+        )
+        c.observe_power(85.0)
+        assert not c.admit(None)   # 85 + 20 >= 100
+        c.observe_power(75.0)
+        assert c.admit(None)
+
+
+class TestKeepAlive:
+    def test_eviction_under_pressure(self):
+        ka = KeepAliveCache(budget_bytes=100)
+        ka.put("a", object(), 60, cold_cost_s=1.0)
+        ka.put("b", object(), 60, cold_cost_s=10.0)  # evicts a (lower credit)
+        assert "a" not in ka.resident and "b" in ka.resident
+
+    def test_frequency_raises_credit(self):
+        ka = KeepAliveCache(budget_bytes=120)
+        ka.put("a", object(), 60, cold_cost_s=1.0)
+        ka.put("b", object(), 60, cold_cost_s=1.0)
+        for _ in range(5):
+            ka.get("a")
+        evicted = ka.put("c", object(), 60, cold_cost_s=1.0)
+        assert evicted == ["b"]  # hot 'a' survives
+
+
+class TestScheduler:
+    def _sched(self, cap=float("inf"), lat=0.1, timeout_factor=50.0):
+        return EnergyAwareScheduler(
+            SchedulerConfig(
+                capping=CappingConfig(power_cap_watts=cap, control_interval_s=1.0),
+                timeout_factor=timeout_factor,
+            ),
+            executor=lambda inv: lat,
+            footprint_of=lambda fn: 10.0,
+            mean_latency_of=lambda fn: 0.1,
+        )
+
+    def test_drains_queue(self):
+        s = self._sched()
+        for i in range(5):
+            s.submit(Invocation(f"f{i}", arrival=0.0))
+        assert s.drain() == 5
+        assert s.stats.completed == 5
+
+    def test_cap_defers(self):
+        s = self._sched(cap=100.0)
+        s.observe_power(99.0)
+        s.submit(Invocation("f", arrival=0.0))
+        assert s.drain() == 0
+        assert s.stats.deferred_by_cap == 1
+        assert len(s.queue) == 1
+
+    def test_straggler_requeued(self):
+        calls = {"n": 0}
+
+        def exec_(inv):
+            calls["n"] += 1
+            return 10.0 if calls["n"] == 1 else 0.1  # first run is a straggler
+
+        s = EnergyAwareScheduler(
+            SchedulerConfig(timeout_factor=5.0),
+            executor=exec_, footprint_of=lambda f: None,
+            mean_latency_of=lambda f: 0.1,
+        )
+        s.submit(Invocation("f", arrival=0.0))
+        s.drain()
+        assert s.stats.requeued == 1
+        assert s.stats.completed == 1
+
+
+class TestCappedExecution:
+    """Paper Fig. 10: software capping on a real trace."""
+
+    @pytest.fixture(scope="class")
+    def cp(self):
+        return EnergyFirstControlPlane(paper_functions(), SimulatorConfig(platform="server"))
+
+    @pytest.fixture(scope="class")
+    def trace(self):
+        return generate_trace(paper_functions(), WorkloadConfig(duration_s=120.0, load=2.0, seed=5))
+
+    def test_overshoot_small_with_footprints(self, cp, trace):
+        """Paper Fig. 10: overshoot magnitude < 3 % across caps."""
+        for cap in (160.0, 200.0, 260.0):
+            res = cp.run_capped(trace, cap_watts=cap)
+            assert res.mean_overshoot_magnitude < 0.03, (cap, res.mean_overshoot_magnitude)
+            assert res.overshoot_fraction < 0.05, (cap, res.overshoot_fraction)
+
+    def test_tighter_cap_increases_latency(self, cp, trace):
+        loose = cp.run_capped(trace, cap_watts=260.0)
+        tight = cp.run_capped(trace, cap_watts=160.0)
+        assert tight.latencies.mean() >= loose.latencies.mean()
+        assert tight.queue_waits.mean() >= loose.queue_waits.mean()
+
+    def test_footprints_actually_enforce_the_cap(self, cp, trace):
+        """The paper's point: a small static buffer cannot see per-function
+        increments, so it blows through the cap; footprint-aware admission
+        holds it (at the price of queueing, Fig. 10a)."""
+        fp = cp.run_capped(trace, cap_watts=220.0, use_footprints=True)
+        buf = cp.run_capped(trace, cap_watts=220.0, use_footprints=False)
+        assert fp.overshoot_fraction < 0.05
+        assert buf.overshoot_fraction > 5 * max(fp.overshoot_fraction, 1e-3)

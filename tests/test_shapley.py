@@ -1,0 +1,102 @@
+"""Shapley-value fair-attribution properties (paper §4.4) — property-based."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.footprints import assemble_spectrum
+from repro.core.shapley import (
+    per_invocation_footprint,
+    shapley_control_plane_share,
+    shapley_idle_share,
+    total_footprint,
+)
+
+arrays = st.integers(2, 12).flatmap(
+    lambda m: st.tuples(
+        st.just(m),
+        st.lists(st.integers(0, 50), min_size=m, max_size=m),
+        st.floats(0.0, 1e4),
+        st.floats(0.0, 1e4),
+    )
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(arrays)
+def test_efficiency_and_null_player(data):
+    """Shares sum to the shared energy; inactive functions get zero."""
+    m, invocations, cp_energy, idle_energy = data
+    a = jnp.asarray(invocations, jnp.float32)
+    active = a > 0
+    phi_cp = shapley_control_plane_share(jnp.asarray(cp_energy), a)
+    phi_idle = shapley_idle_share(jnp.asarray(idle_energy), active)
+    if int(jnp.sum(a)) > 0:
+        assert float(jnp.sum(phi_cp)) == np.float32(cp_energy) * 1.0 or abs(
+            float(jnp.sum(phi_cp)) - cp_energy
+        ) <= 1e-3 * max(cp_energy, 1.0)
+        assert abs(float(jnp.sum(phi_idle)) - idle_energy) <= 1e-3 * max(idle_energy, 1.0)
+    # null player
+    for i, inv in enumerate(invocations):
+        if inv == 0:
+            assert float(phi_cp[i]) == 0.0
+            assert float(phi_idle[i]) == 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(arrays)
+def test_symmetry(data):
+    """Identical functions (same invocation counts) get identical shares."""
+    m, invocations, cp_energy, idle_energy = data
+    a = jnp.asarray(invocations, jnp.float32)
+    phi_cp = np.asarray(shapley_control_plane_share(jnp.asarray(cp_energy), a))
+    phi_idle = np.asarray(shapley_idle_share(jnp.asarray(idle_energy), a > 0))
+    for i in range(m):
+        for j in range(i + 1, m):
+            if invocations[i] == invocations[j]:
+                assert phi_cp[i] == phi_cp[j]
+                assert phi_idle[i] == phi_idle[j]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(0, 20), min_size=3, max_size=6),
+    st.floats(0.0, 100.0), st.floats(0.0, 100.0),
+    st.floats(0.0, 100.0), st.floats(0.0, 100.0),
+)
+def test_linearity(invocations, cp1, cp2, idle1, idle2):
+    """Shares from split shared resources add up (property 4)."""
+    a = jnp.asarray(invocations, jnp.float32)
+    active = a > 0
+    s1 = shapley_control_plane_share(jnp.asarray(cp1), a)
+    s2 = shapley_control_plane_share(jnp.asarray(cp2), a)
+    s12 = shapley_control_plane_share(jnp.asarray(cp1 + cp2), a)
+    np.testing.assert_allclose(np.asarray(s1 + s2), np.asarray(s12), rtol=1e-5, atol=1e-4)
+    i1 = shapley_idle_share(jnp.asarray(idle1), active)
+    i2 = shapley_idle_share(jnp.asarray(idle2), active)
+    i12 = shapley_idle_share(jnp.asarray(idle1 + idle2), active)
+    np.testing.assert_allclose(np.asarray(i1 + i2), np.asarray(i12), rtol=1e-5, atol=1e-4)
+
+
+def test_total_footprint_eq4():
+    j = total_footprint(jnp.asarray([1.0, 2.0]), jnp.asarray([0.5, 0.5]), jnp.asarray([2.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(j), [3.5, 2.5])
+
+
+def test_spectrum_assembly_consistency():
+    """assemble_spectrum: efficiency over the full spectrum + per-invocation."""
+    x = jnp.asarray([10.0, 0.0, 5.0])
+    lat = jnp.asarray([1.0, 1.0, 2.0])
+    inv = jnp.asarray([4.0, 0.0, 2.0])
+    spec = assemble_spectrum(x, lat, inv, jnp.asarray(6.0), jnp.asarray(20.0))
+    # null player everywhere
+    assert float(spec.j_total[1]) == 0.0
+    # efficiency: sum = sum(j_indiv) + cp + idle
+    want = float(jnp.sum(spec.j_indiv)) + 6.0 + 20.0
+    assert abs(float(jnp.sum(spec.j_total)) - want) < 1e-3
+    # per-invocation: j_total / A
+    np.testing.assert_allclose(
+        np.asarray(per_invocation_footprint(spec.j_total, inv))[0],
+        float(spec.j_total[0]) / 4.0,
+    )

@@ -1,0 +1,134 @@
+"""Training subsystem: optimizer, accumulation equivalence, EF compression,
+trainer resume, straggler watchdog."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import ShapeConfig
+from repro.data.pipeline import DataConfig, batch_iterator, synthetic_batch
+from repro.models import build
+from repro.training import optimizer as opt
+from repro.training.train_step import init_state, make_train_step
+from repro.training.trainer import Trainer, TrainerConfig
+
+SHAPE = ShapeConfig("t", 32, 4, "train")
+
+
+def _setup(arch="xlstm-350m", **okw):
+    cfg = get_config(arch, reduced=True)
+    api = build(cfg)
+    ocfg = opt.OptimizerConfig(total_steps=50, warmup_steps=2, **okw)
+    state = init_state(api, jax.random.PRNGKey(0), ocfg)
+    return api, ocfg, state
+
+
+def test_loss_decreases():
+    api, ocfg, state = _setup()
+    step = jax.jit(make_train_step(api, ocfg))
+    losses = []
+    it = batch_iterator(api, SHAPE, DataConfig(seed=1))
+    for _ in range(15):
+        state, m = step(state, next(it))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_accumulation_equivalence():
+    """accum=4 microbatching produces (nearly) the same update as accum=1."""
+    api, ocfg, state = _setup("internlm2-1.8b")
+    batch = {k: jnp.asarray(v) for k, v in synthetic_batch(api, SHAPE, 0).items()}
+    s1, m1 = jax.jit(make_train_step(api, ocfg))(state, batch)
+    s4, m4 = jax.jit(make_train_step(api, ocfg, accum_steps=4))(state, batch)
+    # loss is the mean over microbatches == full-batch loss (mean CE); params agree
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    l1 = jax.tree.leaves(s1.params)
+    l4 = jax.tree.leaves(s4.params)
+    for a, b in zip(l1, l4):
+        # Adam's rsqrt amplifies bf16 grad noise; 1e-3 on O(1) params is the
+        # numerical (not semantic) gap between summed and batched grads.
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3, rtol=5e-3)
+
+
+def test_grad_clipping():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(norm) > 100.0
+
+
+def test_schedule_shape():
+    cfg = opt.OptimizerConfig(learning_rate=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(opt.schedule(jnp.asarray(float(s)), cfg)) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1.0) < 1e-6          # end of warmup
+    assert lrs[-1] <= 0.11                    # decayed to min ratio
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))  # monotone decay
+
+
+def test_ef_compression_unbiased_over_steps(rng):
+    """Error feedback: accumulated compressed sum converges to the true sum."""
+    g = jnp.asarray(rng.standard_normal((64,)), jnp.float32) * 0.01
+    err = {"g": jnp.zeros_like(g)}
+    total_c = jnp.zeros_like(g)
+    for _ in range(50):
+        out, err = opt.ef_compress({"g": g}, err)
+        total_c = total_c + out["g"]
+    # After T steps, mean of compressed ~ g with bounded residual
+    rel = float(jnp.linalg.norm(total_c / 50 - g) / jnp.linalg.norm(g))
+    assert rel < 0.05, rel
+
+
+def test_quantize_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal((128,)), jnp.float32)
+    q, s = opt.quantize_int8(x)
+    back = opt.dequantize_int8(q, s)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.51
+
+
+def test_trainer_resume_and_determinism():
+    """Kill-and-restart: 10 straight steps == 5 steps + crash + resume 5."""
+    api, ocfg, state0 = _setup()
+    step = jax.jit(make_train_step(api, ocfg))
+
+    def factory(start):
+        return batch_iterator(api, SHAPE, DataConfig(seed=2), start_step=start)
+
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        # straight run
+        t_a = Trainer(step, state0, factory, TrainerConfig(total_steps=10, checkpoint_every=100, checkpoint_dir=d1))
+        rep_a = t_a.run()
+        # interrupted run: 5 steps, checkpoint, then fresh trainer resumes
+        t_b1 = Trainer(step, state0, factory, TrainerConfig(total_steps=5, checkpoint_every=100, checkpoint_dir=d2))
+        t_b1.run()
+        state_fresh = init_state(api, jax.random.PRNGKey(0), ocfg)
+        t_b2 = Trainer(step, state_fresh, factory, TrainerConfig(total_steps=10, checkpoint_every=100, checkpoint_dir=d2))
+        rep_b = t_b2.run()
+        assert rep_b.resumed_from == 5
+        assert abs(rep_a.final_loss - rep_b.final_loss) < 1e-4
+
+
+def test_straggler_watchdog():
+    """A step 10x slower than the median is counted as a straggler."""
+    import time
+
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 12:
+            time.sleep(0.3)
+        else:
+            time.sleep(0.005)
+        return state, {"loss": jnp.asarray(1.0)}
+
+    t = Trainer(
+        slow_step, None, lambda s: iter(lambda: {}, None),
+        TrainerConfig(total_steps=15, watchdog_factor=3.0, watchdog_warmup=3),
+    )
+    rep = t.run()
+    assert rep.straggler_steps >= 1
