@@ -32,20 +32,24 @@ def run(quick: bool = True) -> dict:
     dynamic = concat_traces(first, second)
     e_dynamic = _total_error(cp, dynamic)
 
-    # (c) sweep: n workloads x 3 platforms
+    # (c) sweep: n workloads x 3 platforms, each platform's workloads
+    # profiled as one fleet batch through the batched engine (one vectorized
+    # simulation pass + one batched disaggregation per platform).
     n_sweep = 6 if quick else 35
     errs = []
     for platform in ("desktop", "server", "edge"):
         cpp = control_plane(platform)
-        for seed in range(n_sweep // 3 + 1):
-            t = generate_trace(
+        ts = [
+            generate_trace(
                 reg,
                 WorkloadConfig(
                     duration_s=duration, load=0.5 + 0.5 * (seed % 3), seed=10 + seed,
                     arrival="poisson" if seed % 2 else "bursty",
                 ),
             )
-            errs.append(_total_error(cpp, t))
+            for seed in range(n_sweep // 3 + 1)
+        ]
+        errs.extend(p.report.total_error for p in cpp.profile_fleet(ts))
     errs = np.asarray(errs)
     return {
         "bursty_total_error": e_bursty,

@@ -1,9 +1,12 @@
 """Kernel-path benchmark: blocked reference vs dense oracle on this host
-(wall-clock), plus interpret-mode validation of the Pallas kernels.
+(wall-clock), plus interpret-mode validation of the Pallas kernels, plus the
+fleet disaggregation engine vs the sequential per-function-loop reference.
 
 On CPU the Pallas kernels execute only in interpret mode (Python-speed, for
-correctness); the *performance* claim on this host is the blocked reference
-vs naive dense attention, which shares the kernels' memory structure.
+correctness); the *performance* claims on this host are (a) the blocked
+reference vs naive dense attention, which shares the kernels' memory
+structure, and (b) the batched disaggregation engine vs the seed's
+per-node/per-step Python-loop pipeline.
 """
 
 from __future__ import annotations
@@ -14,18 +17,61 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.batched_engine import (
+    EngineConfig,
+    run_fleet,
+    run_fleet_gram,
+    run_fleet_sequential,
+    synthetic_fleet,
+)
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as pl_decode
 from repro.kernels.flash_attention import flash_attention as pl_flash
 
 
 def _time(f, reps=3):
-    jax.block_until_ready(f())
+    jax.block_until_ready(f())  # accepts pytrees: blocks on every leaf
     t0 = time.perf_counter()
     for _ in range(reps):
         out = f()
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps
+
+
+def run_disagg(quick: bool = True) -> dict:
+    """Fleet engine vs sequential reference: equivalence + wall-clock.
+
+    The acceptance scenario: a 64-function x 256-tick fleet must match the
+    sequential per-function-loop reference within 1e-5 and beat it by >=5x.
+    """
+    b = 8 if quick else 16
+    s, n_w, m = 8, 32, 64  # 256 ticks x 64 functions per node
+    inputs = synthetic_fleet(b, s, n_w, m)
+    cfg = EngineConfig()
+
+    seq = run_fleet_sequential(inputs, cfg)
+    bat = run_fleet(inputs, cfg)
+    gram = run_fleet_gram(inputs, cfg)
+    err_batched = float(jnp.max(jnp.abs(bat.x_final - seq.x_final)))
+    err_traj = float(jnp.max(jnp.abs(bat.x_trajectory - seq.x_trajectory)))
+    err_gram = float(jnp.max(jnp.abs(gram.x_final - seq.x_final)))
+
+    t_seq = _time(lambda: run_fleet_sequential(inputs, cfg))
+    t_bat = _time(lambda: run_fleet(inputs, cfg))
+    t_gram = _time(lambda: run_fleet_gram(inputs, cfg))
+    return {
+        "fleet_shape": f"{b}x{s * n_w}x{m}",
+        "disagg_sequential_ms": t_seq * 1e3,
+        "disagg_batched_ms": t_bat * 1e3,
+        "disagg_gram_ms": t_gram * 1e3,
+        "disagg_batched_speedup": t_seq / t_bat,
+        "disagg_gram_speedup": t_seq / t_gram,
+        "disagg_batched_vs_sequential_err": err_batched,
+        "disagg_trajectory_err": err_traj,
+        "disagg_gram_vs_sequential_err": err_gram,
+        "disagg_matches_sequential": float(err_batched < 1e-5),
+        "disagg_speedup_ok": float(t_seq / t_bat >= 5.0),
+    }
 
 
 def run(quick: bool = True) -> dict:
@@ -56,7 +102,7 @@ def run(quick: bool = True) -> dict:
             - ref.decode_attention(qd, kc, vc, lens)
         ))
     )
-    return {
+    out = {
         "dense_ms": t_dense * 1e3,
         "blocked_ms": t_blocked * 1e3,
         "blocked_vs_dense_speedup": t_dense / t_blocked,
@@ -64,3 +110,5 @@ def run(quick: bool = True) -> dict:
         "pallas_decode_interpret_err": dec_err,
         "kernels_validate": float(flash_err < 1e-4 and dec_err < 1e-4),
     }
+    out.update(run_disagg(quick))
+    return out

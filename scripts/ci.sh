@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: the full test suite must COLLECT cleanly and pass.
+#
+# pytest exits 2 on collection errors and 1 on failures; both are failures
+# here — a module that stops importing is exactly the regression this gate
+# exists to catch (the seed repo shipped with 7 of them).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collection check (zero tolerance for import errors) =="
+python -m pytest -q --collect-only >/dev/null
+
+echo "== tier-1 suite =="
+python -m pytest -x -q "$@"

@@ -1,0 +1,392 @@
+"""Fleet-batched energy disaggregation engine.
+
+The paper's pipeline (disaggregate -> Kalman -> Shapley footprints) is
+defined per node and per Kalman step; the seed drove it with Python loops
+(``fleet_profile`` over nodes, one ``kalman_step`` dispatch per step in the
+reference path).  This module is the compiled fleet-scale hot path: a whole
+fleet of B nodes x M functions x T telemetry ticks (grouped into S Kalman
+steps of ``n_w`` windows) filters in **one** jitted call —
+
+    ``run_fleet``            vmap over nodes + ``lax.scan`` over steps on the
+                             raw (B, S, n_w, M) window blocks; numerically
+                             identical to the sequential reference.
+    ``run_fleet_gram``       the O(M^2)-per-step variant: window statistics
+                             are hoisted into one batched gram pass first
+                             (Pallas kernel on TPU, XLA einsum elsewhere),
+                             so the scan never touches the window dimension.
+    ``run_fleet_sequential`` the seed-semantics oracle: Python loops over
+                             nodes and steps calling ``kalman_step``.  Tests
+                             pin the batched paths against it; benchmarks
+                             time the batched paths against it.
+
+Per-tick attribution (``FleetResult.tick_power``) redistributes each tick's
+measured active power over the functions running in it, proportional to
+their estimated draw — the Shapley efficiency property enforced per tick,
+so per-function footprints sum to the measured total by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.footprints import FootprintSpectrum, assemble_spectrum
+from repro.core.kalman import (
+    KalmanConfig,
+    KalmanState,
+    kalman_init,
+    kalman_step,
+    precompute_step_inputs,
+    run_kalman,
+    run_kalman_fleet,
+    run_kalman_fleet_gram,
+    run_kalman_gram,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    kalman: KalmanConfig = KalmanConfig()
+    delta: float = 1.0          # tick (window) length in seconds
+    backend: str = "auto"       # auto | xla | pallas: gram-assembly backend
+    init_iters: int = 400       # NNLS iterations for the whole-trace X_0
+    init_ridge_lambda: float | None = None  # X_0 ridge; None -> kalman's
+
+    @property
+    def init_lam(self) -> float:
+        return (
+            self.kalman.ridge_lambda
+            if self.init_ridge_lambda is None
+            else self.init_ridge_lambda
+        )
+
+
+class FleetInputs(NamedTuple):
+    """One fleet profiling batch: B nodes, S steps of n_w ticks, M functions."""
+
+    c: Array          # (B, S, n_w, M) contribution seconds per tick
+    w: Array          # (B, S, n_w) idle-adjusted active power per tick (W)
+    a: Array          # (B, S, M) invocation counts per step
+    lat_sum: Array    # (B, S, M) summed latency per step
+    lat_sumsq: Array  # (B, S, M) summed squared latency per step
+
+
+class FleetResult(NamedTuple):
+    x_final: Array        # (B, M) final per-function power estimate (W)
+    x_trajectory: Array   # (B, S, M) per-step estimates
+    x0: Array             # (B, M) whole-trace initial estimate
+    tick_power: Array | None    # (B, T, M) conserved per-tick power (W)
+    unattributed: Array | None  # (B, T) power in ticks with no activity
+    state: KalmanState    # batched final filter state
+
+
+def _gram_fn(backend: str) -> Callable | None:
+    if backend == "auto":
+        from repro.kernels.disagg_solve import default_backend
+
+        backend = default_backend()
+    if backend == "pallas":
+        from repro.kernels.disagg_solve import disagg_gram
+
+        # Off-TPU the kernel only runs in interpret mode (Python-speed;
+        # for correctness work, which is why explicit backend="pallas"
+        # still honors it rather than failing at compile time).
+        return functools.partial(
+            disagg_gram, interpret=jax.default_backend() != "tpu"
+        )
+    if backend == "xla":
+        return None
+    raise ValueError(f"unknown gram backend: {backend!r}")
+
+
+def _node_init_gram(c_node: Array, w_node: Array) -> tuple[Array, Array]:
+    """Whole-trace gram/rhs for one node via flat matmuls.
+
+    The flat (S*n_w, M) contraction is used (rather than a stepwise einsum)
+    because XLA keeps its reduction order identical under vmap — the batched
+    engine and the sequential oracle see bitwise-equal grams.
+    """
+    cf = c_node.reshape(-1, c_node.shape[-1])
+    return cf.T @ cf, cf.T @ w_node.reshape(-1)
+
+
+def fleet_initial_estimate(
+    c: Array, w: Array, config: EngineConfig = EngineConfig(), *, gram_fn=None
+) -> Array:
+    """(B, M) statistical disaggregation X_0 per node (§4.2).
+
+    Accepts (B, N, M)/(B, N) window blocks or (B, S, n_w, M)/(B, S, n_w)
+    step blocks — grams are additive over windows either way — and runs one
+    batched gram-domain NNLS, no per-node loop.
+    """
+    from repro.core.disaggregation import solve_nnls_gram
+
+    m = c.shape[-1]
+    eye = config.init_lam * jnp.eye(m, dtype=c.dtype)
+    if gram_fn is None:
+        if c.shape[0] == 1:
+            # XLA lowers batch-1 contractions differently from both the
+            # plain and batch-N forms; route through the plain form so a
+            # one-node fleet still matches the sequential oracle bitwise.
+            g1, r1 = _node_init_gram(c[0], w[0])
+            return solve_nnls_gram(g1 + eye, r1, iters=config.init_iters)[None]
+        gram, rhs = jax.vmap(_node_init_gram)(c, w)
+    else:
+        gram, rhs = gram_fn(c.reshape(c.shape[0], -1, m), w.reshape(w.shape[0], -1))
+    return solve_nnls_gram(gram + eye, rhs, iters=config.init_iters)
+
+
+def _init_states(x0: Array) -> KalmanState:
+    return jax.vmap(lambda x: kalman_init(x.shape[-1], x0=x))(x0)
+
+
+def run_fleet(
+    inputs: FleetInputs,
+    config: EngineConfig = EngineConfig(),
+    *,
+    init_c: Array | None = None,
+    init_w: Array | None = None,
+    with_ticks: bool = True,
+) -> FleetResult:
+    """The batched engine: three fleet-wide jitted stages, no Python loops.
+
+    Stage 1 solves every node's whole-trace X_0 in one batched NNLS (over
+    ``init_c``/``init_w`` — a dedicated N_init window block, profiler-style
+    — when given, else over all steps); stage 2 — the hot loop — filters
+    all B nodes x S steps x n_w ticks in a single jitted ``vmap``+``scan``
+    call; stage 3 computes conserved per-tick attribution.  The stages are
+    separate jit boundaries (rather than one fused program) so each
+    compiles identically to the sequential oracle's building blocks — which
+    is what lets tests pin batched == sequential to float-reassociation
+    noise."""
+    x0 = fleet_initial_estimate(
+        inputs.c if init_c is None else init_c,
+        inputs.w if init_w is None else init_w,
+        config,
+    )
+    if inputs.c.shape[0] == 1:
+        # Batch-1 vmap lowers contractions differently; keep the one-node
+        # fleet on the plain scan so it matches the oracle bitwise.
+        final1, traj1 = run_kalman(
+            kalman_init(inputs.c.shape[-1], x0=x0[0]), inputs.c[0], inputs.w[0],
+            inputs.a[0], inputs.lat_sum[0], inputs.lat_sumsq[0], config.kalman,
+        )
+        final = jax.tree.map(lambda l: l[None], final1)
+        traj = traj1[None]
+    else:
+        final, traj = run_kalman_fleet(
+            _init_states(x0), inputs.c, inputs.w, inputs.a,
+            inputs.lat_sum, inputs.lat_sumsq, config.kalman,
+        )
+    tick_power = unattributed = None
+    if with_ticks:
+        tick_power, unattributed = tick_attribution(
+            inputs.c, inputs.w, traj, delta=config.delta
+        )
+    return FleetResult(
+        x_final=final.x, x_trajectory=traj, x0=x0,
+        tick_power=tick_power, unattributed=unattributed, state=final,
+    )
+
+
+def run_fleet_gram(
+    inputs: FleetInputs,
+    config: EngineConfig = EngineConfig(),
+    *,
+    init_c: Array | None = None,
+    init_w: Array | None = None,
+    with_ticks: bool = True,
+) -> FleetResult:
+    """Gram-hoisted engine: window statistics reduced once (Pallas kernel on
+    TPU, XLA einsum elsewhere), then an O(M^2)-per-step fleet scan that
+    never touches the window dimension.  Same update rule as ``run_fleet``;
+    equal up to float reassociation of the hoisted contractions."""
+    gram_fn = _gram_fn(config.backend)
+    x0 = fleet_initial_estimate(
+        inputs.c if init_c is None else init_c,
+        inputs.w if init_w is None else init_w,
+        config, gram_fn=gram_fn,
+    )
+    step_inputs = precompute_step_inputs(
+        inputs.c, inputs.w, inputs.a, inputs.lat_sum, inputs.lat_sumsq,
+        config.kalman, gram_fn=gram_fn,
+    )
+    if inputs.c.shape[0] == 1:
+        final1, traj1 = run_kalman_gram(
+            kalman_init(inputs.c.shape[-1], x0=x0[0]),
+            jax.tree.map(lambda l: l[0], step_inputs),
+            config.kalman,
+        )
+        final = jax.tree.map(lambda l: l[None], final1)
+        traj = traj1[None]
+    else:
+        final, traj = run_kalman_fleet_gram(_init_states(x0), step_inputs, config.kalman)
+    tick_power = unattributed = None
+    if with_ticks:
+        tick_power, unattributed = tick_attribution(
+            inputs.c, inputs.w, traj, delta=config.delta
+        )
+    return FleetResult(
+        x_final=final.x, x_trajectory=traj, x0=x0,
+        tick_power=tick_power, unattributed=unattributed, state=final,
+    )
+
+
+def run_fleet_sequential(
+    inputs: FleetInputs,
+    config: EngineConfig = EngineConfig(),
+    *,
+    init_c: Array | None = None,
+    init_w: Array | None = None,
+    with_ticks: bool = True,
+) -> FleetResult:
+    """Sequential-reference oracle (seed semantics, Python loops).
+
+    Loops nodes x steps calling the per-step ``kalman_step`` exactly as the
+    seed's per-node profiler did; used by tests as the ground truth the
+    batched paths must reproduce and by benchmarks as the baseline."""
+    from repro.core.disaggregation import solve_nnls_gram
+
+    b, s, n_w, m = inputs.c.shape
+    ic = inputs.c if init_c is None else init_c
+    iw = inputs.w if init_w is None else init_w
+    eye = config.init_lam * jnp.eye(m, dtype=jnp.float32)
+    x0s = []
+    for i in range(b):
+        gram, rhs = _node_init_gram(ic[i], iw[i])
+        x0s.append(solve_nnls_gram(gram + eye, rhs, iters=config.init_iters))
+    x0 = jnp.stack(x0s)
+    finals, trajs = [], []
+    for i in range(b):
+        state = kalman_init(m, x0=x0[i])
+        xs = []
+        for j in range(s):
+            state, x = kalman_step(
+                state,
+                inputs.c[i, j],
+                inputs.w[i, j],
+                inputs.a[i, j],
+                inputs.lat_sum[i, j],
+                inputs.lat_sumsq[i, j],
+                config.kalman,
+            )
+            xs.append(x)
+        finals.append(state)
+        trajs.append(jnp.stack(xs))
+    traj = jnp.stack(trajs)
+    state = jax.tree.map(lambda *leaves: jnp.stack(leaves), *finals)
+    tick_power = unattributed = None
+    if with_ticks:
+        tick_power, unattributed = tick_attribution(
+            inputs.c, inputs.w, traj, delta=config.delta
+        )
+    return FleetResult(
+        x_final=state.x, x_trajectory=traj, x0=x0,
+        tick_power=tick_power, unattributed=unattributed, state=state,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("delta",))
+def tick_attribution(
+    c: Array,      # (B, S, n_w, M)
+    w: Array,      # (B, S, n_w) measured active power per tick
+    traj: Array,   # (B, S, M) per-step estimates
+    *,
+    delta: float = 1.0,
+) -> tuple[Array, Array]:
+    """Conserved per-tick power attribution (efficiency enforced per tick).
+
+    Each tick's measured active power is split over the functions running in
+    it, proportional to estimated draw ``C[t, j] * X[j]``.  By construction
+    ``tick_power.sum(-1) + unattributed == w`` tick-by-tick, which is the
+    Shapley efficiency property at tick granularity; ``unattributed`` is
+    power measured in ticks where no function ran (sensor noise/lag).
+    """
+    b, s, n_w, m = c.shape
+    raw = c * traj[:, :, None, :]                       # (B, S, n_w, M) joules
+    pred = jnp.sum(raw, axis=-1) / delta                # (B, S, n_w) watts
+    # Ticks with vanishing predicted draw go to the unattributed channel:
+    # dividing by them would destroy the conservation invariant instead of
+    # enforcing it.
+    has = pred > 1e-9
+    scale = jnp.where(has, w / jnp.where(has, pred, 1.0), 0.0)
+    tick_power = (raw / delta) * scale[..., None]
+    unattributed = jnp.where(has, 0.0, w)
+    return tick_power.reshape(b, s * n_w, m), unattributed.reshape(b, s * n_w)
+
+
+# ---------------------------------------------------------------------------
+# Batched footprint spectra (Shapley assembly over the node axis).
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def fleet_spectrum(
+    x_power: Array,        # (B, M)
+    mean_latency: Array,   # (B, M)
+    invocations: Array,    # (B, M)
+    cp_energy: Array,      # (B,)
+    idle_energy: Array,    # (B,)
+) -> FootprintSpectrum:
+    """vmapped §4.4 spectrum assembly: one call for the whole fleet."""
+    return jax.vmap(assemble_spectrum)(
+        x_power, mean_latency, invocations, cp_energy, idle_energy
+    )
+
+
+def synthetic_fleet(
+    b: int, s: int, n_w: int, m: int, *, seed: int = 0, density: float = 0.2
+) -> FleetInputs:
+    """Randomized synthetic fleet batch: sparse contributions, true power
+    plus noise.  Shared input generator for the equivalence tests and
+    ``benchmarks/kernel_bench.py`` so both exercise the same contract."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    c = np.abs(rng.standard_normal((b, s, n_w, m))) * (
+        rng.random((b, s, n_w, m)) > 1 - density
+    )
+    x_true = np.abs(rng.standard_normal((b, m))) * 20.0 + 2.0
+    w = np.einsum("bsnm,bm->bsn", c, x_true) + 0.1 * rng.standard_normal((b, s, n_w))
+    a = (rng.random((b, s, m)) > 0.5) * rng.integers(0, 4, (b, s, m))
+    lat = np.abs(rng.standard_normal((b, s, m)))
+    return FleetInputs(
+        c=jnp.asarray(c, jnp.float32),
+        w=jnp.asarray(np.maximum(w, 0.0), jnp.float32),
+        a=jnp.asarray(a, jnp.float32),
+        lat_sum=jnp.asarray(lat * a, jnp.float32),
+        lat_sumsq=jnp.asarray(lat**2 * a, jnp.float32),
+    )
+
+
+def pack_fleet_inputs(
+    c_windows: Array,    # (B, N, M) per-node contribution matrices
+    w_windows: Array,    # (B, N) per-node idle-adjusted power
+    a_windows: Array,    # (B, N, M) per-node invocation counts
+    lat_sum_w: Array,    # (B, N, M) per-window latency sums
+    lat_sumsq_w: Array,  # (B, N, M)
+    *,
+    step_windows: int,
+) -> FleetInputs:
+    """Group per-window arrays into (B, S, n_w, ...) Kalman-step blocks,
+    truncating the ragged tail (mirrors the per-node profiler's behavior)."""
+    b, n, m = c_windows.shape
+    s = n // step_windows
+    if s == 0:
+        raise ValueError(
+            f"need at least step_windows={step_windows} windows, got {n}"
+        )
+    n_used = s * step_windows
+    return FleetInputs(
+        c=c_windows[:, :n_used].reshape(b, s, step_windows, m),
+        w=w_windows[:, :n_used].reshape(b, s, step_windows),
+        a=a_windows[:, :n_used].reshape(b, s, step_windows, m).sum(axis=2),
+        lat_sum=lat_sum_w[:, :n_used].reshape(b, s, step_windows, m).sum(axis=2),
+        lat_sumsq=lat_sumsq_w[:, :n_used].reshape(b, s, step_windows, m).sum(axis=2),
+    )

@@ -71,6 +71,32 @@ def solve_ridge(c: Array, w: Array, lam: float = 1e-3, *, nonneg: bool = True) -
 
 
 @functools.partial(jax.jit, static_argnames=("iters",))
+def solve_nnls_gram(gram: Array, rhs: Array, *, iters: int = 200) -> Array:
+    """Gram-domain FISTA NNLS: min_{X >= 0} 0.5 X^T G X - r^T X.
+
+    ``gram`` must already include the ridge term (G = C^T C + lam I).  This
+    is the batched engine's per-tick solve: once G/r are assembled (Pallas
+    kernel on TPU, one einsum pass elsewhere) every iteration is O(M^2) with
+    no window-dimension work, so a ``lax.scan`` over Kalman steps carries
+    only (M, M) state.  Broadcasts over any leading batch dims.
+    """
+    lip = jnp.trace(gram, axis1=-2, axis2=-1)  # >= spectral norm for SPD
+    step = (1.0 / jnp.maximum(lip, 1e-12))[..., None]
+
+    def body(i, carry):
+        x, y, t = carry
+        grad = jnp.einsum("...ij,...j->...i", gram, y) - rhs
+        x_new = jnp.maximum(y - step * grad, 0.0)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        y_new = x_new + ((t - 1.0) / t_new) * (x_new - x)
+        return x_new, y_new, t_new
+
+    x0 = jnp.zeros_like(rhs)
+    x, _, _ = jax.lax.fori_loop(0, iters, body, (x0, x0, jnp.asarray(1.0, rhs.dtype)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
 def solve_nnls(c: Array, w: Array, lam: float = 1e-3, *, iters: int = 200) -> Array:
     """FISTA-accelerated projected gradient NNLS.
 
@@ -79,20 +105,7 @@ def solve_nnls(c: Array, w: Array, lam: float = 1e-3, *, iters: int = 200) -> Ar
     """
     gram = c.T @ c + lam * jnp.eye(c.shape[1], dtype=c.dtype)
     rhs = c.T @ w
-    lip = jnp.trace(gram)  # >= spectral norm for SPD matrices
-    step = 1.0 / jnp.maximum(lip, 1e-12)
-
-    def body(i, carry):
-        x, y, t = carry
-        grad = gram @ y - rhs
-        x_new = jnp.maximum(y - step * grad, 0.0)
-        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-        y_new = x_new + ((t - 1.0) / t_new) * (x_new - x)
-        return x_new, y_new, t_new
-
-    x0 = jnp.zeros((c.shape[1],), dtype=c.dtype)
-    x, _, _ = jax.lax.fori_loop(0, iters, body, (x0, x0, jnp.asarray(1.0, c.dtype)))
-    return x
+    return solve_nnls_gram(gram, rhs, iters=iters)
 
 
 def disaggregate(

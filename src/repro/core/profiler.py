@@ -121,33 +121,11 @@ class FaasMeterProfiler:
         cfg = self.config
         delta = cfg.delta
         n_windows = int(round(duration / delta))
-        w_sys = telemetry.system_power[:n_windows]
 
-        # --- 1. Synchronize system power against the chip-power reference.
-        skew = 0.0
-        if telemetry.chip_power is not None:
-            w_sys, skew_arr = syncmod.synchronize(
-                w_sys, telemetry.chip_power[:n_windows], max_shift=cfg.sync_max_shift
-            )
-            skew = float(skew_arr)
-
-        # --- 2. Contribution matrices (+ control plane shared principal).
-        c = contrib.contribution_matrix(
-            fn_id, start, end, num_fns=num_fns, num_windows=n_windows, delta=delta
+        # --- 1+2. Sync + contribution assembly (shared with the fleet path).
+        w_sys, skew, c, c_aug, cp_col = self._prep_node(
+            fn_id, start, end, telemetry, num_fns, n_windows
         )
-        a = contrib.invocation_counts(
-            fn_id, start, num_fns=num_fns, num_windows=n_windows, delta=delta
-        )
-        cp_col = None
-        if cfg.account_control_plane and telemetry.cp_cpu_frac is not None:
-            cp_col = contrib.shared_principal_contribution(
-                telemetry.cp_cpu_frac[:n_windows],
-                telemetry.sys_cpu_frac[:n_windows],
-                delta=delta,
-            )
-            c_aug = contrib.augment_with_principals(c, cp_col)
-        else:
-            c_aug = c
         m_aug = c_aug.shape[1]
 
         # --- 3+4. Initial disaggregation + Kalman trajectory.
@@ -227,6 +205,35 @@ class FaasMeterProfiler:
             idle_energy=idle_energy,
         )
 
+    def _prep_node(self, fn_id, start, end, telemetry, num_fns, n_windows):
+        """Steps 1-2 of the pipeline for one node: synchronize the system
+        signal against the chip reference (Eq. 5), then assemble the
+        contribution matrix with the control plane appended as a shared
+        principal (§4.1, Eq. 2).  Used by both ``profile`` and
+        ``fleet_profile_batched`` so the two paths cannot drift."""
+        cfg = self.config
+        w_sys = telemetry.system_power[:n_windows]
+        skew = 0.0
+        if telemetry.chip_power is not None:
+            w_sys, skew_arr = syncmod.synchronize(
+                w_sys, telemetry.chip_power[:n_windows], max_shift=cfg.sync_max_shift
+            )
+            skew = float(skew_arr)
+        c = contrib.contribution_matrix(
+            fn_id, start, end, num_fns=num_fns, num_windows=n_windows, delta=cfg.delta
+        )
+        cp_col = None
+        if cfg.account_control_plane and telemetry.cp_cpu_frac is not None:
+            cp_col = contrib.shared_principal_contribution(
+                telemetry.cp_cpu_frac[:n_windows],
+                telemetry.sys_cpu_frac[:n_windows],
+                delta=cfg.delta,
+            )
+            c_aug = contrib.augment_with_principals(c, cp_col)
+        else:
+            c_aug = c
+        return w_sys, skew, c, c_aug, cp_col
+
     def _target_signal(self, w_sys: Array, telemetry: Telemetry) -> Array:
         """Disaggregation target per mode (always idle-subtracted: X_No_Idle)."""
         cfg = self.config
@@ -280,9 +287,195 @@ def fleet_profile(
     num_fns: int,
     duration: float,
 ) -> list[FootprintReport]:
-    """Profile many nodes.  Orchestration-level loop; the per-node math is
-    jitted and shape-stable so XLA caches a single executable across nodes."""
+    """Profile many nodes sequentially (the per-node reference path).
+
+    Orchestration-level loop; the per-node math is jitted and shape-stable
+    so XLA caches a single executable across nodes.  The compiled fleet hot
+    path is ``fleet_profile_batched``."""
     return [
         profiler.profile(f, st, en, num_fns=num_fns, duration=duration, telemetry=tel)
         for (f, st, en), tel in zip(traces, telemetries)
     ]
+
+
+class FleetExtras(NamedTuple):
+    """Engine-level by-products of ``fleet_profile_batched`` that streaming
+    consumers (``serving.control_plane``) fold into per-invocation state."""
+
+    result: object            # batched_engine.FleetResult
+    inputs: object            # batched_engine.FleetInputs
+    init_busy_seconds: Array  # (B, M_aug) runtime seconds in the init window
+    init_invocations: Array   # (B, M_aug) invocations starting in it
+    init_seconds: float       # length of the init window (s)
+
+
+def fleet_profile_batched(
+    profiler: FaasMeterProfiler,
+    traces: list[tuple[Array, Array, Array]],
+    telemetries: list[Telemetry],
+    *,
+    num_fns: int,
+    duration: float,
+    return_extras: bool = False,
+):
+    """Profile a whole fleet through the batched disaggregation engine.
+
+    Per-node work is limited to contribution-matrix assembly (jitted,
+    shape-stable, cached across nodes) and the cheap window-sized sync; the
+    initial solve, the full Kalman trajectory, and the footprint spectra
+    for all B nodes run as fleet-wide batched calls
+    (``core.batched_engine``).  Pure mode only — combined mode stays on the
+    per-node path.
+    """
+    from repro.core import batched_engine as eng
+
+    cfg = profiler.config
+    if cfg.mode != "pure":
+        raise ValueError("fleet_profile_batched supports mode='pure' only")
+    if not cfg.disagg.nonneg or cfg.disagg.mode != "no_idle":
+        # The engine's initial solve is gram-domain NNLS on the idle-adjusted
+        # target; other disagg configs stay on the per-node reference path.
+        raise ValueError(
+            "fleet_profile_batched supports the default NNLS/no_idle "
+            "disaggregation config only"
+        )
+    delta = cfg.delta
+    n_windows = int(round(duration / delta))
+    init_n = min(cfg.init_windows, n_windows)
+    s = max((n_windows - init_n) // cfg.step_windows, 0)
+    if s == 0:
+        # Too short for a Kalman trajectory: the per-node path handles the
+        # init-only case already.
+        reports = fleet_profile(
+            profiler, traces, telemetries, num_fns=num_fns, duration=duration
+        )
+        return (reports, None) if return_extras else reports
+    n_used = init_n + s * cfg.step_windows
+
+    # The batch stacks per-node matrices, so the fleet must be homogeneous
+    # in shape: every node either has a control-plane principal or none.
+    has_cp_flags = [
+        cfg.account_control_plane and tel.cp_cpu_frac is not None
+        for tel in telemetries
+    ]
+    if len(set(has_cp_flags)) > 1:
+        raise ValueError(
+            "fleet_profile_batched needs a homogeneous fleet: telemetries "
+            "mix present/absent cp_cpu_frac (use fleet_profile instead)"
+        )
+
+    c_nodes, target_nodes, skews, w_sys_nodes = [], [], [], []
+    a_steps_nodes, lat_sum_nodes, lat_sumsq_nodes = [], [], []
+    cp_cols, counts_nodes, mean_lat_nodes = [], [], []
+    for (fn_id, start, end), tel in zip(traces, telemetries):
+        w_sys, skew, _, c_aug, cp_col = profiler._prep_node(
+            fn_id, start, end, tel, num_fns, n_windows
+        )
+        skews.append(skew)
+        w_sys_nodes.append(w_sys)
+        cp_cols.append(cp_col)
+        c_nodes.append(c_aug)
+        target_nodes.append(profiler._target_signal(w_sys, tel))
+        a_s, ls, lq = profiler._per_step_stats(
+            fn_id, start, end, num_fns, c_aug.shape[1], init_n, s, cp_col
+        )
+        a_steps_nodes.append(a_s)
+        lat_sum_nodes.append(ls)
+        lat_sumsq_nodes.append(lq)
+        counts, mean_lat, _, _ = _per_fn_latency_stats(fn_id, start, end, num_fns)
+        counts_nodes.append(counts)
+        mean_lat_nodes.append(mean_lat)
+
+    b = len(traces)
+    m_aug = c_nodes[0].shape[1]
+    c_all = jnp.stack(c_nodes)            # (B, N, M_aug)
+    target_all = jnp.stack(target_nodes)  # (B, N)
+    inputs = eng.FleetInputs(
+        c=c_all[:, init_n:n_used].reshape(b, s, cfg.step_windows, m_aug),
+        w=target_all[:, init_n:n_used].reshape(b, s, cfg.step_windows),
+        a=jnp.stack(a_steps_nodes),
+        lat_sum=jnp.stack(lat_sum_nodes),
+        lat_sumsq=jnp.stack(lat_sumsq_nodes),
+    )
+    engine_cfg = eng.EngineConfig(
+        kalman=cfg.kalman, delta=delta,
+        init_iters=cfg.disagg.nnls_iters,
+        init_ridge_lambda=cfg.disagg.ridge_lambda,
+    )
+    result = eng.run_fleet(
+        inputs, engine_cfg,
+        init_c=c_all[:, :init_n], init_w=target_all[:, :init_n],
+        # Per-tick attribution is a (B, T, M) dense product nothing in the
+        # report consumes; callers that want it use the engine directly.
+        with_ticks=False,
+    )
+
+    # Batched footprint spectra (step 6) for the whole fleet at once.
+    counts_all = jnp.stack(counts_nodes)
+    mean_lat_all = jnp.stack(mean_lat_nodes)
+    has_cp = cp_cols[0] is not None
+    x_cp_all = result.x_final[:, num_fns] if has_cp else jnp.zeros((b,))
+    cp_energy_all = (
+        x_cp_all * jnp.stack([jnp.sum(col) for col in cp_cols])
+        if has_cp
+        else jnp.zeros((b,))
+    )
+    idle_energy_all = jnp.asarray(
+        [tel.idle_watts * duration for tel in telemetries], jnp.float32
+    )
+    spectra = eng.fleet_spectrum(
+        result.x_final[:, :num_fns], mean_lat_all, counts_all,
+        cp_energy_all, idle_energy_all,
+    )
+
+    # Internal validity per node from the time-varying reconstruction.
+    w_hat_init = jnp.einsum("bnm,bm->bn", c_all[:, :init_n], result.x0)
+    w_hat_steps = jnp.einsum("bsnm,bsm->bsn", inputs.c, result.x_trajectory)
+    w_hat = jnp.concatenate([w_hat_init, w_hat_steps.reshape(b, -1)], axis=1)
+    idle_col = jnp.asarray([tel.idle_watts for tel in telemetries], jnp.float32)
+    w_hat = w_hat + idle_col[:, None]
+
+    reports = []
+    for i in range(b):
+        # Total-Error against the *synchronized raw* signal, exactly as the
+        # per-node profiler does (target + idle would silently clamp quiet
+        # windows where sensor noise dips below idle).
+        terr = float(total_power_error(w_sys_nodes[i][:n_used], w_hat[i]))
+        reports.append(
+            FootprintReport(
+                spectrum=jax.tree.map(lambda l: l[i], spectra),
+                x_power=result.x_final[i, :num_fns],
+                x_trajectory=result.x_trajectory[i],
+                x_cp=x_cp_all[i],
+                mean_latency=mean_lat_all[i],
+                invocations=counts_all[i],
+                skew_windows=skews[i],
+                total_error=terr,
+                cp_energy=float(cp_energy_all[i]),
+                idle_energy=float(idle_energy_all[i]),
+            )
+        )
+    if return_extras:
+        # Init-segment stats so streaming consumers can account the init
+        # window too (otherwise functions active only early read 0 J).
+        init_busy = c_all[:, :init_n].sum(axis=1)            # (B, M_aug)
+        init_a_nodes = []
+        t_init = init_n * delta
+        for fn_id, start, _end in traces:
+            valid = (fn_id >= 0) & (start >= 0) & (start < t_init)
+            seg = jnp.where(valid, jnp.clip(fn_id, 0, num_fns - 1), num_fns)
+            a_init = jax.ops.segment_sum(
+                valid.astype(jnp.float32), seg, num_segments=num_fns + 1
+            )[:num_fns]
+            if m_aug > num_fns:  # principals: one pseudo-invocation, as in steps
+                a_init = jnp.concatenate([a_init, jnp.ones((m_aug - num_fns,))])
+            init_a_nodes.append(a_init)
+        extras = FleetExtras(
+            result=result,
+            inputs=inputs,
+            init_busy_seconds=init_busy,
+            init_invocations=jnp.stack(init_a_nodes),
+            init_seconds=t_init,
+        )
+        return reports, extras
+    return reports

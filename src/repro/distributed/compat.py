@@ -1,0 +1,44 @@
+"""Version-compatible JAX API shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and its replication-check keyword was renamed
+``check_rep`` -> ``check_vma`` along the way.  Callers in this repo use the
+new-style spelling (``jax.shard_map`` semantics, ``check_vma=`` keyword);
+this shim maps it onto whichever implementation the installed JAX provides.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:  # pragma: no cover - exercised on older jax only
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_ACCEPTS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map_impl).parameters
+
+
+def shard_map(f=None, /, **kwargs):
+    """``jax.shard_map`` with ``check_vma`` translated for older JAX."""
+    if not _ACCEPTS_CHECK_VMA and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if f is None:
+        return lambda g: _shard_map_impl(g, **kwargs)
+    return _shard_map_impl(f, **kwargs)
+
+
+def abstract_mesh(axis_sizes: tuple, axis_names: tuple):
+    """``jax.sharding.AbstractMesh`` across its signature change.
+
+    Newer JAX takes ``(axis_sizes, axis_names)``; 0.4.x takes one tuple of
+    ``(name, size)`` pairs.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

@@ -1,0 +1,11 @@
+"""Pallas-TPU API shims.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` upstream;
+kernel modules import the name from here so they run on either JAX.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

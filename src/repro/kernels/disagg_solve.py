@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _gram_kernel(c_ref, w_ref, g_ref, r_ref, acc_g, acc_r, *, nn: int):
     ni = pl.program_id(1)
@@ -98,7 +100,7 @@ def disagg_gram(
             pltpu.VMEM((m_pad, m_pad), jnp.float32),
             pltpu.VMEM((1, m_pad), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -108,6 +110,32 @@ def disagg_gram(
     if squeeze:
         return gram[0], rhs[0]
     return gram, rhs
+
+
+def default_backend() -> str:
+    """Gram-assembly backend for the batched engine: the Pallas kernel owns
+    the contraction on TPU; elsewhere a plain XLA einsum is both faster and
+    exact (interpret-mode Pallas runs at Python speed)."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def disagg_solve_nnls(
+    c: jax.Array, w: jax.Array, lam: float = 1e-3,
+    *, iters: int = 200, interpret: bool = False,
+) -> jax.Array:
+    """Kernel-assembled NNLS: Pallas gram pass + batched gram-domain FISTA.
+
+    The fleet engine's per-tick solve: (G, N, M) contribution batches in,
+    (G, M) non-negative power estimates out, with the window dimension
+    touched exactly once (inside the kernel).
+    """
+    from repro.core.disaggregation import solve_nnls_gram
+
+    gram, rhs = disagg_gram(c, w, interpret=interpret)
+    m = gram.shape[-1]
+    gram = gram + lam * jnp.eye(m, dtype=gram.dtype)
+    return solve_nnls_gram(gram, rhs, iters=iters)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "nonneg"))

@@ -24,7 +24,12 @@ import numpy as np
 
 from repro.core.capping import CappingConfig, PowerCapController
 from repro.core.pricing import PricingConfig, price_report
-from repro.core.profiler import FaasMeterProfiler, FootprintReport, ProfilerConfig
+from repro.core.profiler import (
+    FaasMeterProfiler,
+    FootprintReport,
+    ProfilerConfig,
+    fleet_profile_batched,
+)
 from repro.telemetry.simulator import NodeSimulator, SimResult, SimulatorConfig
 from repro.workload.functions import FunctionRegistry
 from repro.workload.trace import InvocationTrace
@@ -38,6 +43,59 @@ class ProfiledWorkload:
     sim: SimResult
     trace: InvocationTrace
     prices: dict
+    footprint_stream: "StreamingFootprintTracker | None" = None
+
+
+class StreamingFootprintTracker:
+    """Streaming per-invocation footprint state for one node.
+
+    The seed recomputed the whole footprint spectrum from scratch whenever a
+    caller wanted fresh per-invocation numbers.  This tracker instead folds
+    each Kalman step's outputs in as they arrive — O(M) per step — so the
+    control plane can serve per-invocation footprints (for pricing and
+    capping admission) that are always current without any recomputation
+    over history.
+    """
+
+    def __init__(self, num_fns: int, idle_watts: float = 0.0):
+        self.num_fns = num_fns
+        self.idle_watts = idle_watts
+        self.j_indiv = np.zeros(num_fns)        # cumulative attributed joules
+        self.invocations = np.zeros(num_fns)    # cumulative invocation counts
+        self.elapsed_s = 0.0
+        self.steps_seen = 0
+
+    def observe_step(
+        self,
+        x_step: np.ndarray,       # (M,) per-function power estimate after the step
+        busy_seconds: np.ndarray,  # (M,) per-function runtime within the step
+        a_step: np.ndarray,       # (M,) invocations in the step
+        step_seconds: float,
+    ) -> None:
+        """Fold one Kalman step into the running footprints."""
+        self.j_indiv += np.asarray(busy_seconds[: self.num_fns], float) * np.asarray(
+            x_step[: self.num_fns], float
+        )
+        self.invocations += np.asarray(a_step[: self.num_fns], float)
+        self.elapsed_s += step_seconds
+        self.steps_seen += 1
+
+    @property
+    def per_invocation_indiv(self) -> np.ndarray:
+        """(M,) running J/invocation of function execution alone."""
+        return np.where(
+            self.invocations > 0, self.j_indiv / np.maximum(self.invocations, 1.0), 0.0
+        )
+
+    @property
+    def per_invocation_total(self) -> np.ndarray:
+        """(M,) running J/invocation including the even idle-energy share
+        over currently-active functions (§4.4 static-resource policy)."""
+        active = self.invocations > 0
+        n_active = max(int(active.sum()), 1)
+        idle_j = self.idle_watts * self.elapsed_s / n_active
+        total = self.j_indiv + np.where(active, idle_j, 0.0)
+        return np.where(active, total / np.maximum(self.invocations, 1.0), 0.0)
 
 
 class EnergyFirstControlPlane:
@@ -77,6 +135,76 @@ class EnergyFirstControlPlane:
             self.pricing,
         )
         return ProfiledWorkload(report=report, sim=sim, trace=trace, prices=prices)
+
+    def profile_fleet(
+        self, traces: list[InvocationTrace], *, seeds: list[int] | None = None
+    ) -> list[ProfiledWorkload]:
+        """Profile many nodes through the batched fleet engine.
+
+        One vectorized simulation pass generates every node's power traces,
+        one batched engine invocation disaggregates the whole fleet, and
+        each node's Kalman steps are streamed into a
+        ``StreamingFootprintTracker`` so per-invocation footprints update
+        incrementally instead of being recomputed per request.
+        """
+        if not traces:
+            return []
+        sims = self.simulator.simulate_fleet(traces, seeds)
+        duration = traces[0].duration
+        num_fns = traces[0].num_fns
+        trace_arrays = [
+            (jnp.asarray(t.fn_id), jnp.asarray(t.start), jnp.asarray(t.end))
+            for t in traces
+        ]
+        reports, extras = fleet_profile_batched(
+            self.profiler,
+            trace_arrays,
+            [s.telemetry for s in sims],
+            num_fns=num_fns,
+            duration=duration,
+            return_extras=True,
+        )
+        mem = jnp.asarray([s.mem_gb for s in self.registry.specs], jnp.float32)
+        out = []
+        step_seconds = self.profiler.config.step_windows * self.profiler.config.delta
+        for i, (trace, sim, report) in enumerate(zip(traces, sims, reports)):
+            # No tracker at all when the trace was too short for Kalman steps
+            # (per-node fallback): an attached-but-never-fed tracker would
+            # report 0 J/invocation as if it were a measurement.
+            tracker = None
+            if extras is not None:
+                tracker = StreamingFootprintTracker(
+                    num_fns, idle_watts=sim.telemetry.idle_watts
+                )
+                # Seed with the init segment (X_0 estimate) so functions
+                # active only early still carry their energy...
+                tracker.observe_step(
+                    np.asarray(extras.result.x0[i]),
+                    np.asarray(extras.init_busy_seconds[i]),
+                    np.asarray(extras.init_invocations[i]),
+                    extras.init_seconds,
+                )
+                # ...then stream each Kalman step's update.
+                traj = np.asarray(extras.result.x_trajectory[i])
+                busy = np.asarray(extras.inputs.c[i].sum(axis=1))  # (S, M_aug) s
+                a_steps = np.asarray(extras.inputs.a[i])
+                for j in range(traj.shape[0]):
+                    tracker.observe_step(traj[j], busy[j], a_steps[j], step_seconds)
+            prices = price_report(
+                report.spectrum.j_indiv,
+                report.spectrum.j_total,
+                report.invocations,
+                report.mean_latency,
+                mem,
+                self.pricing,
+            )
+            out.append(
+                ProfiledWorkload(
+                    report=report, sim=sim, trace=trace, prices=prices,
+                    footprint_stream=tracker,
+                )
+            )
+        return out
 
     def marginal_energy(self, trace: InvocationTrace, fn: int, *, seed: int | None = None) -> float:
         """Paper Eq. 6 ground truth via the measured (coarse) energy totals."""

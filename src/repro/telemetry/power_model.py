@@ -68,14 +68,21 @@ class NodePowerModel:
                 np.add.at(cp, idx[ok], w_power)
         return cp
 
-    def system_power(self, activity: np.ndarray, cp_power: np.ndarray) -> np.ndarray:
-        """(T,) true full-system power."""
-        p_dyn = activity @ self.dyn_power_w
+    def system_power(
+        self, activity: np.ndarray, cp_power: np.ndarray, *, p_dyn: np.ndarray | None = None
+    ) -> np.ndarray:
+        """(T,) true full-system power.  ``p_dyn`` lets the fleet simulator
+        pass the dynamic-power contraction it already batched over nodes."""
+        if p_dyn is None:
+            p_dyn = activity @ self.dyn_power_w
         return self.config.idle_w + self._compress(p_dyn) + cp_power
 
-    def chip_power(self, activity: np.ndarray, cp_power: np.ndarray) -> np.ndarray:
+    def chip_power(
+        self, activity: np.ndarray, cp_power: np.ndarray, *, p_cpu: np.ndarray | None = None
+    ) -> np.ndarray:
         """(T,) true chip power (what a RAPL-like sensor measures)."""
-        p_cpu = activity @ (self.dyn_power_w * self.cpu_frac)
+        if p_cpu is None:
+            p_cpu = activity @ (self.dyn_power_w * self.cpu_frac)
         return self.config.chip_idle_w + self._compress(p_cpu) + cp_power
 
     def cp_cpu_fraction(self, cp_power: np.ndarray) -> np.ndarray:

@@ -100,16 +100,20 @@ def sense(
 
 
 def resample_to_windows(signal: PowerSignal, num_windows: int, delta: float) -> np.ndarray:
-    """(N,) mean power per delta window (energy-preserving resampling)."""
-    out = np.empty(num_windows, np.float64)
+    """(N,) mean power per delta window (energy-preserving resampling).
+
+    Vectorized: per-window means come from a cumulative sum over the sample
+    stream; empty windows (sensor slower than the window) hold the previous
+    window's value via an index-forward-fill, seeded at the first sample.
+    """
     edges = np.arange(num_windows + 1) * delta
     idx = np.searchsorted(signal.times, edges)
-    last = signal.watts[0] if len(signal.watts) else 0.0
-    for i in range(num_windows):
-        lo, hi = idx[i], idx[i + 1]
-        if hi > lo:
-            out[i] = float(np.mean(signal.watts[lo:hi]))
-            last = out[i]
-        else:
-            out[i] = last  # hold when the sensor is slower than the window
-    return out
+    counts = idx[1:] - idx[:-1]
+    csum = np.concatenate([[0.0], np.cumsum(signal.watts, dtype=np.float64)])
+    means = (csum[idx[1:]] - csum[idx[:-1]]) / np.maximum(counts, 1)
+    seed = signal.watts[0] if len(signal.watts) else 0.0
+    filled = counts > 0
+    # forward-fill empty windows with the last filled window's mean
+    src = np.maximum.accumulate(np.where(filled, np.arange(num_windows), -1))
+    out = np.where(src >= 0, means[np.maximum(src, 0)], seed)
+    return out.astype(np.float64)

@@ -1,0 +1,248 @@
+"""Fleet-batched disaggregation engine vs the sequential oracle.
+
+The batched engine (``core.batched_engine``) must reproduce the seed's
+per-node/per-step reference pipeline: every test here pins a batched result
+against ``run_fleet_sequential`` (Python loops over ``kalman_step``) or
+checks a Shapley axiom directly on the batched outputs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batched_engine import (
+    EngineConfig,
+    FleetInputs,
+    fleet_spectrum,
+    pack_fleet_inputs,
+    run_fleet,
+    run_fleet_gram,
+    run_fleet_sequential,
+    synthetic_fleet,
+)
+
+
+def _fleet(b, s, n_w, m, seed=0, density=0.2):
+    return synthetic_fleet(b, s, n_w, m, seed=seed, density=density)
+
+
+# Acceptance shape first: 64 functions x 256 ticks per node.
+FLEET_SHAPES = [(2, 8, 32, 64, 0), (3, 5, 20, 10, 1), (1, 4, 16, 8, 2)]
+
+
+@pytest.mark.parametrize("b,s,n_w,m,seed", FLEET_SHAPES)
+def test_batched_matches_sequential(b, s, n_w, m, seed):
+    """Batched == sequential reference within 1e-5 on randomized fleets."""
+    inputs = _fleet(b, s, n_w, m, seed)
+    cfg = EngineConfig()
+    seq = run_fleet_sequential(inputs, cfg)
+    bat = run_fleet(inputs, cfg)
+    assert float(jnp.max(jnp.abs(bat.x0 - seq.x0))) < 1e-5
+    assert float(jnp.max(jnp.abs(bat.x_final - seq.x_final))) < 1e-5
+    assert float(jnp.max(jnp.abs(bat.x_trajectory - seq.x_trajectory))) < 1e-5
+    assert float(jnp.max(jnp.abs(bat.tick_power - seq.tick_power))) < 1e-4
+
+
+@pytest.mark.parametrize("b,s,n_w,m,seed", FLEET_SHAPES)
+def test_gram_engine_matches_sequential(b, s, n_w, m, seed):
+    """The gram-hoisted scan reproduces the same update rule (the window
+    statistics are reduced in one pass, so only float reassociation moves)."""
+    inputs = _fleet(b, s, n_w, m, seed)
+    cfg = EngineConfig(backend="xla")
+    seq = run_fleet_sequential(inputs, cfg)
+    gram = run_fleet_gram(inputs, cfg)
+    assert float(jnp.max(jnp.abs(gram.x_final - seq.x_final))) < 5e-5
+    assert float(jnp.max(jnp.abs(gram.x_trajectory - seq.x_trajectory))) < 5e-5
+
+
+def test_conservation_per_tick():
+    """Efficiency per tick: per-function attributed power sums to the
+    measured total in every tick (the unattributed channel holds ticks with
+    no running function)."""
+    inputs = _fleet(3, 6, 16, 12, seed=3)
+    res = run_fleet(inputs, EngineConfig())
+    b = inputs.c.shape[0]
+    measured = inputs.w.reshape(b, -1)
+    recon = res.tick_power.sum(-1) + res.unattributed
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(measured), atol=1e-3)
+    # unattributed is only ever nonzero where nothing ran
+    busy = inputs.c.sum(-1).reshape(b, -1) > 0
+    assert float(jnp.max(jnp.abs(jnp.where(busy, res.unattributed, 0.0)))) == 0.0
+
+
+def test_shapley_symmetry_batched():
+    """Functions with identical contributions and stats get identical
+    footprints on the batched path (§4.4 property 3).
+
+    With exact twin columns the gram is singular along the (x_1 - x_5)
+    direction, so the split between twins is determined only up to solver
+    noise — the paper's symmetry is explicitly best-effort.  The tolerance
+    here (1e-3 relative) is ~30x tighter than the paper's few-percent
+    footprint accuracy."""
+    inputs = _fleet(2, 4, 16, 8, seed=4)
+    # make functions 1 and 5 exact twins
+    c = inputs.c.at[..., 5].set(inputs.c[..., 1])
+    a = inputs.a.at[..., 5].set(inputs.a[..., 1])
+    ls = inputs.lat_sum.at[..., 5].set(inputs.lat_sum[..., 1])
+    lq = inputs.lat_sumsq.at[..., 5].set(inputs.lat_sumsq[..., 1])
+    twin = FleetInputs(c=c, w=inputs.w, a=a, lat_sum=ls, lat_sumsq=lq)
+    res = run_fleet(twin, EngineConfig())
+    np.testing.assert_allclose(
+        np.asarray(res.x_final[:, 1]), np.asarray(res.x_final[:, 5]),
+        rtol=1e-3, atol=1e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.tick_power[..., 1]), np.asarray(res.tick_power[..., 5]),
+        rtol=1e-3, atol=1e-3,
+    )
+
+
+def test_shapley_dummy_batched():
+    """A function that never runs gets exactly zero everywhere (§4.4
+    property 2, by construction of C)."""
+    inputs = _fleet(2, 4, 16, 8, seed=5)
+    dead = 3
+    c = inputs.c.at[..., dead].set(0.0)
+    a = inputs.a.at[..., dead].set(0.0)
+    ls = inputs.lat_sum.at[..., dead].set(0.0)
+    lq = inputs.lat_sumsq.at[..., dead].set(0.0)
+    res = run_fleet(
+        FleetInputs(c=c, w=inputs.w, a=a, lat_sum=ls, lat_sumsq=lq), EngineConfig()
+    )
+    assert float(jnp.max(jnp.abs(res.x_final[:, dead]))) == 0.0
+    assert float(jnp.max(jnp.abs(res.tick_power[..., dead]))) == 0.0
+
+
+def test_fleet_spectrum_efficiency_and_null():
+    """Batched spectrum assembly keeps the §4.4 axioms per node."""
+    b, m = 3, 5
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(np.abs(rng.standard_normal((b, m))) * 10, jnp.float32)
+    lat = jnp.asarray(np.abs(rng.standard_normal((b, m))) + 0.1, jnp.float32)
+    inv = jnp.asarray(rng.integers(0, 5, (b, m)), jnp.float32)
+    inv = inv.at[:, 2].set(0.0)  # a null player on every node
+    cp = jnp.asarray(rng.uniform(0, 50, b), jnp.float32)
+    idle = jnp.asarray(rng.uniform(0, 200, b), jnp.float32)
+    spec = fleet_spectrum(x, lat, inv, cp, idle)
+    # efficiency per node: totals = individual + cp + idle
+    want = spec.j_indiv.sum(-1) + cp + idle
+    got = spec.j_total.sum(-1)
+    has_active = np.asarray(inv.sum(-1)) > 0
+    np.testing.assert_allclose(
+        np.asarray(got)[has_active], np.asarray(want)[has_active], rtol=1e-5
+    )
+    # null player per node
+    assert float(jnp.max(jnp.abs(spec.j_total[:, 2]))) == 0.0
+
+
+def test_pack_fleet_inputs_shapes():
+    b, n, m, step = 2, 37, 4, 10
+    rng = np.random.default_rng(7)
+    c = jnp.asarray(rng.random((b, n, m)), jnp.float32)
+    w = jnp.asarray(rng.random((b, n)), jnp.float32)
+    a = jnp.asarray(rng.integers(0, 3, (b, n, m)), jnp.float32)
+    packed = pack_fleet_inputs(c, w, a, a * 0.5, a * 0.25, step_windows=step)
+    assert packed.c.shape == (b, 3, step, m)
+    assert packed.w.shape == (b, 3, step)
+    assert packed.a.shape == (b, 3, m)
+    # step invocation counts are sums over the step's windows
+    np.testing.assert_allclose(
+        np.asarray(packed.a[:, 0]), np.asarray(a[:, :step].sum(axis=1))
+    )
+
+
+def test_gram_engine_pallas_backend_interpret():
+    """backend='pallas' works off-TPU via interpret mode (tiny shapes —
+    interpret runs at Python speed)."""
+    inputs = _fleet(2, 2, 8, 4, seed=9)
+    cfg_p = EngineConfig(backend="pallas")
+    cfg_x = EngineConfig(backend="xla")
+    rp = run_fleet_gram(inputs, cfg_p)
+    rx = run_fleet_gram(inputs, cfg_x)
+    np.testing.assert_allclose(
+        np.asarray(rp.x_final), np.asarray(rx.x_final), atol=1e-4
+    )
+
+
+def test_kernel_nnls_interpret_matches_reference():
+    """Pallas-kernel per-tick solve (interpret mode) == the plain solver."""
+    from repro.core.disaggregation import solve_nnls
+    from repro.kernels.disagg_solve import disagg_solve_nnls
+
+    rng = np.random.default_rng(8)
+    g_b, n, m = 2, 32, 8
+    c = jnp.asarray(np.abs(rng.standard_normal((g_b, n, m))), jnp.float32)
+    w = jnp.asarray(np.abs(rng.standard_normal((g_b, n))) * 10, jnp.float32)
+    got = disagg_solve_nnls(c, w, 1e-3, iters=100, interpret=True)
+    for i in range(g_b):
+        want = solve_nnls(c[i], w[i], 1e-3, iters=100)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want), atol=1e-4)
+
+
+def test_fleet_profiler_matches_per_node():
+    """fleet_profile_batched reproduces the per-node profiler pipeline."""
+    from repro.core.profiler import (
+        FaasMeterProfiler,
+        ProfilerConfig,
+        fleet_profile_batched,
+    )
+    from repro.telemetry.simulator import NodeSimulator, SimulatorConfig
+    from repro.workload.azure import WorkloadConfig, generate_trace
+    from repro.workload.functions import paper_functions
+
+    reg = paper_functions()
+    sim = NodeSimulator(reg, SimulatorConfig())
+    profiler = FaasMeterProfiler(ProfilerConfig(init_windows=60, step_windows=30))
+    traces = [
+        generate_trace(reg, WorkloadConfig(duration_s=180.0, load=1.0, seed=s))
+        for s in (1, 2)
+    ]
+    sims = sim.simulate_fleet(traces, seeds=[11, 12])
+    arrays = [
+        (jnp.asarray(t.fn_id), jnp.asarray(t.start), jnp.asarray(t.end)) for t in traces
+    ]
+    fleet = fleet_profile_batched(
+        profiler, arrays, [s.telemetry for s in sims],
+        num_fns=traces[0].num_fns, duration=traces[0].duration,
+    )
+    for (f, st, en), tel, rep in zip(arrays, [s.telemetry for s in sims], fleet):
+        single = profiler.profile(
+            f, st, en, num_fns=traces[0].num_fns,
+            duration=traces[0].duration, telemetry=tel,
+        )
+        np.testing.assert_allclose(
+            np.asarray(rep.x_power), np.asarray(single.x_power), atol=1e-3
+        )
+        assert rep.total_error == pytest.approx(single.total_error, abs=1e-5)
+
+
+def test_streaming_footprints_fleet():
+    """profile_fleet streams per-invocation footprints without recompute."""
+    from repro.serving.control_plane import EnergyFirstControlPlane
+    from repro.workload.azure import WorkloadConfig, generate_trace
+    from repro.workload.functions import paper_functions
+
+    reg = paper_functions()
+    cp = EnergyFirstControlPlane(reg)
+    traces = [
+        generate_trace(reg, WorkloadConfig(duration_s=180.0, load=1.0, seed=s))
+        for s in (3, 4)
+    ]
+    out = cp.profile_fleet(traces, seeds=[21, 22])
+    assert len(out) == 2
+    for prof in out:
+        tr = prof.footprint_stream
+        # init segment + at least one Kalman step
+        assert tr is not None and tr.steps_seen >= 2
+        per_inv = tr.per_invocation_indiv
+        assert per_inv.shape == (traces[0].num_fns,)
+        assert np.all(per_inv >= 0.0)
+        # functions with zero observed invocations have zero footprint
+        assert np.all(per_inv[tr.invocations == 0] == 0.0)
+        # the tracker covers init window + steps (all but the ragged tail),
+        # so its cumulative energy must be the bulk of the report's
+        # individual energy, and every function the report bills must have
+        # a nonzero streaming footprint (init-only functions included)
+        j_report = np.asarray(prof.report.spectrum.j_indiv)
+        assert tr.j_indiv.sum() > 0.5 * j_report.sum()
+        assert np.all(tr.invocations[j_report > 1.0] > 0)

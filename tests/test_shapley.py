@@ -1,9 +1,14 @@
-"""Shapley-value fair-attribution properties (paper §4.4) — property-based."""
+"""Shapley-value fair-attribution properties (paper §4.4) — property-based.
+
+The randomized property tests use ``hypothesis`` when it is installed (the
+``hypothesis`` marker / dev dependency); a deterministic parametrized
+fallback below covers the same axioms so the module never hard-fails on a
+missing dev dependency.
+"""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
 from repro.core.footprints import assemble_spectrum
 from repro.core.shapley import (
@@ -13,45 +18,36 @@ from repro.core.shapley import (
     total_footprint,
 )
 
-arrays = st.integers(2, 12).flatmap(
-    lambda m: st.tuples(
-        st.just(m),
-        st.lists(st.integers(0, 50), min_size=m, max_size=m),
-        st.floats(0.0, 1e4),
-        st.floats(0.0, 1e4),
-    )
-)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on dev environment
+    HAVE_HYPOTHESIS = False
 
 
-@settings(max_examples=50, deadline=None)
-@given(arrays)
-def test_efficiency_and_null_player(data):
+def _check_efficiency_and_null_player(invocations, cp_energy, idle_energy):
     """Shares sum to the shared energy; inactive functions get zero."""
-    m, invocations, cp_energy, idle_energy = data
     a = jnp.asarray(invocations, jnp.float32)
     active = a > 0
     phi_cp = shapley_control_plane_share(jnp.asarray(cp_energy), a)
     phi_idle = shapley_idle_share(jnp.asarray(idle_energy), active)
     if int(jnp.sum(a)) > 0:
-        assert float(jnp.sum(phi_cp)) == np.float32(cp_energy) * 1.0 or abs(
-            float(jnp.sum(phi_cp)) - cp_energy
-        ) <= 1e-3 * max(cp_energy, 1.0)
+        assert abs(float(jnp.sum(phi_cp)) - cp_energy) <= 1e-3 * max(cp_energy, 1.0)
         assert abs(float(jnp.sum(phi_idle)) - idle_energy) <= 1e-3 * max(idle_energy, 1.0)
-    # null player
     for i, inv in enumerate(invocations):
         if inv == 0:
             assert float(phi_cp[i]) == 0.0
             assert float(phi_idle[i]) == 0.0
 
 
-@settings(max_examples=50, deadline=None)
-@given(arrays)
-def test_symmetry(data):
+def _check_symmetry(invocations, cp_energy, idle_energy):
     """Identical functions (same invocation counts) get identical shares."""
-    m, invocations, cp_energy, idle_energy = data
     a = jnp.asarray(invocations, jnp.float32)
     phi_cp = np.asarray(shapley_control_plane_share(jnp.asarray(cp_energy), a))
     phi_idle = np.asarray(shapley_idle_share(jnp.asarray(idle_energy), a > 0))
+    m = len(invocations)
     for i in range(m):
         for j in range(i + 1, m):
             if invocations[i] == invocations[j]:
@@ -59,13 +55,7 @@ def test_symmetry(data):
                 assert phi_idle[i] == phi_idle[j]
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    st.lists(st.integers(0, 20), min_size=3, max_size=6),
-    st.floats(0.0, 100.0), st.floats(0.0, 100.0),
-    st.floats(0.0, 100.0), st.floats(0.0, 100.0),
-)
-def test_linearity(invocations, cp1, cp2, idle1, idle2):
+def _check_linearity(invocations, cp1, cp2, idle1, idle2):
     """Shares from split shared resources add up (property 4)."""
     a = jnp.asarray(invocations, jnp.float32)
     active = a > 0
@@ -77,6 +67,76 @@ def test_linearity(invocations, cp1, cp2, idle1, idle2):
     i2 = shapley_idle_share(jnp.asarray(idle2), active)
     i12 = shapley_idle_share(jnp.asarray(idle1 + idle2), active)
     np.testing.assert_allclose(np.asarray(i1 + i2), np.asarray(i12), rtol=1e-5, atol=1e-4)
+
+
+if HAVE_HYPOTHESIS:
+    arrays = st.integers(2, 12).flatmap(
+        lambda m: st.tuples(
+            st.just(m),
+            st.lists(st.integers(0, 50), min_size=m, max_size=m),
+            st.floats(0.0, 1e4),
+            st.floats(0.0, 1e4),
+        )
+    )
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=50, deadline=None)
+    @given(arrays)
+    def test_efficiency_and_null_player(data):
+        m, invocations, cp_energy, idle_energy = data
+        _check_efficiency_and_null_player(invocations, cp_energy, idle_energy)
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=50, deadline=None)
+    @given(arrays)
+    def test_symmetry(data):
+        m, invocations, cp_energy, idle_energy = data
+        _check_symmetry(invocations, cp_energy, idle_energy)
+
+    @pytest.mark.hypothesis
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.lists(st.integers(0, 20), min_size=3, max_size=6),
+        st.floats(0.0, 100.0), st.floats(0.0, 100.0),
+        st.floats(0.0, 100.0), st.floats(0.0, 100.0),
+    )
+    def test_linearity(invocations, cp1, cp2, idle1, idle2):
+        _check_linearity(invocations, cp1, cp2, idle1, idle2)
+
+
+# -- deterministic fallbacks: same axioms, fixed seeds (always run) ----------
+
+_SEEDS = [0, 1, 2, 3, 4]
+
+
+def _random_case(seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(2, 13))
+    invocations = rng.integers(0, 51, size=m).tolist()
+    cp_energy = float(rng.uniform(0.0, 1e4))
+    idle_energy = float(rng.uniform(0.0, 1e4))
+    return invocations, cp_energy, idle_energy
+
+
+@pytest.mark.parametrize("seed", _SEEDS)
+def test_efficiency_and_null_player_parametrized(seed):
+    _check_efficiency_and_null_player(*_random_case(seed))
+
+
+@pytest.mark.parametrize("seed", _SEEDS)
+def test_symmetry_parametrized(seed):
+    invocations, cp_energy, idle_energy = _random_case(seed)
+    # force at least one identical pair so symmetry is actually exercised
+    invocations = invocations + [invocations[0]]
+    _check_symmetry(invocations, cp_energy, idle_energy)
+
+
+@pytest.mark.parametrize("seed", _SEEDS)
+def test_linearity_parametrized(seed):
+    rng = np.random.default_rng(seed)
+    invocations = rng.integers(0, 21, size=int(rng.integers(3, 7))).tolist()
+    cp1, cp2, idle1, idle2 = rng.uniform(0.0, 100.0, size=4).tolist()
+    _check_linearity(invocations, cp1, cp2, idle1, idle2)
 
 
 def test_total_footprint_eq4():
