@@ -25,6 +25,7 @@ MODULES = [
     ("fig10_capping", "Fig 10: software power capping"),
     ("fig11_neighbors", "Fig 11: noisy neighbors"),
     ("profiler_overhead", "Perf: fleet profiler throughput"),
+    ("streaming_overhead", "Perf: streaming engine per-tick overhead"),
     ("kernel_bench", "Perf: kernel path"),
 ]
 

@@ -1,0 +1,108 @@
+"""Streaming engine overhead: per-tick dispatch vs the amortized segment cost.
+
+The streaming step (``fleet_step``) does the same total math as the segment
+engine — gram accumulation every tick, the Kalman/NNLS update once per step
+boundary (``lax.cond``) — but pays one jitted dispatch per tick instead of
+one per segment.  The acceptance bar for going online is that this dispatch
+tax stays within 2x of the segment engine's amortized per-tick cost at
+fleet-controller scale (B nodes x M functions, paper-default 60-tick steps).
+
+Metrics:
+
+- ``seg_us_per_tick``      : run_fleet wall-clock / T (the amortized bar)
+- ``stream_us_per_tick``   : mean per-tick latency of the jitted step loop
+- ``stream_p99_us``        : p99 tick latency (boundary ticks pay the NNLS)
+- ``overhead_ratio``       : stream mean / segment amortized (accept <= 2)
+- ``stream_traces``        : jit cache entries used by the loop (must be 1;
+  reported as -1 if the private jit cache counter is unavailable)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.batched_engine import (
+    EngineConfig,
+    fleet_initial_estimate,
+    fleet_step,
+    fleet_stream_init,
+    fleet_ticks,
+    run_fleet,
+    synthetic_fleet,
+)
+
+
+def run(quick: bool = True) -> dict:
+    # Fleet-controller scale: B nodes x M functions, paper-default 60-tick
+    # steps.  Per-tick dispatch is a fixed tax, so the streaming engine is
+    # benchmarked where it is meant to run — a controller spanning a fleet —
+    # not on a toy shape where dispatch dwarfs the math.
+    b, s, n_w, m = (64, 6, 60, 128) if quick else (64, 20, 60, 128)
+    t_total = s * n_w
+    inputs = synthetic_fleet(b, s, n_w, m, seed=0)
+    cfg = EngineConfig()
+
+    # --- segment engine: one batched call for the whole segment.
+    def segment():
+        return run_fleet(inputs, cfg, with_ticks=True)
+
+    jax.block_until_ready(segment())  # compile
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        out = segment()
+    jax.block_until_ready(out)
+    seg_s = (time.perf_counter() - t0) / reps
+
+    # --- streaming engine: T jitted dispatches, state donated throughout.
+    ticks = fleet_ticks(inputs)
+    tick_list = [jax.tree.map(lambda l: l[t], ticks) for t in range(t_total)]
+    jax.block_until_ready(tick_list)
+
+    def stream(record=None):
+        x0 = fleet_initial_estimate(inputs.c, inputs.w, cfg)
+        state = fleet_stream_init(x0, n_w, cfg)
+        jax.block_until_ready(state)
+        for t in range(t_total):
+            t1 = time.perf_counter()
+            state, att = fleet_step(state, tick_list[t], config=cfg)
+            jax.block_until_ready(att.x)
+            if record is not None:
+                record.append(time.perf_counter() - t1)
+        return state
+
+    # Private jit API; absent on some JAX versions — degrade to -1, the
+    # retracing *behavior* is what the test suite pins.
+    cache_size = getattr(fleet_step, "_cache_size", lambda: None)
+    traces_before = cache_size()
+    jax.block_until_ready(stream())  # compile
+    lat: list[float] = []
+    t0 = time.perf_counter()
+    final = stream(record=lat)
+    jax.block_until_ready(final)
+    stream_s = time.perf_counter() - t0
+
+    lat_us = np.asarray(lat) * 1e6
+    seg_us = seg_s / t_total * 1e6
+    stream_us = float(lat_us.mean())
+    return {
+        "fleet_shape": f"B{b} S{s} n_w{n_w} M{m}",
+        "ticks": t_total,
+        "seg_us_per_tick": seg_us,
+        "stream_us_per_tick": stream_us,
+        "stream_p50_us": float(np.percentile(lat_us, 50)),
+        "stream_p99_us": float(np.percentile(lat_us, 99)),
+        "stream_total_s": stream_s,
+        "overhead_ratio": stream_us / seg_us,
+        "stream_traces": (
+            cache_size() - traces_before if traces_before is not None else -1
+        ),
+    }
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k:24s} {v:.4g}" if isinstance(v, float) else f"{k:24s} {v}")

@@ -12,5 +12,26 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== collection check (zero tolerance for import errors) =="
 python -m pytest -q --collect-only >/dev/null
 
+echo "== docs check (README/docs present, public engine API documented) =="
+for f in README.md docs/architecture.md docs/streaming.md; do
+  [ -f "$f" ] || { echo "missing $f"; exit 1; }
+done
+python - <<'EOF'
+import inspect
+import repro.core.batched_engine as eng
+
+missing = []
+for name, obj in vars(eng).items():
+    if name.startswith("_") or not callable(obj):
+        continue
+    if getattr(obj, "__module__", eng.__name__) not in (eng.__name__, None):
+        continue  # re-exported from elsewhere (kalman, footprints, ...)
+    if not inspect.getdoc(obj):
+        missing.append(name)
+if missing:
+    raise SystemExit(f"public symbols without docstrings in core.batched_engine: {missing}")
+print(f"docs check OK ({eng.__name__}: all public symbols documented)")
+EOF
+
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"

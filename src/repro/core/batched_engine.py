@@ -18,6 +18,19 @@ steps of ``n_w`` windows) filters in **one** jitted call —
                              nodes and steps calling ``kalman_step``.  Tests
                              pin the batched paths against it; benchmarks
                              time the batched paths against it.
+    ``fleet_step``           the *streaming* engine: one jitted
+                             ``(FleetStreamState, FleetStep) ->
+                             (FleetStreamState, TickAttribution)`` update per
+                             telemetry tick.  Gram/rhs/innovation statistics
+                             accumulate inside the carried state and the
+                             Kalman update fires at step boundaries via
+                             ``lax.cond``, so the control plane can meter,
+                             price, and cap *live* instead of replaying a
+                             finished segment (docs/streaming.md).
+    ``run_fleet_stream``     the segment path re-expressed as ``lax.scan``
+                             over the same step function — one code path for
+                             online and offline, pinned against ``run_fleet``
+                             and the sequential oracle.
 
 Per-tick attribution (``FleetResult.tick_power``) redistributes each tick's
 measured active power over the functions running in it, proportional to
@@ -29,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -40,6 +54,7 @@ from repro.core.kalman import (
     KalmanState,
     kalman_init,
     kalman_step,
+    kalman_step_gram,
     precompute_step_inputs,
     run_kalman,
     run_kalman_fleet,
@@ -52,6 +67,12 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Engine-wide configuration (hashable: doubles as a static jit arg).
+
+    The same config drives all engine paths — segment, gram-hoisted, and
+    streaming — so a pinned comparison never mixes hyperparameters.
+    """
+
     kalman: KalmanConfig = KalmanConfig()
     delta: float = 1.0          # tick (window) length in seconds
     backend: str = "auto"       # auto | xla | pallas: gram-assembly backend
@@ -60,6 +81,7 @@ class EngineConfig:
 
     @property
     def init_lam(self) -> float:
+        """Ridge used for the initial X_0 solve (defaults to the Kalman's)."""
         return (
             self.kalman.ridge_lambda
             if self.init_ridge_lambda is None
@@ -78,6 +100,13 @@ class FleetInputs(NamedTuple):
 
 
 class FleetResult(NamedTuple):
+    """Output of one fleet disaggregation (any engine path).
+
+    ``tick_power``/``unattributed`` are None when computed with
+    ``with_ticks=False``; otherwise ``tick_power.sum(-1) + unattributed``
+    reproduces the measured per-tick power exactly (efficiency per tick).
+    """
+
     x_final: Array        # (B, M) final per-function power estimate (W)
     x_trajectory: Array   # (B, S, M) per-step estimates
     x0: Array             # (B, M) whole-trace initial estimate
@@ -292,6 +321,24 @@ def run_fleet_sequential(
     )
 
 
+def _conserved_split(raw: Array, w: Array, delta: float) -> tuple[Array, Array]:
+    """Split measured power ``w`` proportional to estimated draw ``raw``.
+
+    ``raw`` is (..., M) estimated joules per tick, ``w`` the matching (...)
+    measured watts.  Returns (tick_power, unattributed) with
+    ``tick_power.sum(-1) + unattributed == w`` by construction — the single
+    source of the conservation invariant, shared by the segment engine's
+    ``tick_attribution`` and the streaming step's live attribution so the
+    two cannot drift.  Ticks with vanishing predicted draw go to the
+    unattributed channel: dividing by them would destroy the conservation
+    invariant instead of enforcing it.
+    """
+    pred = jnp.sum(raw, axis=-1) / delta                # (...) watts
+    has = pred > 1e-9
+    scale = jnp.where(has, w / jnp.where(has, pred, 1.0), 0.0)
+    return (raw / delta) * scale[..., None], jnp.where(has, 0.0, w)
+
+
 @functools.partial(jax.jit, static_argnames=("delta",))
 def tick_attribution(
     c: Array,      # (B, S, n_w, M)
@@ -310,15 +357,275 @@ def tick_attribution(
     """
     b, s, n_w, m = c.shape
     raw = c * traj[:, :, None, :]                       # (B, S, n_w, M) joules
-    pred = jnp.sum(raw, axis=-1) / delta                # (B, S, n_w) watts
-    # Ticks with vanishing predicted draw go to the unattributed channel:
-    # dividing by them would destroy the conservation invariant instead of
-    # enforcing it.
-    has = pred > 1e-9
-    scale = jnp.where(has, w / jnp.where(has, pred, 1.0), 0.0)
-    tick_power = (raw / delta) * scale[..., None]
-    unattributed = jnp.where(has, 0.0, w)
+    tick_power, unattributed = _conserved_split(raw, w, delta)
     return tick_power.reshape(b, s * n_w, m), unattributed.reshape(b, s * n_w)
+
+
+# ---------------------------------------------------------------------------
+# Streaming incremental engine: one jitted update per telemetry tick.
+# ---------------------------------------------------------------------------
+
+
+class FleetStep(NamedTuple):
+    """Inputs for ONE telemetry tick (delta window) across the fleet.
+
+    Shapes: B nodes x M functions.  ``a``/``lat_sum``/``lat_sumsq`` carry the
+    invocations *starting* in this tick; the engine only reads their running
+    sums at Kalman-step boundaries, so any within-step placement that sums to
+    the per-step statistics is equivalent (``fleet_ticks`` puts each step's
+    totals on its first tick when replaying segment inputs).
+    """
+
+    c: Array          # (B, M) contribution seconds within this tick
+    w: Array          # (B,)   idle-adjusted active power this tick (W)
+    a: Array          # (B, M) invocations starting in this tick
+    lat_sum: Array    # (B, M) summed latency of those invocations (s)
+    lat_sumsq: Array  # (B, M) summed squared latency (s^2)
+
+
+class FleetStreamState(NamedTuple):
+    """Carried state of the streaming engine (the state-carry contract).
+
+    Everything the per-tick update needs lives here — the batched Kalman
+    filter state, a ring buffer of the current partial step's ticks, and the
+    running invocation/latency statistics.  The jitted ``fleet_step``
+    donates this state, so in steady streaming every buffer is updated in
+    place and a tick is O(B M): two in-place row writes plus element-wise
+    accumulation.  The O(B M^2) gram assembly and the NNLS/Kalman update run
+    only at step boundaries (inside ``lax.cond``), contracting the full
+    buffer with the *same* einsum as the segment gram engine — which is what
+    keeps the streaming trajectory pinned to the segment paths.
+
+    Invariants (see docs/streaming.md):
+      - ``tick_in_step`` in [0, n_w); rows [0, tick_in_step) of
+        ``c_buf``/``w_buf`` hold the current partial step (rows beyond it
+        are stale — fully overwritten before the next boundary reads them);
+      - ``a``/``lat_sum``/``lat_sumsq`` accumulate the partial step and are
+        zeroed at each boundary;
+      - ``step_idx`` counts completed Kalman steps.
+    """
+
+    kalman: KalmanState  # batched filter state, leading node axis B
+    c_buf: Array         # (B, n_w, M) contribution rows of the partial step
+    w_buf: Array         # (B, n_w)    power ticks of the partial step
+    a: Array             # (B, M)      invocations so far in partial step
+    lat_sum: Array       # (B, M)
+    lat_sumsq: Array     # (B, M)
+    tick_in_step: Array  # ()          int32 ticks in the partial step
+    step_idx: Array      # ()          int32 completed Kalman steps
+
+
+class TickAttribution(NamedTuple):
+    """Live per-tick output of the streaming engine.
+
+    ``tick_power`` is the *causal* conserved attribution: this tick's
+    measured power split over the functions running in it, proportional to
+    ``c * x`` under the latest available estimate (post-update on boundary
+    ticks, the carried estimate mid-step).  It satisfies
+    ``tick_power.sum(-1) + unattributed == w`` by construction — the same
+    efficiency property as the segment engine's ``tick_attribution``, which
+    differs only in using the step's final estimate for *all* its ticks
+    (smoothed-within-step; see docs/streaming.md).
+    """
+
+    tick_power: Array     # (B, M) conserved per-tick power (W)
+    unattributed: Array   # (B,)   power in ticks with no activity (W)
+    x: Array              # (B, M) estimate after processing this tick (W)
+    step_completed: Array  # ()    bool: did this tick close a Kalman step
+
+
+def fleet_stream_init(
+    x0: Array, n_w: int, config: EngineConfig = EngineConfig()
+) -> FleetStreamState:
+    """Initial streaming state from a (B, M) whole-trace estimate X_0.
+
+    Args:
+      x0: (B, M) initial estimate — from ``fleet_initial_estimate`` over the
+        init segment (§4.2), a previous session's final state, or another
+        node's estimate (warm handoff).
+      n_w: ticks per Kalman step (sizes the partial-step ring buffer; must
+        match the ``n_w`` later passed to ``fleet_step``).
+      config: engine configuration.
+
+    Returns:
+      ``FleetStreamState`` with an empty partial step.
+    """
+    b, m = x0.shape
+    zf = functools.partial(jnp.zeros, dtype=jnp.float32)
+    # Copy x0: the returned state is donated by ``fleet_step``, and the
+    # filter's initial x would otherwise alias the caller's buffer.
+    x0 = jnp.array(x0, jnp.float32, copy=True)
+    return FleetStreamState(
+        kalman=_init_states(x0),
+        c_buf=zf((b, n_w, m)),
+        w_buf=zf((b, n_w)),
+        a=zf((b, m)),
+        lat_sum=zf((b, m)),
+        lat_sumsq=zf((b, m)),
+        tick_in_step=jnp.zeros((), jnp.int32),
+        step_idx=jnp.zeros((), jnp.int32),
+    )
+
+
+def _fleet_step_impl(
+    state: FleetStreamState,
+    step: FleetStep,
+    config: EngineConfig,
+) -> tuple[FleetStreamState, TickAttribution]:
+    """One streaming tick: buffer the tick, update at step boundaries.
+
+    The step length n_w is the ring buffer's static shape
+    (``state.c_buf.shape[1]``, fixed by ``fleet_stream_init``).  Mid-step
+    ticks are O(B M): the tick's contribution/power rows are written in
+    place into the carried ring buffer (the donated state makes these true
+    in-place updates) and the invocation/latency sums accumulate.  Every
+    ``n_w``-th tick closes the step behind ``lax.cond`` — only the taken
+    branch executes — reducing the full buffer through the segment gram
+    engine's own ``precompute_step_inputs`` and running the batched
+    gram-domain Kalman update: the same update rule as ``run_fleet_gram``.
+    """
+    kcfg = config.kalman
+    n_w = state.c_buf.shape[1]
+    c_buf = jax.lax.dynamic_update_index_in_dim(
+        state.c_buf, step.c, state.tick_in_step, axis=1
+    )
+    w_buf = jax.lax.dynamic_update_index_in_dim(
+        state.w_buf, step.w, state.tick_in_step, axis=1
+    )
+    a = state.a + step.a
+    lat_sum = state.lat_sum + step.lat_sum
+    lat_sumsq = state.lat_sumsq + step.lat_sumsq
+    tick = state.tick_in_step + 1
+    boundary = tick >= n_w
+
+    acc = (a, lat_sum, lat_sumsq)
+
+    def do_update(operand):
+        kal, (a, ls, lq) = operand
+        inp = precompute_step_inputs(c_buf, w_buf, a, ls, lq, kcfg)
+        kal, _ = jax.vmap(lambda st, i: kalman_step_gram(st, i, kcfg))(kal, inp)
+        return kal, jax.tree.map(jnp.zeros_like, (a, ls, lq))
+
+    def no_update(operand):
+        return operand
+
+    kal, acc = jax.lax.cond(boundary, do_update, no_update, (state.kalman, acc))
+    a, lat_sum, lat_sumsq = acc
+
+    # Causal conserved attribution under the freshest estimate.
+    tick_power, unattributed = _conserved_split(step.c * kal.x, step.w, config.delta)
+    att = TickAttribution(
+        tick_power=tick_power,
+        unattributed=unattributed,
+        x=kal.x,
+        step_completed=boundary,
+    )
+    new_state = FleetStreamState(
+        kalman=kal, c_buf=c_buf, w_buf=w_buf,
+        a=a, lat_sum=lat_sum, lat_sumsq=lat_sumsq,
+        tick_in_step=jnp.where(boundary, 0, tick),
+        step_idx=state.step_idx + boundary.astype(jnp.int32),
+    )
+    return new_state, att
+
+
+fleet_step = functools.partial(
+    jax.jit, static_argnames=("config",), donate_argnums=(0,)
+)(_fleet_step_impl)
+fleet_step.__doc__ = """Jitted streaming tick update (donates ``state``).
+
+``fleet_step(state, step, config=...)`` — the live metering hot path.
+``config`` is static and the step length n_w comes from the state's ring
+buffer shape (set by ``fleet_stream_init``), so there is one trace per
+(fleet shape, config) pair, reused for every subsequent tick; the
+retracing guard in tests/test_streaming_engine.py pins this.  The input
+``state`` is donated — its buffers are reused for the output state, so the
+caller must rebind (``state, att = fleet_step(state, step, ...)``) and must
+not touch the old state afterwards.
+"""
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def _scan_stream(
+    state: FleetStreamState, ticks: FleetStep, config: EngineConfig
+) -> tuple[FleetStreamState, TickAttribution]:
+    """``lax.scan`` of the streaming step over time-major (T, B, ...) ticks."""
+
+    def body(st, tk):
+        return _fleet_step_impl(st, tk, config)
+
+    return jax.lax.scan(body, state, ticks)
+
+
+def fleet_ticks(inputs: FleetInputs) -> FleetStep:
+    """Explode segment inputs into a time-major (T, B, ...) tick stream.
+
+    Inverse of the (B, S, n_w) step grouping: T = S * n_w ticks, with each
+    step's invocation/latency statistics placed on its first tick (the
+    engine only reads their sums at boundaries, so placement is free).
+    Feed the result to ``lax.scan`` (``run_fleet_stream``) or slice ticks
+    off it to drive ``fleet_step`` one dispatch at a time.
+    """
+    b, s, n_w, m = inputs.c.shape
+    zeros = jnp.zeros((b, s, n_w, m), inputs.a.dtype)
+    a_t = zeros.at[:, :, 0, :].set(inputs.a)
+    ls_t = zeros.at[:, :, 0, :].set(inputs.lat_sum)
+    lq_t = zeros.at[:, :, 0, :].set(inputs.lat_sumsq)
+    tm = lambda x: jnp.moveaxis(x.reshape((b, s * n_w) + x.shape[3:]), 0, 1)
+    return FleetStep(
+        c=tm(inputs.c), w=tm(inputs.w), a=tm(a_t), lat_sum=tm(ls_t), lat_sumsq=tm(lq_t)
+    )
+
+
+def run_fleet_stream(
+    inputs: FleetInputs,
+    config: EngineConfig = EngineConfig(),
+    *,
+    init_c: Array | None = None,
+    init_w: Array | None = None,
+    with_ticks: bool = True,
+) -> FleetResult:
+    """The segment engine re-expressed as a scan over the streaming step.
+
+    Same contract as ``run_fleet``: X_0 from one batched NNLS over the init
+    block, then ``lax.scan`` of ``_fleet_step_impl`` over all T = S * n_w
+    ticks — the *identical* code path the online ``fleet_step`` runs, so the
+    streaming engine is pinned to the segment engines by construction.  The
+    returned trajectory collects the boundary-tick estimates; ``tick_power``
+    uses the segment engine's smoothed-within-step attribution for
+    comparability (the causal live variant is what ``fleet_step`` emits).
+
+    Args:
+      inputs: (B, S, n_w, M) step-grouped fleet batch.
+      config: engine configuration (``backend`` is ignored here — streaming
+        accumulation is tick-wise by definition).
+      init_c/init_w: optional dedicated init block for X_0 (profiler-style);
+        defaults to the whole segment.
+      with_ticks: also compute (B, T, M) conserved per-tick attribution.
+
+    Returns:
+      ``FleetResult`` with ``state`` holding the final *Kalman* state of the
+      stream (identical pytree to the other engines').
+    """
+    x0 = fleet_initial_estimate(
+        inputs.c if init_c is None else init_c,
+        inputs.w if init_w is None else init_w,
+        config,
+    )
+    b, s, n_w, m = inputs.c.shape
+    state0 = fleet_stream_init(x0, n_w, config)
+    final, att = _scan_stream(state0, fleet_ticks(inputs), config)
+    # Boundary ticks carry each step's post-update estimate: the trajectory.
+    traj = jnp.moveaxis(att.x.reshape(s, n_w, b, m)[:, -1], 1, 0)  # (B, S, M)
+    tick_power = unattributed = None
+    if with_ticks:
+        tick_power, unattributed = tick_attribution(
+            inputs.c, inputs.w, traj, delta=config.delta
+        )
+    return FleetResult(
+        x_final=final.kalman.x, x_trajectory=traj, x0=x0,
+        tick_power=tick_power, unattributed=unattributed, state=final.kalman,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -374,8 +681,23 @@ def pack_fleet_inputs(
     *,
     step_windows: int,
 ) -> FleetInputs:
-    """Group per-window arrays into (B, S, n_w, ...) Kalman-step blocks,
-    truncating the ragged tail (mirrors the per-node profiler's behavior)."""
+    """Group per-window arrays into (B, S, n_w, ...) Kalman-step blocks.
+
+    The ragged tail (``N mod step_windows`` windows) is truncated, mirroring
+    the per-node profiler's behavior; a ``UserWarning`` reports how many
+    ticks were dropped.  Full ragged-fleet support (per-node window counts
+    via padding + masks) is a ROADMAP item — see the "Padding, truncation,
+    and ragged fleets" section of docs/architecture.md.
+
+    Args:
+      c_windows/w_windows: (B, N, M)/(B, N) per-window contributions/power.
+      a_windows/lat_sum_w/lat_sumsq_w: (B, N, M) per-window invocation
+        counts and latency moments (summed into per-step statistics).
+      step_windows: n_w, ticks per Kalman step.
+
+    Returns:
+      ``FleetInputs`` with S = N // step_windows steps.
+    """
     b, n, m = c_windows.shape
     s = n // step_windows
     if s == 0:
@@ -383,6 +705,14 @@ def pack_fleet_inputs(
             f"need at least step_windows={step_windows} windows, got {n}"
         )
     n_used = s * step_windows
+    if n_used < n:
+        warnings.warn(
+            f"pack_fleet_inputs: dropping {n - n_used} ragged-tail tick(s) "
+            f"per node ({n} windows, step_windows={step_windows}); ragged "
+            "fleets are not yet supported (docs/architecture.md)",
+            UserWarning,
+            stacklevel=2,
+        )
     return FleetInputs(
         c=c_windows[:, :n_used].reshape(b, s, step_windows, m),
         w=w_windows[:, :n_used].reshape(b, s, step_windows),

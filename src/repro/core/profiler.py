@@ -49,6 +49,13 @@ class Telemetry(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class ProfilerConfig:
+    """Profiler hyperparameters (paper §6 defaults).
+
+    ``init_windows``/``step_windows`` fix the N_init initial-estimate block
+    and the N_K Kalman step length, in delta-sized windows; ``mode``
+    selects pure disaggregation or the combined CPU-counter model (§4.3).
+    """
+
     delta: float = 1.0             # disaggregation window (s), paper default
     init_windows: int = 100        # N_init ~ 100 s initial estimate (§6)
     step_windows: int = 60         # N_K = 60 s Kalman steps (§6)
@@ -60,6 +67,13 @@ class ProfilerConfig:
 
 
 class FootprintReport(NamedTuple):
+    """One node's profiling outcome for an accounting segment (§4.4).
+
+    Produced by every profiling path through the shared
+    ``_finalize_report``; ``total_error`` is the internal-validity metric
+    (reconstruction vs the synchronized signal), not a ground-truth error.
+    """
+
     spectrum: FootprintSpectrum      # per-function energy spectrum (M,)
     x_power: Array                   # (M,) final per-function power (watts)
     x_trajectory: Array              # (S, M) Kalman trajectory
@@ -70,6 +84,93 @@ class FootprintReport(NamedTuple):
     total_error: float               # internal-validity Total-Error
     cp_energy: float                 # control-plane energy over segment (J)
     idle_energy: float               # idle energy over segment (J)
+
+
+def segment_plan(cfg: ProfilerConfig, duration: float) -> tuple[int, int, int, int]:
+    """Window accounting for one profiling segment, shared by every path.
+
+    Returns ``(n_windows, init_n, s, n_used)``: total delta windows, the
+    N_init initial-estimate block, the number of full Kalman steps after
+    it, and the windows actually consumed (``init_n + s * step_windows`` —
+    the ragged tail past it feeds no Kalman update).  The per-node
+    ``FaasMeterProfiler.profile``, ``fleet_profile_batched``,
+    ``StreamingFleetSession``, and the control plane's ``profile_fleet``
+    fallback logic all derive their plan from here so they cannot disagree.
+    """
+    n_windows = int(round(duration / cfg.delta))
+    init_n = min(cfg.init_windows, n_windows)
+    s = max((n_windows - init_n) // cfg.step_windows, 0)
+    return n_windows, init_n, s, init_n + s * cfg.step_windows
+
+
+def _finalize_report(
+    *,
+    x_fns: Array,          # (M,) final per-function power (combined-adjusted)
+    x_cp: Array,           # scalar: control-plane power estimate
+    x0: Array,             # (M_aug,) initial whole-trace estimate
+    traj: Array,           # (S', M_aug) Kalman trajectory (x0[None] if S == 0)
+    c_aug: Array,          # (N, M_aug) contribution matrix incl. principals
+    c_steps: Array | None,  # (S, n_w, M_aug) step-grouped contributions
+    w_sys: Array,          # (N,) synchronized raw system signal
+    offset,                # scalar or (N,): reconstruction offset (idle/combined)
+    init_n: int,
+    s: int,
+    step_windows: int,
+    counts: Array,         # (M,) invocation counts over the segment
+    mean_lat: Array,       # (M,) mean latency per function
+    cp_col: Array | None,  # (N,) control-plane contribution column
+    idle_watts: float,
+    duration: float,
+    skew: float,
+) -> FootprintReport:
+    """Profiler steps 5-6, shared by ALL disaggregation paths (§4.3-§4.4).
+
+    Per-node, batched-segment, and streaming profiling produce the same
+    (x_fns, trajectory, contribution) tuple through different engines; this
+    single finalizer turns it into a ``FootprintReport`` — control-plane and
+    idle energy, the Shapley footprint spectrum, the time-varying W_hat
+    reconstruction, and the internal-validity Total-Error — so the three
+    paths cannot drift (the ROADMAP's shared-finalization item; equivalence
+    is pinned in tests/test_streaming_engine.py).
+
+    The reconstruction uses the *time-varying* estimates (X_0 over the init
+    window, then each Kalman step's X) and scores against the synchronized
+    raw signal — comparing against the raw lagged series would charge the
+    sensor's reporting delay to the model.
+    """
+    cp_energy = float(x_cp * jnp.sum(cp_col)) if cp_col is not None else 0.0
+    idle_energy = idle_watts * duration
+    spectrum = assemble_spectrum(
+        x_fns, mean_lat, counts, jnp.asarray(cp_energy), jnp.asarray(idle_energy)
+    )
+
+    w_hat_init = c_aug[:init_n] @ x0 + (
+        offset[:init_n] if hasattr(offset, "shape") else offset
+    )
+    parts = [w_hat_init]
+    if s > 0:
+        per_step = jnp.einsum("snm,sm->sn", c_steps, traj).reshape(-1)
+        off_steps = (
+            offset[init_n : init_n + s * step_windows]
+            if hasattr(offset, "shape")
+            else offset
+        )
+        parts.append(per_step + off_steps)
+    w_hat = jnp.concatenate([jnp.atleast_1d(p) for p in parts])
+    n_hat = w_hat.shape[0]
+    terr = float(total_power_error(w_sys[:n_hat], w_hat))
+    return FootprintReport(
+        spectrum=spectrum,
+        x_power=x_fns,
+        x_trajectory=traj,
+        x_cp=x_cp,
+        mean_latency=mean_lat,
+        invocations=counts,
+        skew_windows=skew,
+        total_error=terr,
+        cp_energy=cp_energy,
+        idle_energy=idle_energy,
+    )
 
 
 def _per_fn_latency_stats(fn_id, start, end, num_fns):
@@ -119,8 +220,7 @@ class FaasMeterProfiler:
           counter_model: trained LinearPowerModel (combined mode only).
         """
         cfg = self.config
-        delta = cfg.delta
-        n_windows = int(round(duration / delta))
+        n_windows, init_n, s, n_used = segment_plan(cfg, duration)
 
         # --- 1+2. Sync + contribution assembly (shared with the fleet path).
         w_sys, skew, c, c_aug, cp_col = self._prep_node(
@@ -130,12 +230,9 @@ class FaasMeterProfiler:
 
         # --- 3+4. Initial disaggregation + Kalman trajectory.
         target = self._target_signal(w_sys, telemetry)
-        init_n = min(cfg.init_windows, n_windows)
         x0 = disaggregate(c_aug[:init_n], target[:init_n], cfg.disagg)
 
-        s = max((n_windows - init_n) // cfg.step_windows, 0)
         if s > 0:
-            n_used = init_n + s * cfg.step_windows
             c_steps = c_aug[init_n:n_used].reshape(s, cfg.step_windows, m_aug)
             w_steps = target[init_n:n_used].reshape(s, cfg.step_windows)
             a_steps, lat_sums, lat_sumsqs = self._per_step_stats(
@@ -160,49 +257,46 @@ class FaasMeterProfiler:
         else:
             x_fns = x_final[:num_fns]
 
-        # --- 6. Shapley spectrum.
+        # --- 5+6. Shared finalization: spectrum + W_hat + Total-Error.
         counts, mean_lat, _, _ = _per_fn_latency_stats(fn_id, start, end, num_fns)
         x_cp = x_final[num_fns] if cp_col is not None else jnp.asarray(0.0)
-        cp_energy = float(x_cp * jnp.sum(cp_col)) if cp_col is not None else 0.0
-        idle_energy = telemetry.idle_watts * duration
-        spectrum = assemble_spectrum(
-            x_fns, mean_lat, counts, jnp.asarray(cp_energy), jnp.asarray(idle_energy)
-        )
-
-        # Internal validity: reconstruct W_hat(t) from the *time-varying*
-        # estimates (X_0 over the init window, then each Kalman step's X).
         offset = telemetry.idle_watts
         if cfg.mode == "combined":
             offset = telemetry.chip_power[:n_windows] + self._rest_idle(telemetry)
-        w_hat_init = c_aug[:init_n] @ x0 + (
-            offset[:init_n] if hasattr(offset, "shape") else offset
+        return _finalize_report(
+            x_fns=x_fns, x_cp=x_cp, x0=x0, traj=traj,
+            c_aug=c_aug, c_steps=c_steps if s > 0 else None,
+            w_sys=w_sys, offset=offset,
+            init_n=init_n, s=s, step_windows=cfg.step_windows,
+            counts=counts, mean_lat=mean_lat, cp_col=cp_col,
+            idle_watts=telemetry.idle_watts, duration=duration, skew=skew,
         )
-        parts = [w_hat_init]
-        if s > 0:
-            per_step = jnp.einsum("snm,sm->sn", c_steps, traj).reshape(-1)
-            off_steps = (
-                offset[init_n : init_n + s * cfg.step_windows]
-                if hasattr(offset, "shape")
-                else offset
-            )
-            parts.append(per_step + off_steps)
-        w_hat = jnp.concatenate([jnp.atleast_1d(p) for p in parts])
-        n_hat = w_hat.shape[0]
-        # Total-Error against the *synchronized* signal — the prediction
-        # targets the de-skewed series (comparing against the raw lagged
-        # signal would charge the sensor's reporting delay to the model).
-        terr = float(total_power_error(w_sys[:n_hat], w_hat))
-        return FootprintReport(
-            spectrum=spectrum,
-            x_power=x_fns,
-            x_trajectory=traj,
-            x_cp=x_cp,
-            mean_latency=mean_lat,
-            invocations=counts,
-            skew_windows=skew,
-            total_error=terr,
-            cp_energy=cp_energy,
-            idle_energy=idle_energy,
+
+    def start_fleet_stream(
+        self,
+        traces: list[tuple[Array, Array, Array]],
+        *,
+        num_fns: int,
+        duration: float,
+        idle_watts,
+        has_chip: bool,
+        has_cp: bool,
+        on_tick=None,
+        on_bootstrap=None,
+    ) -> "StreamingFleetSession":
+        """Open an online profiling session for a fleet (docs/streaming.md).
+
+        The streaming counterpart of ``fleet_profile_batched``: returns a
+        ``StreamingFleetSession`` to be fed one telemetry window at a time
+        via ``push_window``; ``finalize`` yields the same per-node
+        ``FootprintReport`` list.  Raises ``ValueError`` for configurations
+        the streaming engine does not cover (combined mode, non-default
+        disaggregation, segments too short for a Kalman step).
+        """
+        return StreamingFleetSession(
+            self, traces, num_fns=num_fns, duration=duration,
+            idle_watts=idle_watts, has_chip=has_chip, has_cp=has_cp,
+            on_tick=on_tick, on_bootstrap=on_bootstrap,
         )
 
     def _prep_node(self, fn_id, start, end, telemetry, num_fns, n_windows):
@@ -249,11 +343,21 @@ class FaasMeterProfiler:
         chip_floor = float(jnp.min(telemetry.chip_power))
         return max(telemetry.idle_watts - chip_floor, 0.0)
 
-    def _per_step_stats(self, fn_id, start, end, num_fns, m_aug, init_n, s, cp_col):
-        """Per-Kalman-step invocation counts + latency moments, by start time."""
+    def _per_step_stats(
+        self, fn_id, start, end, num_fns, m_aug, init_n, s, cp_col,
+        *, step_windows: int | None = None,
+    ):
+        """Per-Kalman-step invocation counts + latency moments, by start time.
+
+        ``step_windows`` overrides the config's step size; the streaming
+        session passes 1 to get *per-window* statistics (summing them over a
+        step's windows reproduces the per-step values, which is what makes
+        the tick-fed engine equivalent to the segment engines).
+        """
         cfg = self.config
+        sw = cfg.step_windows if step_windows is None else step_windows
         t_begin = init_n * cfg.delta
-        step_len = cfg.step_windows * cfg.delta
+        step_len = sw * cfg.delta
         step_idx = jnp.floor((start - t_begin) / step_len).astype(jnp.int32)
         valid = (fn_id >= 0) & (step_idx >= 0) & (step_idx < s)
         seg = jnp.where(valid, step_idx * num_fns + jnp.clip(fn_id, 0, num_fns - 1), s * num_fns)
@@ -298,15 +402,372 @@ def fleet_profile(
     ]
 
 
-class FleetExtras(NamedTuple):
-    """Engine-level by-products of ``fleet_profile_batched`` that streaming
-    consumers (``serving.control_plane``) fold into per-invocation state."""
+class StreamTick(NamedTuple):
+    """Per-tick record handed to streaming hooks (numpy, ready to consume).
 
-    result: object            # batched_engine.FleetResult
-    inputs: object            # batched_engine.FleetInputs
-    init_busy_seconds: Array  # (B, M_aug) runtime seconds in the init window
-    init_invocations: Array   # (B, M_aug) invocations starting in it
-    init_seconds: float       # length of the init window (s)
+    Emitted by ``StreamingFleetSession`` for every engine tick (window index
+    ``init_n <= t < init_n + s * step_windows``).  All arrays are (B, ...) —
+    node-major — and ``tick_power.sum(-1) + unattributed == target`` holds
+    per tick (conserved causal attribution, see docs/streaming.md).
+    """
+
+    t: int                      # window index of this tick
+    x: np.ndarray               # (B, M_aug) live per-function power estimate (W)
+    tick_power: np.ndarray      # (B, M_aug) conserved per-tick attribution (W)
+    unattributed: np.ndarray    # (B,) power in ticks with no activity (W)
+    busy_seconds: np.ndarray    # (B, M_aug) per-function runtime in this tick (s)
+    a: np.ndarray               # (B, M_aug) invocations starting in this tick
+    target: np.ndarray          # (B,) idle-adjusted power fed to the engine (W)
+    w_sys: np.ndarray           # (B,) synchronized system power (W)
+    step_completed: bool        # did this tick close a Kalman step
+
+
+class StreamingFleetSession:
+    """Online fleet profiling: telemetry in window-by-window, state out live.
+
+    The batched profiler (``fleet_profile_batched``) consumes a *finished*
+    telemetry segment.  This session is the paper's actual operating mode —
+    footprints as a control-plane operation: callers push one delta-window of
+    fleet telemetry at a time (``push_window``); the session bootstraps on
+    the init segment (skew estimate + X_0, §4.2/§5), then advances the
+    streaming engine (``batched_engine.fleet_step``) one jitted call per
+    tick, invoking ``on_tick`` with live conserved attribution so pricing
+    and capping can act *during* the segment.  ``finalize`` produces the
+    same ``FootprintReport`` list as the segment paths, through the shared
+    ``_finalize_report`` — equivalence is pinned in
+    tests/test_streaming_engine.py.
+
+    Synchronization contract: with a chip reference, per-node skew is
+    estimated once over the init segment (the batch profiler estimates over
+    the full segment — a documented difference) and applied causally: tick
+    ``t`` is emitted once raw window ``t + ceil(max(skew, 0))`` has arrived,
+    so a positive sensor lag shows up as a small, bounded reporting delay
+    instead of acausal peeking.  Tail windows are flushed with the batch
+    path's edge clamp at ``finalize``.
+
+    Restrictions (same fleet homogeneity as ``fleet_profile_batched``): pure
+    mode, default NNLS/no_idle disaggregation, equal duration/num_fns across
+    nodes, and at least one full Kalman step after the init window.
+    """
+
+    def __init__(
+        self,
+        profiler: "FaasMeterProfiler",
+        traces: list[tuple[Array, Array, Array]],
+        *,
+        num_fns: int,
+        duration: float,
+        idle_watts,
+        has_chip: bool,
+        has_cp: bool,
+        on_tick=None,
+        on_bootstrap=None,
+    ):
+        """Args:
+          profiler: configured ``FaasMeterProfiler`` (pure mode only).
+          traces: per-node (fn_id, start, end) invocation arrays.
+          num_fns: number of unique functions M.
+          duration: segment length in seconds (fixes the window count).
+          idle_watts: (B,) static idle power per node.
+          has_chip: whether ``push_window`` will carry a chip reference
+            (enables skew estimation).
+          has_cp: whether ``push_window`` will carry control-plane/system
+            CPU fractions (appends the shared principal column, §4.1).
+          on_tick: ``callable(StreamTick)`` invoked per engine tick.
+          on_bootstrap: ``callable(session)`` invoked once after X_0.
+        """
+        from repro.core import batched_engine as eng
+
+        cfg = profiler.config
+        if cfg.mode != "pure":
+            raise ValueError("StreamingFleetSession supports mode='pure' only")
+        if not cfg.disagg.nonneg or cfg.disagg.mode != "no_idle":
+            raise ValueError(
+                "StreamingFleetSession supports the default NNLS/no_idle "
+                "disaggregation config only"
+            )
+        self.profiler = profiler
+        self.cfg = cfg
+        self.eng = eng
+        self.num_fns = num_fns
+        self.duration = float(duration)
+        self.b = len(traces)
+        self.has_chip = has_chip
+        self.has_cp = has_cp
+        self.on_tick = on_tick
+        self.on_bootstrap = on_bootstrap
+
+        self.n_windows, self.init_n, self.s, self.n_used = segment_plan(cfg, duration)
+        if self.s == 0:
+            raise ValueError(
+                "segment too short for a Kalman step; use the per-node path"
+            )
+        self.m_aug = num_fns + (1 if has_cp else 0)
+        self.idle = jnp.asarray(np.asarray(idle_watts, np.float32))
+        self.init_seconds = self.init_n * cfg.delta
+
+        # Static per-node precomputation (the trace is known; telemetry is
+        # what streams): contribution rows and per-window invocation stats.
+        n_post = self.s * cfg.step_windows
+        c_nodes, a_nodes, ls_nodes, lq_nodes = [], [], [], []
+        counts_nodes, lat_nodes, init_a = [], [], []
+        for fn_id, start, end in traces:
+            c_nodes.append(
+                contrib.contribution_matrix(
+                    fn_id, start, end, num_fns=num_fns,
+                    num_windows=self.n_windows, delta=cfg.delta,
+                )
+            )
+            a_w, ls_w, lq_w = profiler._per_step_stats(
+                fn_id, start, end, num_fns, num_fns, self.init_n, n_post,
+                None, step_windows=1,
+            )
+            a_nodes.append(a_w)
+            ls_nodes.append(ls_w)
+            lq_nodes.append(lq_w)
+            counts, mean_lat, _, _ = _per_fn_latency_stats(fn_id, start, end, num_fns)
+            counts_nodes.append(counts)
+            lat_nodes.append(mean_lat)
+            valid = (fn_id >= 0) & (start >= 0) & (start < self.init_seconds)
+            seg = jnp.where(valid, jnp.clip(fn_id, 0, num_fns - 1), num_fns)
+            a0 = jax.ops.segment_sum(
+                valid.astype(jnp.float32), seg, num_segments=num_fns + 1
+            )[:num_fns]
+            if has_cp:
+                a0 = jnp.concatenate([a0, jnp.ones((1,))])
+            init_a.append(a0)
+        self._c_fns = jnp.stack(c_nodes)         # (B, N, M)
+        self._a_win = np.stack([np.asarray(a) for a in a_nodes])    # (B, n_post, M)
+        self._ls_win = np.stack([np.asarray(a) for a in ls_nodes])
+        self._lq_win = np.stack([np.asarray(a) for a in lq_nodes])
+        self.counts = jnp.stack(counts_nodes)
+        self.mean_latency = jnp.stack(lat_nodes)
+        self.init_invocations = jnp.stack(init_a)  # (B, M_aug)
+
+        self._engine_cfg = eng.EngineConfig(
+            kalman=cfg.kalman, delta=cfg.delta,
+            init_iters=cfg.disagg.nnls_iters,
+            init_ridge_lambda=cfg.disagg.ridge_lambda,
+        )
+
+        # Streaming state.
+        self._raw_w = np.zeros((self.n_windows, self.b), np.float32)
+        self._n_raw = 0                          # pushed system windows
+        self._raw_chip: list[np.ndarray] = []
+        self._cp_col: list[np.ndarray] = []      # per-window principal column
+        self._w_sync: list[np.ndarray] = []      # synchronized windows, in order
+        self.skews: np.ndarray | None = None     # (B,) estimated at init_n
+        self._lookahead = 0
+        self.booted = False
+        self.x0: Array | None = None
+        self.init_busy_seconds: Array | None = None
+        self._state = None
+        self._traj: list[Array] = []
+        self._next_tick = self.init_n
+
+    # -- ingestion ---------------------------------------------------------
+
+    def push_window(
+        self,
+        w_sys: np.ndarray,
+        w_chip: np.ndarray | None = None,
+        cp_frac: np.ndarray | None = None,
+        sys_frac: np.ndarray | None = None,
+    ) -> None:
+        """Feed one delta-window of fleet telemetry (all shapes (B,)).
+
+        Windows must arrive in order.  May trigger zero or more engine
+        ticks (``on_tick``) depending on the sync lookahead; the bootstrap
+        (skew + X_0 + ``on_bootstrap``) fires once the init segment and its
+        lookahead are buffered.
+        """
+        if self._n_raw >= self.n_windows:
+            raise ValueError("segment already fully pushed")
+        if self.has_chip and w_chip is None:
+            raise ValueError("session was created with has_chip=True")
+        if self.has_cp and (cp_frac is None or sys_frac is None):
+            raise ValueError("session was created with has_cp=True")
+        self._raw_w[self._n_raw] = np.asarray(w_sys, np.float32).reshape(self.b)
+        self._n_raw += 1
+        if self.has_chip:
+            self._raw_chip.append(np.asarray(w_chip, np.float32).reshape(self.b))
+        if self.has_cp:
+            col = contrib.shared_principal_contribution(
+                jnp.asarray(np.asarray(cp_frac, np.float32)),
+                jnp.asarray(np.asarray(sys_frac, np.float32)),
+                delta=self.cfg.delta,
+            )
+            self._cp_col.append(np.asarray(col, np.float32))
+        self._advance()
+
+    # -- internals ---------------------------------------------------------
+
+    def _synced_window(self, t: int) -> np.ndarray:
+        """(B,) synchronized system power for window ``t`` (``apply_shift``
+        semantics: per-node linear interpolation of ``t + skew``, edges
+        clamped to the segment; the sync lookahead guarantees the needed
+        raw windows have arrived, except at the segment tail where the
+        clamp reproduces the batch path's zero-order hold)."""
+        n = self.n_windows
+        pos = np.clip(t + self.skews, 0.0, n - 1.0)
+        lo = np.floor(pos).astype(np.int64)
+        hi = np.minimum(lo + 1, n - 1)
+        frac = (pos - lo).astype(np.float32)
+        avail = self._n_raw - 1
+        nodes = np.arange(self.b)
+        lo_v = self._raw_w[np.minimum(lo, avail), nodes]
+        hi_v = self._raw_w[np.minimum(hi, avail), nodes]
+        return lo_v * (np.float32(1.0) - frac) + hi_v * frac
+
+    def _advance(self) -> None:
+        cfg = self.cfg
+        raw_count = self._n_raw
+        if self.skews is None and raw_count >= self.init_n:
+            if self.has_chip:
+                w_arr = self._raw_w[: self.init_n]               # (init_n, B)
+                r_arr = np.stack(self._raw_chip[: self.init_n])
+                self.skews = np.asarray(
+                    [
+                        float(
+                            syncmod.estimate_skew(
+                                jnp.asarray(w_arr[:, i]), jnp.asarray(r_arr[:, i]),
+                                max_shift=cfg.sync_max_shift,
+                            )
+                        )
+                        for i in range(self.b)
+                    ]
+                )
+            else:
+                self.skews = np.zeros(self.b)
+            self._lookahead = int(np.ceil(max(float(np.max(self.skews)), 0.0)))
+        if self.skews is None:
+            return
+        if not self.booted:
+            if raw_count < min(self.init_n + self._lookahead, self.n_windows):
+                return
+            self._bootstrap()
+        lim = min(self.n_used, self.n_windows)
+        while self._next_tick < lim and self._n_raw >= min(
+            self._next_tick + self._lookahead + 1, self.n_windows
+        ):
+            self._process_tick(self._next_tick)
+            self._next_tick += 1
+
+    def _bootstrap(self) -> None:
+        """Init-segment solve: synchronized windows 0..init_n-1 -> X_0."""
+        eng = self.eng
+        for t in range(self.init_n):
+            self._w_sync.append(self._synced_window(t))
+        w_init = jnp.asarray(np.stack(self._w_sync, axis=1))       # (B, init_n)
+        target = jnp.maximum(w_init - self.idle[:, None], 0.0)
+        init_c = self._c_aug_block(0, self.init_n)                 # (B, init_n, M_aug)
+        self.x0 = eng.fleet_initial_estimate(init_c, target, self._engine_cfg)
+        self.init_busy_seconds = init_c.sum(axis=1)
+        self._state = eng.fleet_stream_init(
+            self.x0, self.cfg.step_windows, self._engine_cfg
+        )
+        self.booted = True
+        if self.on_bootstrap is not None:
+            self.on_bootstrap(self)
+
+    def _c_aug_block(self, lo: int, hi: int) -> Array:
+        """(B, hi-lo, M_aug) contribution rows with the principal appended."""
+        block = self._c_fns[:, lo:hi]
+        if not self.has_cp:
+            return block
+        col = jnp.asarray(np.stack(self._cp_col[lo:hi], axis=1))   # (B, hi-lo)
+        return jnp.concatenate([block, col[:, :, None]], axis=2)
+
+    def _process_tick(self, t: int) -> None:
+        cfg = self.cfg
+        w_sync = self._synced_window(t)
+        self._w_sync.append(w_sync)
+        target = jnp.maximum(jnp.asarray(w_sync) - self.idle, 0.0)
+        c_t = self._c_fns[:, t]
+        j = t - self.init_n
+        a_t = self._a_win[:, j]
+        ls_t = self._ls_win[:, j]
+        lq_t = self._lq_win[:, j]
+        if self.has_cp:
+            c_t = jnp.concatenate([c_t, jnp.asarray(self._cp_col[t])[:, None]], axis=1)
+            # The principal's one pseudo-invocation per step, on its first tick.
+            p = np.full((self.b, 1), 1.0 if j % cfg.step_windows == 0 else 0.0, np.float32)
+            a_t = np.concatenate([a_t, p], axis=1)
+            z = np.zeros((self.b, 1), np.float32)
+            ls_t = np.concatenate([ls_t, z], axis=1)
+            lq_t = np.concatenate([lq_t, z], axis=1)
+        step = self.eng.FleetStep(
+            c=c_t, w=target,
+            a=jnp.asarray(a_t), lat_sum=jnp.asarray(ls_t), lat_sumsq=jnp.asarray(lq_t),
+        )
+        self._state, att = self.eng.fleet_step(self._state, step, config=self._engine_cfg)
+        completed = bool(att.step_completed)
+        if completed:
+            self._traj.append(att.x)
+        if self.on_tick is not None:
+            self.on_tick(
+                StreamTick(
+                    t=t,
+                    x=np.asarray(att.x),
+                    tick_power=np.asarray(att.tick_power),
+                    unattributed=np.asarray(att.unattributed),
+                    busy_seconds=np.asarray(c_t),
+                    a=np.asarray(a_t),
+                    target=np.asarray(target),
+                    w_sys=w_sync,
+                    step_completed=completed,
+                )
+            )
+
+    # -- completion --------------------------------------------------------
+
+    def finalize(self) -> list[FootprintReport]:
+        """Close the segment and build per-node reports.
+
+        Requires the full ``n_windows`` segment to have been pushed (the
+        sync lookahead then unlocks every remaining tick).  Runs the shared
+        ``_finalize_report`` per node — the same steps 5-6 as the per-node
+        and batched-segment paths.
+        """
+        if self._n_raw < self.n_windows:
+            raise ValueError(
+                f"finalize needs the full segment: got {self._n_raw} of "
+                f"{self.n_windows} windows"
+            )
+        self._advance()
+        assert self._next_tick == self.n_used and len(self._traj) == self.s
+        cfg = self.cfg
+        traj = jnp.moveaxis(jnp.stack(self._traj), 0, 1)           # (B, S, M_aug)
+        x_final = self._state.kalman.x
+        w_sys = jnp.asarray(np.stack(self._w_sync, axis=1))        # (B, n_used)
+        c_aug = self._c_aug_block(0, self.n_windows)
+        cp_col = (
+            jnp.asarray(np.stack(self._cp_col, axis=1)) if self.has_cp else None
+        )
+        idle = np.asarray(self.idle)
+        reports = []
+        for i in range(self.b):
+            reports.append(
+                _finalize_report(
+                    x_fns=x_final[i, : self.num_fns],
+                    x_cp=x_final[i, self.num_fns] if self.has_cp else jnp.asarray(0.0),
+                    x0=self.x0[i],
+                    traj=traj[i],
+                    c_aug=c_aug[i],
+                    c_steps=c_aug[i, self.init_n : self.n_used].reshape(
+                        self.s, cfg.step_windows, self.m_aug
+                    ),
+                    w_sys=w_sys[i],
+                    offset=float(idle[i]),
+                    init_n=self.init_n, s=self.s, step_windows=cfg.step_windows,
+                    counts=self.counts[i], mean_lat=self.mean_latency[i],
+                    cp_col=cp_col[i] if self.has_cp else None,
+                    idle_watts=float(idle[i]),
+                    duration=self.duration,
+                    skew=float(self.skews[i]),
+                )
+            )
+        return reports
 
 
 def fleet_profile_batched(
@@ -316,16 +777,16 @@ def fleet_profile_batched(
     *,
     num_fns: int,
     duration: float,
-    return_extras: bool = False,
-):
-    """Profile a whole fleet through the batched disaggregation engine.
+) -> list[FootprintReport]:
+    """Profile a whole fleet through the batched *segment* engine.
 
     Per-node work is limited to contribution-matrix assembly (jitted,
     shape-stable, cached across nodes) and the cheap window-sized sync; the
     initial solve, the full Kalman trajectory, and the footprint spectra
     for all B nodes run as fleet-wide batched calls
     (``core.batched_engine``).  Pure mode only — combined mode stays on the
-    per-node path.
+    per-node path.  The *online* counterpart (live per-tick state instead
+    of a finished segment) is ``StreamingFleetSession``.
     """
     from repro.core import batched_engine as eng
 
@@ -340,17 +801,13 @@ def fleet_profile_batched(
             "disaggregation config only"
         )
     delta = cfg.delta
-    n_windows = int(round(duration / delta))
-    init_n = min(cfg.init_windows, n_windows)
-    s = max((n_windows - init_n) // cfg.step_windows, 0)
+    n_windows, init_n, s, n_used = segment_plan(cfg, duration)
     if s == 0:
         # Too short for a Kalman trajectory: the per-node path handles the
         # init-only case already.
-        reports = fleet_profile(
+        return fleet_profile(
             profiler, traces, telemetries, num_fns=num_fns, duration=duration
         )
-        return (reports, None) if return_extras else reports
-    n_used = init_n + s * cfg.step_windows
 
     # The batch stacks per-node matrices, so the fleet must be homogeneous
     # in shape: every node either has a control-plane principal or none.
@@ -410,72 +867,28 @@ def fleet_profile_batched(
         with_ticks=False,
     )
 
-    # Batched footprint spectra (step 6) for the whole fleet at once.
-    counts_all = jnp.stack(counts_nodes)
-    mean_lat_all = jnp.stack(mean_lat_nodes)
+    # Steps 5-6 through the shared finalizer, per node (the heavy math —
+    # init solve + Kalman — already ran fleet-batched above; finalization is
+    # window-sized and shared with the per-node and streaming paths so the
+    # three cannot drift).
     has_cp = cp_cols[0] is not None
-    x_cp_all = result.x_final[:, num_fns] if has_cp else jnp.zeros((b,))
-    cp_energy_all = (
-        x_cp_all * jnp.stack([jnp.sum(col) for col in cp_cols])
-        if has_cp
-        else jnp.zeros((b,))
-    )
-    idle_energy_all = jnp.asarray(
-        [tel.idle_watts * duration for tel in telemetries], jnp.float32
-    )
-    spectra = eng.fleet_spectrum(
-        result.x_final[:, :num_fns], mean_lat_all, counts_all,
-        cp_energy_all, idle_energy_all,
-    )
-
-    # Internal validity per node from the time-varying reconstruction.
-    w_hat_init = jnp.einsum("bnm,bm->bn", c_all[:, :init_n], result.x0)
-    w_hat_steps = jnp.einsum("bsnm,bsm->bsn", inputs.c, result.x_trajectory)
-    w_hat = jnp.concatenate([w_hat_init, w_hat_steps.reshape(b, -1)], axis=1)
-    idle_col = jnp.asarray([tel.idle_watts for tel in telemetries], jnp.float32)
-    w_hat = w_hat + idle_col[:, None]
-
     reports = []
     for i in range(b):
-        # Total-Error against the *synchronized raw* signal, exactly as the
-        # per-node profiler does (target + idle would silently clamp quiet
-        # windows where sensor noise dips below idle).
-        terr = float(total_power_error(w_sys_nodes[i][:n_used], w_hat[i]))
         reports.append(
-            FootprintReport(
-                spectrum=jax.tree.map(lambda l: l[i], spectra),
-                x_power=result.x_final[i, :num_fns],
-                x_trajectory=result.x_trajectory[i],
-                x_cp=x_cp_all[i],
-                mean_latency=mean_lat_all[i],
-                invocations=counts_all[i],
-                skew_windows=skews[i],
-                total_error=terr,
-                cp_energy=float(cp_energy_all[i]),
-                idle_energy=float(idle_energy_all[i]),
+            _finalize_report(
+                x_fns=result.x_final[i, :num_fns],
+                x_cp=result.x_final[i, num_fns] if has_cp else jnp.asarray(0.0),
+                x0=result.x0[i],
+                traj=result.x_trajectory[i],
+                c_aug=c_all[i],
+                c_steps=inputs.c[i],
+                w_sys=w_sys_nodes[i],
+                offset=telemetries[i].idle_watts,
+                init_n=init_n, s=s, step_windows=cfg.step_windows,
+                counts=counts_nodes[i], mean_lat=mean_lat_nodes[i],
+                cp_col=cp_cols[i],
+                idle_watts=telemetries[i].idle_watts,
+                duration=duration, skew=skews[i],
             )
         )
-    if return_extras:
-        # Init-segment stats so streaming consumers can account the init
-        # window too (otherwise functions active only early read 0 J).
-        init_busy = c_all[:, :init_n].sum(axis=1)            # (B, M_aug)
-        init_a_nodes = []
-        t_init = init_n * delta
-        for fn_id, start, _end in traces:
-            valid = (fn_id >= 0) & (start >= 0) & (start < t_init)
-            seg = jnp.where(valid, jnp.clip(fn_id, 0, num_fns - 1), num_fns)
-            a_init = jax.ops.segment_sum(
-                valid.astype(jnp.float32), seg, num_segments=num_fns + 1
-            )[:num_fns]
-            if m_aug > num_fns:  # principals: one pseudo-invocation, as in steps
-                a_init = jnp.concatenate([a_init, jnp.ones((m_aug - num_fns,))])
-            init_a_nodes.append(a_init)
-        extras = FleetExtras(
-            result=result,
-            inputs=inputs,
-            init_busy_seconds=init_busy,
-            init_invocations=jnp.stack(init_a_nodes),
-            init_seconds=t_init,
-        )
-        return reports, extras
     return reports

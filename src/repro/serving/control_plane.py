@@ -6,6 +6,11 @@ footprints -> pricing/capping, in two execution substrates:
 - ``EnergyFirstControlPlane.profile_trace``: trace-driven (invocations carry
   their latencies; power comes from the telemetry simulator).  All paper
   benchmarks run through this — the profiler sees only degraded signals.
+- ``EnergyFirstControlPlane.profile_fleet``: the *streaming* fleet path —
+  telemetry is fed window-by-window into a ``StreamingFleetSession``, each
+  engine tick updates every node's ``StreamingFootprintTracker`` live, and
+  the ``on_tick`` hook exposes conserved per-tick attribution for online
+  pricing/capping (docs/streaming.md, examples/stream_energy.py).
 - ``EnergyFirstControlPlane.run_capped``: discrete-event execution under a
   software power cap (paper Fig. 10): arrivals queue, the head of the queue
   is admitted iff ``W*t + J_lambda <= W_cap*t`` using live FaasMeter
@@ -28,7 +33,8 @@ from repro.core.profiler import (
     FaasMeterProfiler,
     FootprintReport,
     ProfilerConfig,
-    fleet_profile_batched,
+    fleet_profile,
+    segment_plan,
 )
 from repro.telemetry.simulator import NodeSimulator, SimResult, SimulatorConfig
 from repro.workload.functions import FunctionRegistry
@@ -39,6 +45,13 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass
 class ProfiledWorkload:
+    """One node's profiling outcome: report + simulation + prices.
+
+    ``footprint_stream`` is the node's live-fed footprint tracker when the
+    workload went through the streaming fleet path (None on the per-node /
+    short-segment fallbacks).
+    """
+
     report: FootprintReport
     sim: SimResult
     trace: InvocationTrace
@@ -51,10 +64,13 @@ class StreamingFootprintTracker:
 
     The seed recomputed the whole footprint spectrum from scratch whenever a
     caller wanted fresh per-invocation numbers.  This tracker instead folds
-    each Kalman step's outputs in as they arrive — O(M) per step — so the
-    control plane can serve per-invocation footprints (for pricing and
-    capping admission) that are always current without any recomputation
-    over history.
+    each observation — a whole Kalman step, or, on the live path, every
+    single telemetry tick — into running footprints in O(M), so the control
+    plane can serve per-invocation footprints (for pricing and capping
+    admission) that are always current without any recomputation over
+    history.  ``profile_fleet`` feeds it *live per tick* from the streaming
+    engine (``observe_tick``); ``observe_step`` remains for coarse feeds
+    (the init-segment seed, or replaying per-step trajectories).
     """
 
     def __init__(self, num_fns: int, idle_watts: float = 0.0):
@@ -63,7 +79,8 @@ class StreamingFootprintTracker:
         self.j_indiv = np.zeros(num_fns)        # cumulative attributed joules
         self.invocations = np.zeros(num_fns)    # cumulative invocation counts
         self.elapsed_s = 0.0
-        self.steps_seen = 0
+        self.steps_seen = 0                     # observations folded in (any kind)
+        self.ticks_seen = 0                     # of which: live per-tick feeds
 
     def observe_step(
         self,
@@ -72,13 +89,37 @@ class StreamingFootprintTracker:
         a_step: np.ndarray,       # (M,) invocations in the step
         step_seconds: float,
     ) -> None:
-        """Fold one Kalman step into the running footprints."""
+        """Fold one Kalman step (or any coarse observation) into the state.
+
+        Args:
+          x_step: (M+,) per-function power estimate for the interval (W);
+            entries past ``num_fns`` (shared principals) are ignored.
+          busy_seconds: (M+,) per-function runtime within the interval (s).
+          a_step: (M+,) invocations starting in the interval.
+          step_seconds: interval length (s), for the idle-energy share.
+        """
         self.j_indiv += np.asarray(busy_seconds[: self.num_fns], float) * np.asarray(
             x_step[: self.num_fns], float
         )
         self.invocations += np.asarray(a_step[: self.num_fns], float)
         self.elapsed_s += step_seconds
         self.steps_seen += 1
+
+    def observe_tick(
+        self,
+        x_tick: np.ndarray,
+        busy_seconds: np.ndarray,
+        a_tick: np.ndarray,
+        tick_seconds: float,
+    ) -> None:
+        """Fold one *live* engine tick (streaming path) into the state.
+
+        Same accumulation as ``observe_step`` at tick granularity — the
+        estimate used is the causal one current at the tick, so footprints
+        move the moment the streaming engine's estimate does.
+        """
+        self.observe_step(x_tick, busy_seconds, a_tick, tick_seconds)
+        self.ticks_seen += 1
 
     @property
     def per_invocation_indiv(self) -> np.ndarray:
@@ -137,15 +178,35 @@ class EnergyFirstControlPlane:
         return ProfiledWorkload(report=report, sim=sim, trace=trace, prices=prices)
 
     def profile_fleet(
-        self, traces: list[InvocationTrace], *, seeds: list[int] | None = None
+        self,
+        traces: list[InvocationTrace],
+        *,
+        seeds: list[int] | None = None,
+        on_tick=None,
     ) -> list[ProfiledWorkload]:
-        """Profile many nodes through the batched fleet engine.
+        """Profile many nodes through the *streaming* fleet engine, live.
 
-        One vectorized simulation pass generates every node's power traces,
-        one batched engine invocation disaggregates the whole fleet, and
-        each node's Kalman steps are streamed into a
-        ``StreamingFootprintTracker`` so per-invocation footprints update
-        incrementally instead of being recomputed per request.
+        One vectorized simulation pass generates every node's power traces;
+        the telemetry is then replayed into a ``StreamingFleetSession`` one
+        delta-window at a time, exactly as a live collection pipeline would
+        deliver it.  Each engine tick feeds every node's
+        ``StreamingFootprintTracker`` (``observe_tick``) — per-invocation
+        footprints are current *during* the segment, not reconstructed from
+        a finished one — and then calls ``on_tick(stream_tick, trackers)``,
+        the online pricing/capping hook (see examples/stream_energy.py).
+
+        Falls back to the per-node path (no trackers) when the segment is
+        too short for a single Kalman step.
+
+        Args:
+          traces: per-node invocation traces (equal duration/num_fns).
+          seeds: optional per-node simulator seeds.
+          on_tick: optional hook ``(core.profiler.StreamTick,
+            list[StreamingFootprintTracker]) -> None`` run per engine tick.
+
+        Returns:
+          One ``ProfiledWorkload`` per node, with ``footprint_stream``
+          holding the live-fed tracker (None on the short-segment fallback).
         """
         if not traces:
             return []
@@ -156,40 +217,84 @@ class EnergyFirstControlPlane:
             (jnp.asarray(t.fn_id), jnp.asarray(t.start), jnp.asarray(t.end))
             for t in traces
         ]
-        reports, extras = fleet_profile_batched(
-            self.profiler,
-            trace_arrays,
-            [s.telemetry for s in sims],
-            num_fns=num_fns,
-            duration=duration,
-            return_extras=True,
-        )
-        mem = jnp.asarray([s.mem_gb for s in self.registry.specs], jnp.float32)
-        out = []
-        step_seconds = self.profiler.config.step_windows * self.profiler.config.delta
-        for i, (trace, sim, report) in enumerate(zip(traces, sims, reports)):
-            # No tracker at all when the trace was too short for Kalman steps
-            # (per-node fallback): an attached-but-never-fed tracker would
-            # report 0 J/invocation as if it were a measurement.
-            tracker = None
-            if extras is not None:
-                tracker = StreamingFootprintTracker(
-                    num_fns, idle_watts=sim.telemetry.idle_watts
-                )
+        tels = [s.telemetry for s in sims]
+        cfg = self.profiler.config
+        n_windows, _, s, _ = segment_plan(cfg, duration)
+        has_cp_flags = [
+            cfg.account_control_plane and tel.cp_cpu_frac is not None for tel in tels
+        ]
+        if len(set(has_cp_flags)) > 1:
+            raise ValueError(
+                "profile_fleet needs a homogeneous fleet: telemetries mix "
+                "present/absent cp_cpu_frac (use fleet_profile instead)"
+            )
+
+        if s == 0:
+            # Too short for any Kalman step: no streaming state to track.
+            # An attached-but-never-fed tracker would report 0 J/invocation
+            # as if it were a measurement, so footprint_stream stays None.
+            reports = fleet_profile(
+                self.profiler, trace_arrays, tels,
+                num_fns=num_fns, duration=duration,
+            )
+            trackers: list[StreamingFootprintTracker | None] = [None] * len(traces)
+        else:
+            trackers = [
+                StreamingFootprintTracker(num_fns, idle_watts=tel.idle_watts)
+                for tel in tels
+            ]
+
+            def _on_bootstrap(sess):
                 # Seed with the init segment (X_0 estimate) so functions
-                # active only early still carry their energy...
-                tracker.observe_step(
-                    np.asarray(extras.result.x0[i]),
-                    np.asarray(extras.init_busy_seconds[i]),
-                    np.asarray(extras.init_invocations[i]),
-                    extras.init_seconds,
+                # active only early still carry their energy.
+                for i, tr in enumerate(trackers):
+                    tr.observe_step(
+                        np.asarray(sess.x0[i]),
+                        np.asarray(sess.init_busy_seconds[i]),
+                        np.asarray(sess.init_invocations[i]),
+                        sess.init_seconds,
+                    )
+
+            def _on_tick(tk):
+                for i, tr in enumerate(trackers):
+                    tr.observe_tick(tk.x[i], tk.busy_seconds[i], tk.a[i], cfg.delta)
+                if on_tick is not None:
+                    on_tick(tk, trackers)
+
+            session = self.profiler.start_fleet_stream(
+                trace_arrays, num_fns=num_fns, duration=duration,
+                idle_watts=[tel.idle_watts for tel in tels],
+                has_chip=tels[0].chip_power is not None,
+                has_cp=has_cp_flags[0],
+                on_tick=_on_tick, on_bootstrap=_on_bootstrap,
+            )
+            # Stack each signal once into (N, B) so the replay loop indexes
+            # rows instead of doing B Python-level scalar reads per window.
+            sys_np = np.stack([np.asarray(tel.system_power) for tel in tels], axis=1)
+            chip_np = (
+                np.stack([np.asarray(tel.chip_power) for tel in tels], axis=1)
+                if tels[0].chip_power is not None else None
+            )
+            cp_np = (
+                np.stack([np.asarray(tel.cp_cpu_frac) for tel in tels], axis=1)
+                if has_cp_flags[0] else None
+            )
+            sf_np = (
+                np.stack([np.asarray(tel.sys_cpu_frac) for tel in tels], axis=1)
+                if has_cp_flags[0] else None
+            )
+            for t in range(n_windows):
+                session.push_window(
+                    w_sys=sys_np[t],
+                    w_chip=chip_np[t] if chip_np is not None else None,
+                    cp_frac=cp_np[t] if cp_np is not None else None,
+                    sys_frac=sf_np[t] if sf_np is not None else None,
                 )
-                # ...then stream each Kalman step's update.
-                traj = np.asarray(extras.result.x_trajectory[i])
-                busy = np.asarray(extras.inputs.c[i].sum(axis=1))  # (S, M_aug) s
-                a_steps = np.asarray(extras.inputs.a[i])
-                for j in range(traj.shape[0]):
-                    tracker.observe_step(traj[j], busy[j], a_steps[j], step_seconds)
+            reports = session.finalize()
+
+        mem = jnp.asarray([sp.mem_gb for sp in self.registry.specs], jnp.float32)
+        out = []
+        for trace, sim, report, tracker in zip(traces, sims, reports, trackers):
             prices = price_report(
                 report.spectrum.j_indiv,
                 report.spectrum.j_total,

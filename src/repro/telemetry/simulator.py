@@ -16,6 +16,7 @@ Platform presets mirror the paper's three:
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterator, NamedTuple
 
 import numpy as np
 
@@ -62,6 +63,21 @@ class SimResult:
     chip_signal: src.PowerSignal | None
     activity: np.ndarray               # (T, M) fine-grid concurrency
     fine_dt: float
+
+
+class FleetTelemetryTick(NamedTuple):
+    """One delta-window of live fleet telemetry (all arrays shaped (B,)).
+
+    Yielded by ``NodeSimulator.stream_fleet`` in window order; the streaming
+    profiler session (``core.profiler.StreamingFleetSession``) consumes these
+    one at a time.
+    """
+
+    t: int                      # window index
+    w_sys: np.ndarray           # (B,) sensed system power (W)
+    w_chip: np.ndarray | None   # (B,) sensed chip power, None without chip sensor
+    cp_frac: np.ndarray         # (B,) control-plane CPU fraction
+    sys_frac: np.ndarray        # (B,) system-wide CPU fraction
 
 
 def _activity_numpy(trace: InvocationTrace, num_bins: int, dt: float) -> np.ndarray:
@@ -152,6 +168,43 @@ class NodeSimulator:
             for i, t in enumerate(traces)
         ]
 
+    def _node_truth(
+        self,
+        trace: InvocationTrace,
+        act: np.ndarray,
+        p_dyn: np.ndarray | None = None,
+        p_cpu: np.ndarray | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Fine-grid physical truth for one node.
+
+        Returns ``(cp_power, p_dyn, true_sys, true_chip)`` — the single
+        truth-generation chain shared by the batch (``_finish``) and
+        streaming (``stream_fleet``) measurement paths, so the two cannot
+        model different physics.
+        """
+        dt = self.config.dt
+        t_grid = (np.arange(act.shape[0]) + 0.5) * dt
+        valid_starts = trace.start[trace.fn_id >= 0]
+        cp_power = self.model.control_plane_power(valid_starts, t_grid, dt)
+        if p_dyn is None:
+            p_dyn = act @ self.model.dyn_power_w
+        true_sys = self.model.system_power(act, cp_power, p_dyn=p_dyn)
+        true_chip = self.model.chip_power(act, cp_power, p_cpu=p_cpu)
+        return cp_power, p_dyn, true_sys, true_chip
+
+    def _frac_windows(
+        self, act: np.ndarray, cp_power: np.ndarray, n_windows: int
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(N,) control-plane and system-wide CPU fractions as window means."""
+        cfg = self.config
+        n_full = n_windows * int(round(cfg.delta / cfg.dt))
+        cp_f = self.model.cp_cpu_fraction(cp_power)
+        sys_f = self.model.sys_cpu_fraction(act, cp_power)
+        return (
+            cp_f[:n_full].reshape(n_windows, -1).mean(1),
+            sys_f[:n_full].reshape(n_windows, -1).mean(1),
+        )
+
     def _finish(
         self,
         trace: InvocationTrace,
@@ -164,16 +217,9 @@ class NodeSimulator:
         cfg = self.config
         rng = np.random.default_rng(cfg.seed if seed is None else seed)
         dt = cfg.dt
-        num_bins = act.shape[0]
         n_windows = int(round(trace.duration / cfg.delta))
 
-        t_grid = (np.arange(num_bins) + 0.5) * dt
-        valid_starts = trace.start[trace.fn_id >= 0]
-        cp_power = self.model.control_plane_power(valid_starts, t_grid, dt)
-        if p_dyn is None:
-            p_dyn = act @ self.model.dyn_power_w
-        true_sys = self.model.system_power(act, cp_power, p_dyn=p_dyn)
-        true_chip = self.model.chip_power(act, cp_power, p_cpu=p_cpu)
+        cp_power, p_dyn, true_sys, true_chip = self._node_truth(trace, act, p_dyn, p_cpu)
 
         sys_sig = src.sense(true_sys, dt, self.system_sensor, rng)
         chip_sig = src.sense(true_chip, dt, self.chip_sensor, rng) if self.chip_sensor else None
@@ -185,11 +231,7 @@ class NodeSimulator:
             else None
         )
 
-        cp_frac_fine = self.model.cp_cpu_fraction(cp_power)
-        sys_frac_fine = self.model.sys_cpu_fraction(act, cp_power)
-        bins_per_win = int(round(cfg.delta / dt))
-        cp_frac = cp_frac_fine[: n_windows * bins_per_win].reshape(n_windows, -1).mean(1)
-        sys_frac = sys_frac_fine[: n_windows * bins_per_win].reshape(n_windows, -1).mean(1)
+        cp_frac, sys_frac = self._frac_windows(act, cp_power, n_windows)
 
         # Oracle per-function dynamic energy: linear share of the compressed
         # dynamic power (attribution of the compression is proportional).
@@ -222,6 +264,102 @@ class NodeSimulator:
             activity=act,
             fine_dt=dt,
         )
+
+    def stream_fleet(
+        self, traces: list[InvocationTrace], seeds: list[int] | None = None
+    ) -> "Iterator[FleetTelemetryTick]":
+        """Drive the sensor front-ends *live*: yield telemetry window by window.
+
+        The physical truth (activity, true power) is still computed in one
+        vectorized pass — it is the measurement path that streams: every
+        node's system/chip sensor is a ``StreamingSensor`` fed one window's
+        worth of the fine grid per iteration, its samples folded into a
+        ``StreamingWindowResampler``, and a ``FleetTelemetryTick`` is yielded
+        as soon as *all* nodes have closed window ``t`` on every signal
+        (slow/laggy sensors close windows late, so yields can lag pushes and
+        arrive in bursts — exactly like a real collection pipeline).
+
+        RNG note: each sensor owns a child RNG spawned from the node seed, so
+        noise realizations differ from ``simulate_fleet`` (same pathology
+        model; per-sensor stream == batch equality is pinned separately in
+        tests).  Traces must share duration/num_fns, as in ``simulate_fleet``.
+
+        Yields:
+          ``FleetTelemetryTick`` with (B,) arrays per window, for every
+          window index 0..N-1 in order.
+        """
+        from repro.telemetry.sources import StreamingSensor, StreamingWindowResampler
+
+        if not traces:
+            return
+        d0, m0 = traces[0].duration, traces[0].num_fns
+        if any(t.duration != d0 or t.num_fns != m0 for t in traces):
+            raise ValueError("stream_fleet needs traces with equal duration/num_fns")
+        cfg = self.config
+        b = len(traces)
+        num_bins = int(round(d0 / cfg.dt))
+        n_windows = int(round(d0 / cfg.delta))
+        bins_per_win = int(round(cfg.delta / cfg.dt))
+        act = _fleet_activity(traces, num_bins, cfg.dt)
+        p_dyn = np.einsum("btm,m->bt", act, self.model.dyn_power_w)
+        p_cpu = np.einsum("btm,m->bt", act, self.model.dyn_power_w * self.model.cpu_frac)
+        if seeds is None:
+            seeds = [cfg.seed + i for i in range(b)]
+
+        true_sys, true_chip, cp_fracs, sys_fracs = [], [], [], []
+        for i, trace in enumerate(traces):
+            cp_power, _, t_sys, t_chip = self._node_truth(
+                trace, act[i], p_dyn[i], p_cpu[i]
+            )
+            true_sys.append(t_sys)
+            true_chip.append(t_chip)
+            cp_f, sys_f = self._frac_windows(act[i], cp_power, n_windows)
+            cp_fracs.append(cp_f)
+            sys_fracs.append(sys_f)
+
+        has_chip = self.chip_sensor is not None
+        sys_sensors, chip_sensors = [], []
+        sys_rs = [StreamingWindowResampler(cfg.delta) for _ in range(b)]
+        chip_rs = [StreamingWindowResampler(cfg.delta) for _ in range(b)] if has_chip else None
+        for i in range(b):
+            children = np.random.default_rng(seeds[i]).spawn(2)
+            sys_sensors.append(StreamingSensor(self.system_sensor, cfg.dt, children[0]))
+            if has_chip:
+                chip_sensors.append(StreamingSensor(self.chip_sensor, cfg.dt, children[1]))
+
+        pending_sys: list[list[float]] = [[] for _ in range(b)]
+        pending_chip: list[list[float]] = [[] for _ in range(b)]
+        emitted = 0
+
+        def _drain() -> Iterator[FleetTelemetryTick]:
+            nonlocal emitted
+            while all(len(q) > 0 for q in pending_sys) and (
+                not has_chip or all(len(q) > 0 for q in pending_chip)
+            ):
+                t = emitted
+                yield FleetTelemetryTick(
+                    t=t,
+                    w_sys=np.asarray([q.pop(0) for q in pending_sys]),
+                    w_chip=np.asarray([q.pop(0) for q in pending_chip]) if has_chip else None,
+                    cp_frac=np.asarray([cp_fracs[i][t] for i in range(b)]),
+                    sys_frac=np.asarray([sys_fracs[i][t] for i in range(b)]),
+                )
+                emitted += 1
+
+        for w in range(n_windows):
+            lo, hi = w * bins_per_win, (w + 1) * bins_per_win
+            for i in range(b):
+                sig = sys_sensors[i].push(true_sys[i][lo:hi])
+                pending_sys[i].extend(sys_rs[i].push(sig.times, sig.watts))
+                if has_chip:
+                    sig = chip_sensors[i].push(true_chip[i][lo:hi])
+                    pending_chip[i].extend(chip_rs[i].push(sig.times, sig.watts))
+            yield from _drain()
+        for i in range(b):
+            pending_sys[i].extend(sys_rs[i].flush(n_windows))
+            if has_chip:
+                pending_chip[i].extend(chip_rs[i].flush(n_windows))
+        yield from _drain()
 
     def marginal_energy(
         self, trace: InvocationTrace, fn: int, seed: int | None = None

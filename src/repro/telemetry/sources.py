@@ -99,6 +99,159 @@ def sense(
     return PowerSignal(times=times, watts=samples.astype(np.float64), rate_hz=config.rate_hz)
 
 
+class StreamingSensor:
+    """Incremental ``sense``: the same degradation chain, fed chunk by chunk.
+
+    Carries the chain's state across ``push`` calls — IIR filter memory,
+    decimation phase, the lag delay-line, and the noise RNG position — so
+
+        ``concat(push(x[:k]), push(x[k:])) == sense(x).watts``
+
+    exactly, for any chunking (pinned in tests/test_streaming_engine.py).
+    This is what lets the simulator emit telemetry tick-by-tick for the
+    streaming fleet engine instead of sensing a finished segment.
+
+    Noise caveat: equality with batch ``sense`` holds when this sensor owns
+    an RNG seeded identically and no other consumer draws from it; the batch
+    simulator shares one RNG across its system and chip sensors sequentially,
+    so the streaming simulator gives each sensor a spawned child RNG (same
+    pathology, independent realization — documented in docs/streaming.md).
+    """
+
+    def __init__(self, config: SensorConfig, dt: float, rng: np.random.Generator):
+        self.config = config
+        self.dt = dt
+        self.rng = rng
+        self._iir_y: float | None = None     # IIR memory (last smoothed value)
+        self._n_fine = 0                     # fine-grid samples consumed
+        self._n_sampled = 0                  # sensor samples decimated so far
+        self._smoothed_tail: np.ndarray = np.empty(0)  # fine samples not yet decimated
+        self._tail_offset = 0                # absolute index of _smoothed_tail[0]
+        self._lag_line: list[float] = []     # samples inside the reporting delay
+        self._lag_left = int(round(config.lag_s * config.rate_hz))
+        self._first_sample: float | None = None
+
+    def push(self, true_chunk: np.ndarray) -> PowerSignal:
+        """Sense one chunk of the fine-grid true series.
+
+        Args:
+          true_chunk: (k,) watts on the simulation grid (k >= 0).
+
+        Returns:
+          ``PowerSignal`` holding the (possibly empty) newly emitted sensor
+          samples; timestamps continue the global stream.
+        """
+        cfg = self.config
+        t = np.asarray(true_chunk, np.float64)
+
+        # 1. IIR smoothing with carried state.
+        if cfg.tau_s > 0 and t.size:
+            from scipy.signal import lfilter, lfiltic
+
+            a = self.dt / (cfg.tau_s + self.dt)
+            y_prev = t[0] if self._iir_y is None else self._iir_y
+            zi = lfiltic([a], [1.0, -(1.0 - a)], y=[y_prev])
+            t, zf = lfilter([a], [1.0, -(1.0 - a)], t, zi=zi)
+            self._iir_y = float(t[-1])
+        self._n_fine += t.size
+
+        # 2. decimation: emit sample k (1-based) once fine index
+        #    idx_k = min(floor(k * period / dt) - 1, ...) is available.
+        period = 1.0 / cfg.rate_hz
+        self._smoothed_tail = np.concatenate([self._smoothed_tail, t])
+        n_total = int(np.floor(self._n_fine * self.dt / period))
+        out = []
+        while self._n_sampled < n_total:
+            k = self._n_sampled + 1
+            idx = min(int(k * period / self.dt) - 1, self._n_fine - 1)
+            sample = float(self._smoothed_tail[idx - self._tail_offset])
+            self._n_sampled += 1
+            if self._first_sample is None:
+                self._first_sample = sample
+            # 3. lag: the first lag_samples reports repeat the first value.
+            if self._lag_left > 0:
+                self._lag_line.append(sample)
+                self._lag_left -= 1
+                out.append(self._first_sample)
+            elif self._lag_line:
+                self._lag_line.append(sample)
+                out.append(self._lag_line.pop(0))
+            else:
+                out.append(sample)
+        # Drop fine samples older than any future decimation index can need.
+        keep_from = max(self._n_fine - max(int(period / self.dt) + 2, 2), self._tail_offset)
+        self._smoothed_tail = self._smoothed_tail[keep_from - self._tail_offset:]
+        self._tail_offset = keep_from
+
+        samples = np.asarray(out, np.float64)
+        # 4. noise, 5. quantization — in emission order, so the RNG stream
+        # matches a single batch draw.
+        if cfg.noise_w > 0 and samples.size:
+            samples = samples + self.rng.normal(0.0, cfg.noise_w, size=samples.shape)
+        if cfg.quant_w > 0:
+            samples = np.round(samples / cfg.quant_w) * cfg.quant_w
+        times = (np.arange(self._n_sampled - len(out), self._n_sampled) + 1) * period
+        return PowerSignal(times=times, watts=samples, rate_hz=cfg.rate_hz)
+
+
+class StreamingWindowResampler:
+    """Incremental ``resample_to_windows``: window means from a live stream.
+
+    Push sensor samples as they arrive; completed delta-windows are emitted
+    with exactly the batch semantics — per-window sample means, empty
+    windows forward-filled with the last emitted mean (seeded at the first
+    sample ever seen).  A window closes when a sample at or past its right
+    edge arrives, or on ``flush``.
+    """
+
+    def __init__(self, delta: float):
+        self.delta = delta
+        self._next_window = 0
+        self._sum = 0.0
+        self._count = 0
+        self._last_mean: float | None = None
+        self._seed: float | None = None
+
+    def _close_window(self) -> float:
+        if self._count > 0:
+            mean = self._sum / self._count
+            self._last_mean = mean
+        elif self._last_mean is not None:
+            mean = self._last_mean
+        else:
+            mean = self._seed if self._seed is not None else 0.0
+        self._next_window += 1
+        self._sum = 0.0
+        self._count = 0
+        return mean
+
+    def push(self, times: np.ndarray, watts: np.ndarray) -> np.ndarray:
+        """Fold new samples in; return the means of any windows they close.
+
+        Args:
+          times/watts: (k,) monotonically increasing sample stream chunk.
+
+        Returns:
+          (j,) means of the windows completed by this chunk (j >= 0).
+        """
+        out = []
+        for t, w in zip(np.asarray(times, float), np.asarray(watts, float)):
+            if self._seed is None:
+                self._seed = float(w)
+            while t >= (self._next_window + 1) * self.delta:
+                out.append(self._close_window())
+            self._sum += float(w)
+            self._count += 1
+        return np.asarray(out, np.float64)
+
+    def flush(self, num_windows: int) -> np.ndarray:
+        """Close every window up to ``num_windows`` (end of segment)."""
+        out = []
+        while self._next_window < num_windows:
+            out.append(self._close_window())
+        return np.asarray(out, np.float64)
+
+
 def resample_to_windows(signal: PowerSignal, num_windows: int, delta: float) -> np.ndarray:
     """(N,) mean power per delta window (energy-preserving resampling).
 

@@ -141,7 +141,8 @@ def test_pack_fleet_inputs_shapes():
     c = jnp.asarray(rng.random((b, n, m)), jnp.float32)
     w = jnp.asarray(rng.random((b, n)), jnp.float32)
     a = jnp.asarray(rng.integers(0, 3, (b, n, m)), jnp.float32)
-    packed = pack_fleet_inputs(c, w, a, a * 0.5, a * 0.25, step_windows=step)
+    with pytest.warns(UserWarning, match="ragged-tail"):  # 37 % 10 != 0
+        packed = pack_fleet_inputs(c, w, a, a * 0.5, a * 0.25, step_windows=step)
     assert packed.c.shape == (b, 3, step, m)
     assert packed.w.shape == (b, 3, step)
     assert packed.a.shape == (b, 3, m)
