@@ -9,13 +9,12 @@ from repro.workload.azure import WorkloadConfig, generate_trace
 from repro.workload.functions import paper_functions
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     reg = paper_functions()
+    duration = 100.0 if smoke else (180.0 if quick else 1800.0)
     trace = generate_trace(
         reg,
-        WorkloadConfig(
-            duration_s=180.0 if quick else 1800.0, load=1.2, seed=6, arrival="bursty"
-        ),
+        WorkloadConfig(duration_s=duration, load=1.2, seed=6, arrival="bursty"),
     )
     cp = control_plane("server")
     # Footprints come from FaasMeter (estimated, not oracle) — the paper's

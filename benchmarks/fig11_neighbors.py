@@ -11,9 +11,9 @@ from repro.workload.functions import paper_functions
 from repro.workload.trace import drop_function
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     reg = paper_functions()
-    duration = 240.0 if quick else 1800.0
+    duration = 120.0 if smoke else (240.0 if quick else 1800.0)
     base = generate_trace(reg, WorkloadConfig(duration_s=duration, load=0.9, seed=7))
     # keep targets image(1), AES(3), video(2); neighbor dd(0) or ml_train(6)
     for j in (4, 5):  # drop json, CNN entirely

@@ -25,11 +25,12 @@ def _lag_xcorr(a, b, max_lag):
     return arg, best
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     reg = paper_functions()
     ml = FunctionRegistry([reg["ml_train"]])
+    duration = 30.0 if smoke else (120.0 if quick else 600.0)
     trace = generate_trace(
-        ml, WorkloadConfig(duration_s=120.0 if quick else 600.0, arrival="closed", seed=0)
+        ml, WorkloadConfig(duration_s=duration, arrival="closed", seed=0)
     )
     out = {}
     for platform in ("server", "desktop"):

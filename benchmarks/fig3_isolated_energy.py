@@ -15,13 +15,13 @@ from repro.workload.azure import WorkloadConfig, generate_trace
 from repro.workload.functions import FunctionRegistry, paper_functions
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     """Isolated measurement attributes ALL system energy (idle included) to
     the function — so apparent J/invocation collapses as concurrency rises
     and idle amortizes.  Strongest on the high-idle server (95 W) with
     short functions (json: 0.25 s), exactly the paper's worst case."""
     reg = paper_functions()
-    duration = 90.0 if quick else 600.0
+    duration = 20.0 if smoke else (90.0 if quick else 600.0)
     out = {}
     ratios = []
     for name in ("json", "image", "ml_train"):

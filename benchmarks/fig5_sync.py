@@ -12,11 +12,12 @@ from repro.workload.functions import FunctionRegistry, paper_functions
 import jax.numpy as jnp
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     reg = paper_functions()
     ml = FunctionRegistry([reg["ml_train"]])
+    duration = 40.0 if smoke else (180.0 if quick else 900.0)
     trace = generate_trace(
-        ml, WorkloadConfig(duration_s=180.0 if quick else 900.0, arrival="closed", seed=0)
+        ml, WorkloadConfig(duration_s=duration, arrival="closed", seed=0)
     )
     cp = control_plane_for(ml, "server")
     sim = cp.simulator.simulate(trace)

@@ -20,7 +20,7 @@ from repro.workload.azure import WorkloadConfig, generate_trace
 from repro.workload.functions import FunctionRegistry, paper_functions
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     reg = paper_functions()
     classes = ["image", "json", "ml_train", "video"]
     clones = []
@@ -29,9 +29,10 @@ def run(quick: bool = True) -> dict:
         for i in range(5):
             clones.append(dataclasses.replace(base, name=f"{cname}_{i}"))
     registry20 = FunctionRegistry(clones)
+    duration = 120.0 if smoke else (300.0 if quick else 1800.0)
     trace = generate_trace(
         registry20,
-        WorkloadConfig(duration_s=300.0 if quick else 1800.0, load=1.0, seed=2, iat_spread=0.0),
+        WorkloadConfig(duration_s=duration, load=1.0, seed=2, iat_spread=0.0),
     )
     cp = EnergyFirstControlPlane(registry20, SimulatorConfig(platform="desktop"), PROFILER_CONFIG)
     prof = cp.profile_trace(trace)

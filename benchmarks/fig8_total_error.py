@@ -15,9 +15,9 @@ def _total_error(cp, trace):
     return cp.profile_trace(trace).report.total_error
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     reg = paper_functions()
-    duration = 240.0 if quick else 1800.0
+    duration = 120.0 if smoke else (240.0 if quick else 1800.0)
     cp = control_plane("desktop")
 
     # (a) bursty four-function workload
@@ -35,7 +35,7 @@ def run(quick: bool = True) -> dict:
     # (c) sweep: n workloads x 3 platforms, each platform's workloads
     # profiled as one fleet batch through the batched engine (one vectorized
     # simulation pass + one batched disaggregation per platform).
-    n_sweep = 6 if quick else 35
+    n_sweep = 3 if smoke else (6 if quick else 35)
     errs = []
     for platform in ("desktop", "server", "edge"):
         cpp = control_plane(platform)

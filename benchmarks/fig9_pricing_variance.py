@@ -10,10 +10,10 @@ from repro.workload.azure import WorkloadConfig, generate_trace
 from repro.workload.functions import paper_functions
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     reg = paper_functions()
-    n_traces = 8 if quick else 50
-    duration = 200.0 if quick else 1800.0
+    n_traces = 6 if smoke else (8 if quick else 50)
+    duration = 120.0 if smoke else (200.0 if quick else 1800.0)
     covs, lnv = [], []
     for platform in ("desktop", "server"):
         cp = control_plane(platform)

@@ -38,14 +38,17 @@ def _time(f, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def run_disagg(quick: bool = True) -> dict:
+def run_disagg(quick: bool = True, smoke: bool = False) -> dict:
     """Fleet engine vs sequential reference: equivalence + wall-clock.
 
     The acceptance scenario: a 64-function x 256-tick fleet must match the
     sequential per-function-loop reference within 1e-5 and beat it by >=5x.
     """
-    b = 8 if quick else 16
-    s, n_w, m = 8, 32, 64  # 256 ticks x 64 functions per node
+    if smoke:
+        b, s, n_w, m = 2, 4, 16, 16
+    else:
+        b = 8 if quick else 16
+        s, n_w, m = 8, 32, 64  # 256 ticks x 64 functions per node
     inputs = synthetic_fleet(b, s, n_w, m)
     cfg = EngineConfig()
 
@@ -74,9 +77,12 @@ def run_disagg(quick: bool = True) -> dict:
     }
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     rng = np.random.default_rng(0)
-    b, s, h, hkv, d = (1, 1024, 4, 2, 64) if quick else (2, 4096, 8, 2, 128)
+    if smoke:
+        b, s, h, hkv, d = 1, 256, 2, 2, 32
+    else:
+        b, s, h, hkv, d = (1, 1024, 4, 2, 64) if quick else (2, 4096, 8, 2, 128)
     q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
@@ -110,5 +116,5 @@ def run(quick: bool = True) -> dict:
         "pallas_decode_interpret_err": dec_err,
         "kernels_validate": float(flash_err < 1e-4 and dec_err < 1e-4),
     }
-    out.update(run_disagg(quick))
+    out.update(run_disagg(quick, smoke=smoke))
     return out

@@ -53,9 +53,12 @@ def _time(f, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     rng = np.random.default_rng(0)
-    nodes, n, m = (64, 240, 32) if quick else (512, 600, 64)
+    if smoke:
+        nodes, n, m = 8, 60, 16
+    else:
+        nodes, n, m = (64, 240, 32) if quick else (512, 600, 64)
     c, w, x_true = _make_fleet(rng, nodes, n, m)
     cj, wj = jnp.asarray(c), jnp.asarray(w)
 

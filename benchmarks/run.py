@@ -1,15 +1,20 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,...]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke] [--only fig6,...]
 
-Prints one line per metric and writes experiments/bench_results.json.
+``--smoke`` runs every module at tiny B/M/T shapes (seconds, not minutes) —
+the CI rot gate: each module must still import, execute, and emit
+well-formed scalar metrics.  Prints one line per metric and writes
+experiments/bench_results.json.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
+import math
 import os
 import time
 import traceback
@@ -26,15 +31,45 @@ MODULES = [
     ("fig11_neighbors", "Fig 11: noisy neighbors"),
     ("profiler_overhead", "Perf: fleet profiler throughput"),
     ("streaming_overhead", "Perf: streaming engine per-tick overhead"),
+    ("sharded_fleet", "Perf: mesh-sharded fleet scaling"),
     ("kernel_bench", "Perf: kernel path"),
 ]
+
+
+def _well_formed(metrics: dict) -> bool:
+    """A benchmark result is well-formed when it is a dict of scalar
+    metrics that survives a *strict* JSON round-trip: NaN and Inf are
+    rejected outright (a metric that went 0/0 is exactly the silent rot
+    the smoke gate exists to catch; deliberately-absent measurements like
+    fig6's edge RAPL only appear outside smoke mode)."""
+    if not isinstance(metrics, dict) or not metrics:
+        return False
+    for k, v in metrics.items():
+        if not isinstance(k, str):
+            return False
+        if isinstance(v, bool) or v is None:
+            continue
+        if isinstance(v, (int, float)):
+            if isinstance(v, float) and not math.isfinite(v):
+                return False
+            continue
+        if not isinstance(v, str):
+            return False
+    return True
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale durations")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny shapes, seconds not minutes (CI rot gate); validates "
+        "that every module emits well-formed JSON metrics",
+    )
     ap.add_argument("--only", default="", help="comma-separated module prefixes")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
     only = [s for s in args.only.split(",") if s]
 
     results, failures = {}, 0
@@ -45,7 +80,21 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
-            metrics = mod.run(quick=not args.full)
+            kwargs = {"quick": not args.full}
+            if args.smoke:
+                # Every module must opt in to smoke shapes; a silent
+                # quick-scale fallback would erode the seconds-not-minutes
+                # contract the CI gate depends on.
+                if "smoke" not in inspect.signature(mod.run).parameters:
+                    raise TypeError(
+                        f"benchmarks.{mod_name}.run lacks the smoke= "
+                        "parameter; every registered module must support "
+                        "--smoke (tiny shapes)"
+                    )
+                kwargs["smoke"] = True
+            metrics = mod.run(**kwargs)
+            if args.smoke and not _well_formed(metrics):
+                raise ValueError(f"{mod_name}.run returned malformed metrics: {metrics!r}")
             metrics["_seconds"] = round(time.time() - t0, 1)
             results[mod_name] = metrics
             for k, v in metrics.items():

@@ -1,0 +1,119 @@
+"""Mesh-sharded fleet controller scaling (docs/architecture.md, "Sharded fleet").
+
+Times the segment (``run_fleet``) and streaming (``run_fleet_stream``)
+engines with the B-node axis sharded over a ``FleetMesh`` against the
+unsharded single-device baseline, on however many host devices are visible,
+and cross-checks the sharded results against the unsharded ones (the same
+1e-5 pin as tests/test_sharded_fleet.py).
+
+Metrics:
+
+- ``devices``                 : mesh size along the node axis
+- ``seg_ms`` / ``seg_sharded_ms``       : run_fleet wall-clock, un/sharded
+- ``stream_ms`` / ``stream_sharded_ms`` : run_fleet_stream wall-clock
+- ``seg_speedup`` / ``stream_speedup``  : unsharded / sharded
+- ``node_steps_per_s_per_device``       : B*S / sharded-seg-time / devices
+- ``max_abs_diff`` / ``max_rel_diff``   : sharded vs unsharded (the 1e-5
+  pin is *relative* at benchmark scale — absolute drift grows with the
+  400-iteration NNLS on tens-of-watts values; the exact test-shape pin
+  lives in tests/test_sharded_fleet.py)
+- ``psum_total_w``            : fleet-total attributed power-ticks via the
+  node-axis ``psum`` reduction (``fleet_attribution_totals``)
+
+Run standalone on a forced 8-device host mesh:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+        python -m benchmarks.sharded_fleet
+
+(The flag must be set before JAX initializes, which is why this module
+keeps its heavy imports inside ``run``.)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _best_of(f, reps: int):
+    """(best wall-clock over ``reps``, last result) — the result is reused
+    for the equivalence cross-check so nothing executes twice."""
+    import jax
+
+    out = jax.block_until_ready(f())  # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(f())
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    import numpy as np
+
+    from repro.core.batched_engine import (
+        EngineConfig,
+        run_fleet,
+        run_fleet_stream,
+        synthetic_fleet,
+    )
+    from repro.distributed.sharding import fleet_attribution_totals, fleet_mesh
+
+    if smoke:
+        b, s, n_w, m, reps = 8, 2, 10, 8, 1
+    elif quick:
+        b, s, n_w, m, reps = 64, 4, 60, 64, 3
+    else:
+        b, s, n_w, m, reps = 128, 8, 60, 128, 5
+
+    inputs = synthetic_fleet(b, s, n_w, m, seed=0)
+    cfg = EngineConfig()
+    mesh = fleet_mesh(b)
+    d = mesh.num_devices
+
+    seg, ref = _best_of(lambda: run_fleet(inputs, cfg), reps)
+    seg_sh, out = _best_of(lambda: run_fleet(inputs, cfg, mesh=mesh), reps)
+    stream, _ = _best_of(lambda: run_fleet_stream(inputs, cfg), reps)
+    stream_sh, _ = _best_of(lambda: run_fleet_stream(inputs, cfg, mesh=mesh), reps)
+
+    def _diffs(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        d = np.abs(a - b)
+        return float(np.max(d)), float(np.max(d / np.maximum(np.abs(b), 1.0)))
+
+    d_abs, d_rel = map(
+        max,
+        zip(
+            _diffs(out.x_final, ref.x_final),
+            _diffs(out.tick_power, ref.tick_power),
+        ),
+    )
+    totals = fleet_attribution_totals(out.tick_power, out.unattributed, mesh=mesh)
+
+    return {
+        "devices": d,
+        "fleet_shape": f"B{b}xS{s}xW{n_w}xM{m}",
+        "seg_ms": seg * 1e3,
+        "seg_sharded_ms": seg_sh * 1e3,
+        "seg_speedup": seg / seg_sh,
+        "stream_ms": stream * 1e3,
+        "stream_sharded_ms": stream_sh * 1e3,
+        "stream_speedup": stream / stream_sh,
+        "node_steps_per_s_per_device": b * s / seg_sh / d,
+        "max_abs_diff": d_abs,
+        "max_rel_diff": d_rel,
+        "sharded_rel_diff_below_1e4": float(d_rel < 1e-4),
+        "psum_total_w": float(totals.attributed),
+    }
+
+
+def main() -> None:
+    """Standalone entry: force an 8-device host mesh unless XLA_FLAGS is set."""
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    print(json.dumps(run(quick=True), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -35,12 +35,17 @@ from repro.core.batched_engine import (
 )
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, smoke: bool = False) -> dict:
     # Fleet-controller scale: B nodes x M functions, paper-default 60-tick
     # steps.  Per-tick dispatch is a fixed tax, so the streaming engine is
     # benchmarked where it is meant to run — a controller spanning a fleet —
-    # not on a toy shape where dispatch dwarfs the math.
-    b, s, n_w, m = (64, 6, 60, 128) if quick else (64, 20, 60, 128)
+    # not on a toy shape where dispatch dwarfs the math.  (Smoke mode trades
+    # that realism for seconds-scale execution: the rot gate only needs the
+    # loop to run.)
+    if smoke:
+        b, s, n_w, m = 8, 2, 20, 16
+    else:
+        b, s, n_w, m = (64, 6, 60, 128) if quick else (64, 20, 60, 128)
     t_total = s * n_w
     inputs = synthetic_fleet(b, s, n_w, m, seed=0)
     cfg = EngineConfig()

@@ -1,5 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: the full test suite must COLLECT cleanly and pass.
+# Tier-1 CI gate: the full test suite must COLLECT cleanly and pass, the
+# tree must stay free of committed bytecode, every public API surface must
+# stay documented, benchmark scripts must still execute (smoke mode), and
+# the mesh-sharded engine must hold its 1e-5 pin on a real multi-device
+# mesh (forced 8-device host platform, its own subprocess).
 #
 # pytest exits 2 on collection errors and 1 on failures; both are failures
 # here — a module that stops importing is exactly the regression this gate
@@ -9,29 +13,70 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== hygiene check (no committed bytecode) =="
+if git ls-files | grep -E '(^|/)__pycache__/|\.py[co]$'; then
+  echo "committed __pycache__/*.pyc blobs found (see .gitignore); git rm --cached them"
+  exit 1
+fi
+echo "hygiene OK (no __pycache__/*.pyc tracked)"
+
 echo "== collection check (zero tolerance for import errors) =="
 python -m pytest -q --collect-only >/dev/null
 
-echo "== docs check (README/docs present, public engine API documented) =="
+echo "== docs check (README/docs present, public API surfaces documented) =="
 for f in README.md docs/architecture.md docs/streaming.md; do
   [ -f "$f" ] || { echo "missing $f"; exit 1; }
 done
 python - <<'EOF'
+import importlib
 import inspect
-import repro.core.batched_engine as eng
 
-missing = []
-for name, obj in vars(eng).items():
-    if name.startswith("_") or not callable(obj):
-        continue
-    if getattr(obj, "__module__", eng.__name__) not in (eng.__name__, None):
-        continue  # re-exported from elsewhere (kalman, footprints, ...)
-    if not inspect.getdoc(obj):
-        missing.append(name)
-if missing:
-    raise SystemExit(f"public symbols without docstrings in core.batched_engine: {missing}")
-print(f"docs check OK ({eng.__name__}: all public symbols documented)")
+SURFACES = (
+    "repro.core.batched_engine",
+    "repro.core.profiler",
+    "repro.serving.control_plane",
+    "repro.distributed.sharding",
+)
+for mod_name in SURFACES:
+    mod = importlib.import_module(mod_name)
+    missing = []
+    for name, obj in vars(mod).items():
+        if name.startswith("_") or not callable(obj):
+            continue
+        if getattr(obj, "__module__", mod.__name__) not in (mod.__name__, None):
+            continue  # re-exported from elsewhere (kalman, footprints, ...)
+        if not inspect.getdoc(obj):
+            missing.append(name)
+    if missing:
+        raise SystemExit(f"public symbols without docstrings in {mod_name}: {missing}")
+    print(f"docs check OK ({mod_name}: all public symbols documented)")
 EOF
+
+echo "== benchmark smoke (tiny shapes; scripts must run + emit sane JSON) =="
+# run.py --smoke already fails on module errors / malformed metrics; this
+# second pass validates the artifact actually written to disk: it must be
+# STRICT JSON (no NaN/Infinity literals, which Python's json.dump happily
+# emits) and cover every registered module.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m benchmarks.run --smoke
+python - <<'EOF'
+import json
+
+from benchmarks.run import MODULES
+
+def _reject(const):
+    raise SystemExit(f"bench_results.json is not strict JSON: contains {const}")
+
+with open("experiments/bench_results.json") as f:
+    results = json.load(f, parse_constant=_reject)
+missing = [name for name, _ in MODULES if name not in results]
+if missing:
+    raise SystemExit(f"benchmark smoke gate: modules missing from artifact: {missing}")
+print(f"benchmark smoke OK ({len(results)} modules, strict well-formed JSON)")
+EOF
+
+echo "== sharded-fleet pin (forced 8-device host mesh, own subprocess) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m pytest -q tests/test_sharded_fleet.py
 
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"

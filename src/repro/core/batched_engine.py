@@ -175,6 +175,54 @@ def _init_states(x0: Array) -> KalmanState:
     return jax.vmap(lambda x: kalman_init(x.shape[-1], x0=x))(x0)
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded execution: the B-node axis over a FleetMesh via shard_map.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_segment_runner(fn, config: EngineConfig, with_ticks: bool, mesh):
+    """Compiled shard_map wrapper for a segment engine (``run_fleet``,
+    ``run_fleet_gram``, or ``run_fleet_stream``).
+
+    Each device traces the *unsharded* engine on its local ``B/n`` node
+    block — per-node Kalman/disaggregation math is node-independent, so the
+    sharded program contains no collectives at all; fleet-level reductions
+    live in ``distributed.sharding.fleet_attribution_totals``.  Cached per
+    (engine, config, with_ticks, mesh) so repeated calls (benchmarks, the
+    control plane's per-segment loop) reuse one executable.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
+
+    node = P(mesh.axis)
+
+    def local(inputs, init_c, init_w):
+        return fn(inputs, config, init_c=init_c, init_w=init_w, with_ticks=with_ticks)
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh.mesh,
+            in_specs=(node, node, node),
+            out_specs=node,
+            check_vma=False,
+        )
+    )
+
+
+def _run_sharded(fn, inputs, config, init_c, init_w, with_ticks, mesh) -> FleetResult:
+    """Dispatch a segment engine over a ``FleetMesh`` (see docs/architecture.md)."""
+    mesh.validate(inputs.c.shape[0])
+    runner = _sharded_segment_runner(fn, config, with_ticks, mesh)
+    return runner(
+        inputs,
+        inputs.c if init_c is None else init_c,
+        inputs.w if init_w is None else init_w,
+    )
+
+
 def run_fleet(
     inputs: FleetInputs,
     config: EngineConfig = EngineConfig(),
@@ -182,6 +230,7 @@ def run_fleet(
     init_c: Array | None = None,
     init_w: Array | None = None,
     with_ticks: bool = True,
+    mesh=None,
 ) -> FleetResult:
     """The batched engine: three fleet-wide jitted stages, no Python loops.
 
@@ -193,7 +242,14 @@ def run_fleet(
     separate jit boundaries (rather than one fused program) so each
     compiles identically to the sequential oracle's building blocks — which
     is what lets tests pin batched == sequential to float-reassociation
-    noise."""
+    noise.
+
+    With ``mesh`` (a ``distributed.sharding.FleetMesh``) the node axis is
+    sharded over the mesh devices via ``shard_map``: each device runs these
+    same stages on its local node block, collective-free, pinned to the
+    unsharded result at 1e-5 (tests/test_sharded_fleet.py)."""
+    if mesh is not None:
+        return _run_sharded(run_fleet, inputs, config, init_c, init_w, with_ticks, mesh)
     x0 = fleet_initial_estimate(
         inputs.c if init_c is None else init_c,
         inputs.w if init_w is None else init_w,
@@ -231,11 +287,17 @@ def run_fleet_gram(
     init_c: Array | None = None,
     init_w: Array | None = None,
     with_ticks: bool = True,
+    mesh=None,
 ) -> FleetResult:
     """Gram-hoisted engine: window statistics reduced once (Pallas kernel on
     TPU, XLA einsum elsewhere), then an O(M^2)-per-step fleet scan that
     never touches the window dimension.  Same update rule as ``run_fleet``;
-    equal up to float reassociation of the hoisted contractions."""
+    equal up to float reassociation of the hoisted contractions.  ``mesh``
+    shards the node axis exactly as in ``run_fleet``."""
+    if mesh is not None:
+        return _run_sharded(
+            run_fleet_gram, inputs, config, init_c, init_w, with_ticks, mesh
+        )
     gram_fn = _gram_fn(config.backend)
     x0 = fleet_initial_estimate(
         inputs.c if init_c is None else init_c,
@@ -435,7 +497,7 @@ class TickAttribution(NamedTuple):
 
 
 def fleet_stream_init(
-    x0: Array, n_w: int, config: EngineConfig = EngineConfig()
+    x0: Array, n_w: int, config: EngineConfig = EngineConfig(), *, mesh=None
 ) -> FleetStreamState:
     """Initial streaming state from a (B, M) whole-trace estimate X_0.
 
@@ -446,6 +508,10 @@ def fleet_stream_init(
       n_w: ticks per Kalman step (sizes the partial-step ring buffer; must
         match the ``n_w`` later passed to ``fleet_step``).
       config: engine configuration.
+      mesh: optional ``distributed.sharding.FleetMesh``; the state is placed
+        sharded over the node axis (scalar counters replicated), so the
+        donated buffers live distributed for the whole stream — pass the
+        same mesh to every subsequent ``fleet_step``.
 
     Returns:
       ``FleetStreamState`` with an empty partial step.
@@ -455,7 +521,7 @@ def fleet_stream_init(
     # Copy x0: the returned state is donated by ``fleet_step``, and the
     # filter's initial x would otherwise alias the caller's buffer.
     x0 = jnp.array(x0, jnp.float32, copy=True)
-    return FleetStreamState(
+    state = FleetStreamState(
         kalman=_init_states(x0),
         c_buf=zf((b, n_w, m)),
         w_buf=zf((b, n_w)),
@@ -465,12 +531,49 @@ def fleet_stream_init(
         tick_in_step=jnp.zeros((), jnp.int32),
         step_idx=jnp.zeros((), jnp.int32),
     )
+    if mesh is not None:
+        mesh.validate(b)
+        state = mesh.put(state)
+    return state
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_step_runner(config: EngineConfig, mesh):
+    """shard_map of the streaming step over a ``FleetMesh`` (cached per
+    (config, mesh) — together with the jit cache this keeps the sharded
+    stream at exactly one trace for its whole lifetime).
+
+    Array state/step/attribution leaves shard over the node axis; the
+    scalar ``tick_in_step``/``step_idx``/``step_completed`` counters are
+    replicated (every device advances them identically).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
+
+    node, rep = P(mesh.axis), P()
+    state_specs = FleetStreamState(
+        kalman=node, c_buf=node, w_buf=node, a=node,
+        lat_sum=node, lat_sumsq=node, tick_in_step=rep, step_idx=rep,
+    )
+    step_specs = FleetStep(c=node, w=node, a=node, lat_sum=node, lat_sumsq=node)
+    att_specs = TickAttribution(
+        tick_power=node, unattributed=node, x=node, step_completed=rep
+    )
+    return shard_map(
+        functools.partial(_fleet_step_impl, config=config),
+        mesh=mesh.mesh,
+        in_specs=(state_specs, step_specs),
+        out_specs=(state_specs, att_specs),
+        check_vma=False,
+    )
 
 
 def _fleet_step_impl(
     state: FleetStreamState,
     step: FleetStep,
     config: EngineConfig,
+    mesh=None,
 ) -> tuple[FleetStreamState, TickAttribution]:
     """One streaming tick: buffer the tick, update at step boundaries.
 
@@ -483,7 +586,16 @@ def _fleet_step_impl(
     branch executes — reducing the full buffer through the segment gram
     engine's own ``precompute_step_inputs`` and running the batched
     gram-domain Kalman update: the same update rule as ``run_fleet_gram``.
+
+    With ``mesh`` the whole update runs under ``shard_map`` over the node
+    axis: the carried state stays sharded on-device (each device owns its
+    node block's ring buffer and filter state), the per-tick math is
+    collective-free, and the replicated ``tick_in_step``/``step_idx``
+    counters drive the *same* boundary ``lax.cond`` on every device.
     """
+    if mesh is not None:
+        step_fn = _sharded_step_runner(config, mesh)
+        return step_fn(state, step)
     kcfg = config.kalman
     n_w = state.c_buf.shape[1]
     c_buf = jax.lax.dynamic_update_index_in_dim(
@@ -530,16 +642,18 @@ def _fleet_step_impl(
 
 
 fleet_step = functools.partial(
-    jax.jit, static_argnames=("config",), donate_argnums=(0,)
+    jax.jit, static_argnames=("config", "mesh"), donate_argnums=(0,)
 )(_fleet_step_impl)
 fleet_step.__doc__ = """Jitted streaming tick update (donates ``state``).
 
-``fleet_step(state, step, config=...)`` — the live metering hot path.
-``config`` is static and the step length n_w comes from the state's ring
-buffer shape (set by ``fleet_stream_init``), so there is one trace per
-(fleet shape, config) pair, reused for every subsequent tick; the
-retracing guard in tests/test_streaming_engine.py pins this.  The input
-``state`` is donated — its buffers are reused for the output state, so the
+``fleet_step(state, step, config=..., mesh=...)`` — the live metering hot
+path.  ``config`` and ``mesh`` are static and the step length n_w comes
+from the state's ring buffer shape (set by ``fleet_stream_init``), so
+there is one trace per (fleet shape, config, mesh) triple, reused for
+every subsequent tick; the retracing guards in
+tests/test_streaming_engine.py and tests/test_sharded_fleet.py pin this.
+The input ``state`` is donated — its buffers are reused for the output
+state (in place, and still sharded when a ``FleetMesh`` is active), so the
 caller must rebind (``state, att = fleet_step(state, step, ...)``) and must
 not touch the old state afterwards.
 """
@@ -584,6 +698,7 @@ def run_fleet_stream(
     init_c: Array | None = None,
     init_w: Array | None = None,
     with_ticks: bool = True,
+    mesh=None,
 ) -> FleetResult:
     """The segment engine re-expressed as a scan over the streaming step.
 
@@ -602,11 +717,17 @@ def run_fleet_stream(
       init_c/init_w: optional dedicated init block for X_0 (profiler-style);
         defaults to the whole segment.
       with_ticks: also compute (B, T, M) conserved per-tick attribution.
+      mesh: optional ``distributed.sharding.FleetMesh``; shards the node
+        axis over the mesh devices exactly as in ``run_fleet``.
 
     Returns:
       ``FleetResult`` with ``state`` holding the final *Kalman* state of the
       stream (identical pytree to the other engines').
     """
+    if mesh is not None:
+        return _run_sharded(
+            run_fleet_stream, inputs, config, init_c, init_w, with_ticks, mesh
+        )
     x0 = fleet_initial_estimate(
         inputs.c if init_c is None else init_c,
         inputs.w if init_w is None else init_w,

@@ -283,6 +283,7 @@ class FaasMeterProfiler:
         has_cp: bool,
         on_tick=None,
         on_bootstrap=None,
+        mesh=None,
     ) -> "StreamingFleetSession":
         """Open an online profiling session for a fleet (docs/streaming.md).
 
@@ -291,12 +292,14 @@ class FaasMeterProfiler:
         via ``push_window``; ``finalize`` yields the same per-node
         ``FootprintReport`` list.  Raises ``ValueError`` for configurations
         the streaming engine does not cover (combined mode, non-default
-        disaggregation, segments too short for a Kalman step).
+        disaggregation, segments too short for a Kalman step).  ``mesh``
+        (a ``distributed.sharding.FleetMesh``) shards the carried engine
+        state and every per-tick update over the node axis.
         """
         return StreamingFleetSession(
             self, traces, num_fns=num_fns, duration=duration,
             idle_watts=idle_watts, has_chip=has_chip, has_cp=has_cp,
-            on_tick=on_tick, on_bootstrap=on_bootstrap,
+            on_tick=on_tick, on_bootstrap=on_bootstrap, mesh=mesh,
         )
 
     def _prep_node(self, fn_id, start, end, telemetry, num_fns, n_windows):
@@ -462,6 +465,7 @@ class StreamingFleetSession:
         has_cp: bool,
         on_tick=None,
         on_bootstrap=None,
+        mesh=None,
     ):
         """Args:
           profiler: configured ``FaasMeterProfiler`` (pure mode only).
@@ -475,6 +479,9 @@ class StreamingFleetSession:
             CPU fractions (appends the shared principal column, §4.1).
           on_tick: ``callable(StreamTick)`` invoked per engine tick.
           on_bootstrap: ``callable(session)`` invoked once after X_0.
+          mesh: optional ``distributed.sharding.FleetMesh``; the engine
+            state lives sharded over the node axis and every ``fleet_step``
+            runs under ``shard_map`` (B must tile the mesh evenly).
         """
         from repro.core import batched_engine as eng
 
@@ -496,6 +503,9 @@ class StreamingFleetSession:
         self.has_cp = has_cp
         self.on_tick = on_tick
         self.on_bootstrap = on_bootstrap
+        self.mesh = mesh
+        if mesh is not None:
+            mesh.validate(self.b)
 
         self.n_windows, self.init_n, self.s, self.n_used = segment_plan(cfg, duration)
         if self.s == 0:
@@ -664,7 +674,7 @@ class StreamingFleetSession:
         self.x0 = eng.fleet_initial_estimate(init_c, target, self._engine_cfg)
         self.init_busy_seconds = init_c.sum(axis=1)
         self._state = eng.fleet_stream_init(
-            self.x0, self.cfg.step_windows, self._engine_cfg
+            self.x0, self.cfg.step_windows, self._engine_cfg, mesh=self.mesh
         )
         self.booted = True
         if self.on_bootstrap is not None:
@@ -700,7 +710,9 @@ class StreamingFleetSession:
             c=c_t, w=target,
             a=jnp.asarray(a_t), lat_sum=jnp.asarray(ls_t), lat_sumsq=jnp.asarray(lq_t),
         )
-        self._state, att = self.eng.fleet_step(self._state, step, config=self._engine_cfg)
+        self._state, att = self.eng.fleet_step(
+            self._state, step, config=self._engine_cfg, mesh=self.mesh
+        )
         completed = bool(att.step_completed)
         if completed:
             self._traj.append(att.x)
@@ -777,6 +789,7 @@ def fleet_profile_batched(
     *,
     num_fns: int,
     duration: float,
+    mesh=None,
 ) -> list[FootprintReport]:
     """Profile a whole fleet through the batched *segment* engine.
 
@@ -786,7 +799,9 @@ def fleet_profile_batched(
     for all B nodes run as fleet-wide batched calls
     (``core.batched_engine``).  Pure mode only — combined mode stays on the
     per-node path.  The *online* counterpart (live per-tick state instead
-    of a finished segment) is ``StreamingFleetSession``.
+    of a finished segment) is ``StreamingFleetSession``.  ``mesh`` (a
+    ``distributed.sharding.FleetMesh``) shards the engine's node axis over
+    the mesh devices (B must tile it evenly).
     """
     from repro.core import batched_engine as eng
 
@@ -865,6 +880,7 @@ def fleet_profile_batched(
         # Per-tick attribution is a (B, T, M) dense product nothing in the
         # report consumes; callers that want it use the engine directly.
         with_ticks=False,
+        mesh=mesh,
     )
 
     # Steps 5-6 through the shared finalizer, per node (the heavy math —

@@ -1,4 +1,19 @@
-"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+"""Sharding layers: logical-axis rules for models, fleet-axis mesh for the
+fleet controller.
+
+Two independent partitioning surfaces live here:
+
+1. **Logical-axis rules** (MaxText-style, with divisibility fallback) for
+   the model zoo — parameters/activations annotated with logical axes
+   ("embed", "qkv", ...) mapped onto mesh axes by rule tables.
+2. **Fleet-axis sharding** (:class:`FleetMesh`) for the FaasMeter fleet
+   controller — the B-node axis of the batched/streaming disaggregation
+   engines is sharded over a 1-D device mesh via ``shard_map``: per-node
+   Kalman/disaggregation math runs entirely node-local (no collectives on
+   the hot path) while fleet-level reductions
+   (:func:`fleet_attribution_totals`) ``psum`` along the node axis.
+
+Logical-axis rules (surface 1) in detail:
 
 Parameters and activations are annotated with *logical* axes ("embed",
 "qkv", "mlp", "vocab", "expert", "batch", "seq", "kv_heads", ...); rule
@@ -30,11 +45,14 @@ unless a rule context is active (set by the launchers via
 from __future__ import annotations
 
 import contextlib
+import dataclasses
+import functools
 import math
 import threading
-from typing import Any, Sequence
+from typing import Any, NamedTuple, Sequence
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Array = jax.Array
@@ -183,6 +201,7 @@ def spec_for(
 def sharding_for(
     logical: Sequence[str | None], shape: Sequence[int], mesh: Mesh, rules: Rules
 ) -> NamedSharding:
+    """``spec_for`` wrapped into a concrete ``NamedSharding`` on ``mesh``."""
     return NamedSharding(mesh, spec_for(logical, shape, mesh, rules))
 
 
@@ -215,4 +234,191 @@ def abstract_with_sharding(abstract_tree: Any, logical_tree: Any, mesh: Mesh, ru
         abstract_tree,
         logical_tree,
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fleet-axis sharding: the B-node axis of the disaggregation engines over a
+# 1-D device mesh (docs/architecture.md, "Sharded fleet").
+# ---------------------------------------------------------------------------
+
+#: Mesh-axis name of the fleet's node dimension.
+FLEET_AXIS = "node"
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetMesh:
+    """A 1-D device mesh over the fleet's node (B) axis.
+
+    Frozen and hashable so it can travel as a *static* jit argument — the
+    streaming ``fleet_step`` keys its single trace on (config, mesh), which
+    is what keeps the sharded stream at one compile for its whole lifetime.
+
+    The node axis is the outermost dimension of every fleet array
+    (``FleetInputs``, ``FleetStreamState`` buffers, ``FleetResult`` leaves);
+    under this mesh each of the ``num_devices`` devices owns a contiguous
+    ``B / num_devices`` block of nodes.  Per-node math needs no
+    communication; fleet-level totals cross devices only through explicit
+    ``psum`` (:func:`fleet_attribution_totals`).
+    """
+
+    mesh: Mesh
+    axis: str = FLEET_AXIS
+
+    @property
+    def num_devices(self) -> int:
+        """Devices along the node axis."""
+        return self.mesh.shape[self.axis]
+
+    def validate(self, num_nodes: int) -> None:
+        """Reject fleets whose node count does not tile the mesh evenly."""
+        if num_nodes % self.num_devices != 0:
+            raise ValueError(
+                f"fleet of {num_nodes} node(s) is not divisible by the "
+                f"{self.num_devices}-device '{self.axis}' mesh; pad the fleet "
+                f"or build the mesh with fleet_mesh(num_nodes={num_nodes})"
+            )
+
+    def node_sharding(self) -> NamedSharding:
+        """Sharding that splits an array's leading axis over the nodes."""
+        return NamedSharding(self.mesh, P(self.axis))
+
+    def replicated_sharding(self) -> NamedSharding:
+        """Sharding that replicates a leaf on every mesh device."""
+        return NamedSharding(self.mesh, P())
+
+    def put(self, tree: Any) -> Any:
+        """Place a pytree on the mesh: leading axis sharded, scalars replicated.
+
+        Every leaf with rank >= 1 is split over the node axis (its leading
+        dimension must be divisible); rank-0 leaves (e.g. the streaming
+        state's ``tick_in_step``/``step_idx`` counters) are replicated.
+        Donated state placed this way stays sharded in place across
+        ``fleet_step`` calls — no gather ever materializes the full fleet
+        on one device.
+        """
+
+        def _place(leaf):
+            arr = jnp.asarray(leaf)
+            if arr.ndim == 0:
+                return jax.device_put(arr, self.replicated_sharding())
+            self.validate(arr.shape[0])
+            return jax.device_put(arr, self.node_sharding())
+
+        return jax.tree.map(_place, tree)
+
+    def specs_like(self, tree: Any) -> Any:
+        """Per-leaf ``PartitionSpec`` pytree: node-sharded unless rank-0."""
+        node, rep = P(self.axis), P()
+        return jax.tree.map(lambda l: rep if jnp.ndim(l) == 0 else node, tree)
+
+
+def fleet_mesh(
+    num_nodes: int | None = None,
+    *,
+    devices: Sequence[Any] | None = None,
+    axis: str = FLEET_AXIS,
+) -> FleetMesh:
+    """Build a :class:`FleetMesh` from the available devices.
+
+    With ``num_nodes`` given, the mesh uses the *largest* device count that
+    divides the fleet evenly (so an awkward fleet size degrades to fewer
+    devices instead of failing).  Works on a single device too — the 1-device
+    mesh is the identity sharding, which is what lets every ``mesh=`` code
+    path run (and be tested) without multi-device hardware.
+    """
+    import numpy as np
+
+    devs = list(jax.devices() if devices is None else devices)
+    d = len(devs)
+    if num_nodes is not None:
+        while d > 1 and num_nodes % d != 0:
+            d -= 1
+    return FleetMesh(mesh=Mesh(np.asarray(devs[:d]), (axis,)), axis=axis)
+
+
+def fleet_mesh_auto(num_nodes: int) -> FleetMesh | None:
+    """``fleet_mesh`` for controllers: None unless sharding actually helps.
+
+    Returns a mesh only when more than one device is visible *and* the
+    fleet divides onto more than one of them — the control plane's
+    ``profile_fleet(mesh="auto")`` uses this so single-device deployments
+    keep the exact unsharded code path.
+    """
+    if len(jax.devices()) <= 1:
+        return None
+    fm = fleet_mesh(num_nodes)
+    return fm if fm.num_devices > 1 else None
+
+
+class FleetTotals(NamedTuple):
+    """Fleet-wide conserved-attribution totals (one controller-level view).
+
+    ``per_fn.sum() + unattributed == attributed + unattributed`` equals the
+    fleet's total measured active power-ticks: the per-tick efficiency
+    property survives the cross-node reduction by linearity.
+    """
+
+    per_fn: Array        # (M,) attributed power summed over nodes and ticks (W)
+    attributed: Array    # ()   total attributed power-ticks across the fleet
+    unattributed: Array  # ()   total unattributed power-ticks across the fleet
+    cp_total: Array      # ()   control-plane power summed over nodes (0 if absent)
+
+
+def fleet_attribution_totals(
+    tick_power: Array,            # (B, T, M) conserved per-tick power
+    unattributed: Array,          # (B, T)
+    cp_power: Array | None = None,  # (B,) per-node control-plane power estimate
+    *,
+    mesh: FleetMesh | None = None,
+) -> FleetTotals:
+    """Reduce per-node attribution to fleet totals (the ``psum`` path).
+
+    Unsharded this is three ``jnp.sum`` calls.  With a :class:`FleetMesh`
+    the inputs stay sharded over the node axis: each device reduces its
+    local node block and a single ``psum`` along the axis produces the
+    replicated fleet totals — the only collective in the sharded
+    controller (per-node Kalman/disaggregation math never communicates).
+    """
+    cp = jnp.zeros((tick_power.shape[0],), tick_power.dtype) if cp_power is None else cp_power
+
+    def _local(tp, ua, cpv):
+        return FleetTotals(
+            per_fn=jnp.sum(tp, axis=(0, 1)),
+            attributed=jnp.sum(tp),
+            unattributed=jnp.sum(ua),
+            cp_total=jnp.sum(cpv),
+        )
+
+    if mesh is None:
+        return _local(tick_power, unattributed, cp)
+    mesh.validate(tick_power.shape[0])
+    return _totals_runner(mesh)(tick_power, unattributed, cp)
+
+
+@functools.lru_cache(maxsize=None)
+def _totals_runner(mesh: FleetMesh):
+    """Compiled psum reduction for ``fleet_attribution_totals`` (cached per
+    mesh so repeated controller ticks reuse one executable)."""
+    from repro.distributed.compat import shard_map
+
+    node = P(mesh.axis)
+
+    def _local_psum(tp, ua, cpv):
+        part = FleetTotals(
+            per_fn=jnp.sum(tp, axis=(0, 1)),
+            attributed=jnp.sum(tp),
+            unattributed=jnp.sum(ua),
+            cp_total=jnp.sum(cpv),
+        )
+        return jax.tree.map(lambda v: jax.lax.psum(v, mesh.axis), part)
+
+    return jax.jit(
+        shard_map(
+            _local_psum,
+            mesh=mesh.mesh,
+            in_specs=(node, node, node),
+            out_specs=P(),
+            check_vma=False,
+        )
     )

@@ -183,6 +183,7 @@ class EnergyFirstControlPlane:
         *,
         seeds: list[int] | None = None,
         on_tick=None,
+        mesh="auto",
     ) -> list[ProfiledWorkload]:
         """Profile many nodes through the *streaming* fleet engine, live.
 
@@ -203,6 +204,12 @@ class EnergyFirstControlPlane:
           seeds: optional per-node simulator seeds.
           on_tick: optional hook ``(core.profiler.StreamTick,
             list[StreamingFootprintTracker]) -> None`` run per engine tick.
+          mesh: ``"auto"`` (default) builds a ``FleetMesh`` over the node
+            axis when more than one device is visible and the fleet tiles
+            onto them (``distributed.sharding.fleet_mesh_auto``), so a
+            multi-device controller shards transparently; pass an explicit
+            ``FleetMesh`` to pin the layout or ``None`` to force the
+            single-device path.
 
         Returns:
           One ``ProfiledWorkload`` per node, with ``footprint_stream``
@@ -210,6 +217,12 @@ class EnergyFirstControlPlane:
         """
         if not traces:
             return []
+        if isinstance(mesh, str):
+            if mesh != "auto":
+                raise ValueError(f"mesh must be 'auto', None, or a FleetMesh; got {mesh!r}")
+            from repro.distributed.sharding import fleet_mesh_auto
+
+            mesh = fleet_mesh_auto(len(traces))
         sims = self.simulator.simulate_fleet(traces, seeds)
         duration = traces[0].duration
         num_fns = traces[0].num_fns
@@ -267,6 +280,7 @@ class EnergyFirstControlPlane:
                 has_chip=tels[0].chip_power is not None,
                 has_cp=has_cp_flags[0],
                 on_tick=_on_tick, on_bootstrap=_on_bootstrap,
+                mesh=mesh,
             )
             # Stack each signal once into (N, B) so the replay loop indexes
             # rows instead of doing B Python-level scalar reads per window.
@@ -429,6 +443,9 @@ class EnergyFirstControlPlane:
 
 @dataclasses.dataclass
 class CapRunResult:
+    """Outcome of one capped discrete-event run (``run_capped``): the
+    control-interval power series plus queue-wait/latency distributions."""
+
     power_series: np.ndarray
     control_dt: float
     cap_watts: float
