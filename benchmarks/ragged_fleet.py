@@ -1,0 +1,128 @@
+"""Ragged-fleet padding overhead vs rag ratio (docs/architecture.md,
+"Ragged fleets").
+
+A ragged fleet (per-node window counts) runs padded to the longest node
+with a ``(B, S, n_w)`` validity mask.  The engine's FLOP count is that of
+the *padded* shape, so the cost of raggedness has two parts:
+
+1. **mask overhead** — the elementwise mask fold itself, measured as
+   masked-vs-dense wall-clock at the *same* padded shape (expected ~1.0:
+   the multiplies are negligible against the NNLS/Kalman work);
+2. **padding waste** — the dead-tick fraction, i.e. FLOPs spent on ticks
+   that contribute exactly zero.  Reported per rag ratio ``r`` (per-node
+   lengths drawn uniformly from [r*T, T] at B64): the measured upper
+   bound on what a hypothetical length-sorted/bucketed execution could
+   recover.
+
+Metrics:
+
+- ``dense_ms``            : ``run_fleet`` on the uniform fleet (mask=None)
+- ``ragged_ms_r{75,50}``  : same padded shape, masked, rag ratio 0.75/0.50
+- ``mask_overhead_r{75,50}``: ragged / dense wall-clock (≈ 1.0)
+- ``pad_waste_frac_r{75,50}``: fraction of padded (dead) ticks
+- ``stream_ragged_ms_r50``: the streaming scan on the r=0.50 fleet
+- ``oracle_max_rel_diff`` : ragged vs per-node-oracle cross-check on one
+  node (the 1e-5-class pin lives in tests/test_ragged_fleet.py; this is
+  the rot guard that the benchmark still computes the right thing)
+
+Run standalone:
+
+    PYTHONPATH=src python -m benchmarks.ragged_fleet
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+
+def _best_of(f, reps: int):
+    """(best wall-clock over ``reps``, last result) after one warm-up."""
+    import jax
+
+    out = jax.block_until_ready(f())  # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(f())
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Measure masked-vs-dense engine cost and padding waste per rag ratio.
+
+    ``smoke`` uses tiny shapes (the CI rot gate); ``quick`` is B64 at the
+    paper-ish step geometry; full scale doubles steps and functions.
+    Returns a flat dict of scalar metrics (see module docstring).
+    """
+    import numpy as np
+
+    from repro.core.batched_engine import (
+        EngineConfig,
+        pack_fleet_inputs,
+        run_fleet,
+        run_fleet_sequential,
+        run_fleet_stream,
+        synthetic_ragged_windows,
+    )
+
+    if smoke:
+        b, s, n_w, m, reps = 8, 2, 10, 8, 1
+    elif quick:
+        b, s, n_w, m, reps = 64, 4, 60, 64, 3
+    else:
+        b, s, n_w, m, reps = 64, 8, 60, 128, 5
+
+    n = s * n_w
+    cfg = EngineConfig()
+    rng = np.random.default_rng(0)
+
+    def _pack(ratio: float):
+        lengths = rng.integers(
+            max(int(ratio * n), n_w), n + 1, size=b
+        ).tolist()
+        lengths[0] = n  # keep the padded shape pinned to S steps
+        wins = synthetic_ragged_windows(b, n, m, lengths=lengths, seed=1)
+        return wins, pack_fleet_inputs(*wins, step_windows=n_w, lengths=lengths), lengths
+
+    dense_wins = synthetic_ragged_windows(b, n, m, lengths=[n] * b, seed=1)
+    dense = pack_fleet_inputs(*dense_wins, step_windows=n_w)
+    dense_ms, _ = _best_of(lambda: run_fleet(dense, cfg), reps)
+
+    metrics = {
+        "fleet_shape": f"B{b}xS{s}xW{n_w}xM{m}",
+        "dense_ms": dense_ms * 1e3,
+    }
+    for ratio, tag in ((0.75, "r75"), (0.50, "r50")):
+        wins, inputs, lengths = _pack(ratio)
+        ragged_ms, out = _best_of(lambda: run_fleet(inputs, cfg), reps)
+        dead = 1.0 - float(np.mean(np.asarray(inputs.mask))) if inputs.mask is not None else 0.0
+        metrics[f"ragged_ms_{tag}"] = ragged_ms * 1e3
+        metrics[f"mask_overhead_{tag}"] = ragged_ms / dense_ms
+        metrics[f"pad_waste_frac_{tag}"] = dead
+        if tag == "r50":
+            stream_ms, _ = _best_of(lambda: run_fleet_stream(inputs, cfg), reps)
+            metrics["stream_ragged_ms_r50"] = stream_ms * 1e3
+            # Rot guard: the shortest node still matches its solo run.
+            i = int(np.argmin(lengths))
+            s_i = lengths[i] // n_w
+            sub = pack_fleet_inputs(
+                *[w[i : i + 1, : lengths[i]] for w in wins], step_windows=n_w
+            )
+            ref = run_fleet_sequential(sub, cfg)
+            d = np.abs(np.asarray(out.x_final[i]) - np.asarray(ref.x_final[0]))
+            rel = float(np.max(d / np.maximum(np.abs(np.asarray(ref.x_final[0])), 1.0)))
+            metrics["oracle_max_rel_diff"] = rel
+            metrics["oracle_rel_diff_below_1e4"] = float(rel < 1e-4)
+            metrics["oracle_node_steps"] = s_i
+    return metrics
+
+
+def main() -> None:
+    """Standalone entry point (quick scale)."""
+    print(json.dumps(run(quick=True), indent=1))
+
+
+if __name__ == "__main__":
+    main()

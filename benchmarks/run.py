@@ -32,6 +32,7 @@ MODULES = [
     ("profiler_overhead", "Perf: fleet profiler throughput"),
     ("streaming_overhead", "Perf: streaming engine per-tick overhead"),
     ("sharded_fleet", "Perf: mesh-sharded fleet scaling"),
+    ("ragged_fleet", "Perf: ragged-fleet padding overhead vs rag ratio"),
     ("kernel_bench", "Perf: kernel path"),
 ]
 

@@ -36,6 +36,7 @@ SURFACES = (
     "repro.core.profiler",
     "repro.serving.control_plane",
     "repro.distributed.sharding",
+    "benchmarks.ragged_fleet",
 )
 for mod_name in SURFACES:
     mod = importlib.import_module(mod_name)
@@ -74,9 +75,9 @@ if missing:
 print(f"benchmark smoke OK ({len(results)} modules, strict well-formed JSON)")
 EOF
 
-echo "== sharded-fleet pin (forced 8-device host mesh, own subprocess) =="
+echo "== sharded + ragged fleet pins (forced 8-device host mesh, own subprocess) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-  python -m pytest -q tests/test_sharded_fleet.py
+  python -m pytest -q tests/test_sharded_fleet.py tests/test_ragged_fleet.py
 
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"

@@ -36,14 +36,20 @@ Per-tick attribution (``FleetResult.tick_power``) redistributes each tick's
 measured active power over the functions running in it, proportional to
 their estimated draw — the Shapley efficiency property enforced per tick,
 so per-function footprints sum to the measured total by construction.
+
+Fleets may be *ragged* — per-node window counts, nodes joining or leaving
+mid-stream: ``pack_fleet_inputs(lengths=)`` pads to the longest node and
+every engine carries the resulting validity mask (``FleetInputs.mask`` /
+``FleetStep.valid``) so padded ticks contribute exactly zero energy and
+masked-out steps freeze the Kalman state (docs/architecture.md, "Ragged
+fleets"; pinned in tests/test_ragged_fleet.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -90,13 +96,25 @@ class EngineConfig:
 
 
 class FleetInputs(NamedTuple):
-    """One fleet profiling batch: B nodes, S steps of n_w ticks, M functions."""
+    """One fleet profiling batch: B nodes, S steps of n_w ticks, M functions.
+
+    ``mask`` makes the fleet *ragged*: a ``(B, S, n_w)`` per-tick validity
+    mask (1.0 = real telemetry tick, 0.0 = padding) whose flattened view is
+    the ``(B, T)`` tick mask with ``T = S * n_w``.  ``mask=None`` means
+    every tick is real (the dense fleet — the engines take the exact
+    pre-ragged code path).  The mask is *data*, not a static shape: fleets
+    with different rag patterns share one jit trace.  Masked ticks
+    contribute exactly zero energy and masked-out steps freeze the Kalman
+    state (see ``pack_fleet_inputs`` and docs/architecture.md,
+    "Ragged fleets").
+    """
 
     c: Array          # (B, S, n_w, M) contribution seconds per tick
     w: Array          # (B, S, n_w) idle-adjusted active power per tick (W)
     a: Array          # (B, S, M) invocation counts per step
     lat_sum: Array    # (B, S, M) summed latency per step
     lat_sumsq: Array  # (B, S, M) summed squared latency per step
+    mask: Array | None = None  # (B, S, n_w) tick validity; None = all real
 
 
 class FleetResult(NamedTuple):
@@ -175,13 +193,42 @@ def _init_states(x0: Array) -> KalmanState:
     return jax.vmap(lambda x: kalman_init(x.shape[-1], x0=x))(x0)
 
 
+def _apply_mask(inputs: FleetInputs) -> FleetInputs:
+    """Fold a ragged fleet's validity mask into its data (identity if dense).
+
+    Masked ticks get ``c = 0`` and ``w = 0`` — to the update rule they are
+    indistinguishable from silent windows, so their gram/rhs/innovation
+    contributions vanish *exactly* (adding a float zero is exact) — and
+    steps with no valid tick additionally get zeroed invocation/latency
+    statistics, which freezes the Kalman state on them: ``_apply_update``
+    keeps ``x``/``p``/``seen`` and the latency moments wherever
+    ``a_step == 0``.  This is the single place mask semantics are defined;
+    every segment engine (and the sequential oracle) routes its inputs
+    through here, so the three paths cannot disagree on what a masked tick
+    means.  Because masking is a data-dependent multiply, not a shape
+    change, differing rag patterns reuse one compiled trace.
+    """
+    if inputs.mask is None:
+        return inputs
+    m = inputs.mask.astype(inputs.c.dtype)
+    step_live = (jnp.sum(m, axis=-1) > 0).astype(inputs.a.dtype)[..., None]
+    return FleetInputs(
+        c=inputs.c * m[..., None],
+        w=inputs.w * m,
+        a=inputs.a * step_live,
+        lat_sum=inputs.lat_sum * step_live,
+        lat_sumsq=inputs.lat_sumsq * step_live,
+        mask=inputs.mask,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Mesh-sharded execution: the B-node axis over a FleetMesh via shard_map.
 # ---------------------------------------------------------------------------
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_segment_runner(fn, config: EngineConfig, with_ticks: bool, mesh):
+def _sharded_segment_runner(fn, config: EngineConfig, with_ticks: bool, mesh, default_init: bool):
     """Compiled shard_map wrapper for a segment engine (``run_fleet``,
     ``run_fleet_gram``, or ``run_fleet_stream``).
 
@@ -189,8 +236,11 @@ def _sharded_segment_runner(fn, config: EngineConfig, with_ticks: bool, mesh):
     block — per-node Kalman/disaggregation math is node-independent, so the
     sharded program contains no collectives at all; fleet-level reductions
     live in ``distributed.sharding.fleet_attribution_totals``.  Cached per
-    (engine, config, with_ticks, mesh) so repeated calls (benchmarks, the
-    control plane's per-segment loop) reuse one executable.
+    (engine, config, with_ticks, mesh, default_init) so repeated calls
+    (benchmarks, the control plane's per-segment loop) reuse one
+    executable.  ``default_init`` selects the no-init-block variant, which
+    lets the engine derive X_0 from its (mask-folded) local inputs on
+    device instead of the host pre-computing masked defaults.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -198,14 +248,22 @@ def _sharded_segment_runner(fn, config: EngineConfig, with_ticks: bool, mesh):
 
     node = P(mesh.axis)
 
-    def local(inputs, init_c, init_w):
-        return fn(inputs, config, init_c=init_c, init_w=init_w, with_ticks=with_ticks)
+    if default_init:
+        def local(inputs):
+            return fn(inputs, config, with_ticks=with_ticks)
+
+        in_specs = (node,)
+    else:
+        def local(inputs, init_c, init_w):
+            return fn(inputs, config, init_c=init_c, init_w=init_w, with_ticks=with_ticks)
+
+        in_specs = (node, node, node)
 
     return jax.jit(
         shard_map(
             local,
             mesh=mesh.mesh,
-            in_specs=(node, node, node),
+            in_specs=in_specs,
             out_specs=node,
             check_vma=False,
         )
@@ -215,12 +273,18 @@ def _sharded_segment_runner(fn, config: EngineConfig, with_ticks: bool, mesh):
 def _run_sharded(fn, inputs, config, init_c, init_w, with_ticks, mesh) -> FleetResult:
     """Dispatch a segment engine over a ``FleetMesh`` (see docs/architecture.md)."""
     mesh.validate(inputs.c.shape[0])
-    runner = _sharded_segment_runner(fn, config, with_ticks, mesh)
-    return runner(
-        inputs,
-        inputs.c if init_c is None else init_c,
-        inputs.w if init_w is None else init_w,
-    )
+    default_init = init_c is None and init_w is None
+    runner = _sharded_segment_runner(fn, config, with_ticks, mesh, default_init)
+    if default_init:
+        # The engine folds the mask and derives X_0 per local shard.
+        return runner(inputs)
+    if init_c is None or init_w is None:
+        # Mixed case: the missing default must be the MASKED inputs, or a
+        # ragged fleet's padding would leak into the init gram.
+        masked = _apply_mask(inputs)
+        init_c = masked.c if init_c is None else init_c
+        init_w = masked.w if init_w is None else init_w
+    return runner(inputs, init_c, init_w)
 
 
 def run_fleet(
@@ -247,9 +311,16 @@ def run_fleet(
     With ``mesh`` (a ``distributed.sharding.FleetMesh``) the node axis is
     sharded over the mesh devices via ``shard_map``: each device runs these
     same stages on its local node block, collective-free, pinned to the
-    unsharded result at 1e-5 (tests/test_sharded_fleet.py)."""
+    unsharded result at 1e-5 (tests/test_sharded_fleet.py).
+
+    Ragged fleets: with ``inputs.mask`` set, masked ticks are folded to
+    zero telemetry (``_apply_mask``) before any stage runs — they feed no
+    gram/innovation statistics, attribute exactly 0 W in ``tick_power``,
+    and fully-masked steps leave the per-node Kalman state untouched (the
+    trajectory repeats the frozen estimate)."""
     if mesh is not None:
         return _run_sharded(run_fleet, inputs, config, init_c, init_w, with_ticks, mesh)
+    inputs = _apply_mask(inputs)
     x0 = fleet_initial_estimate(
         inputs.c if init_c is None else init_c,
         inputs.w if init_w is None else init_w,
@@ -293,11 +364,15 @@ def run_fleet_gram(
     TPU, XLA einsum elsewhere), then an O(M^2)-per-step fleet scan that
     never touches the window dimension.  Same update rule as ``run_fleet``;
     equal up to float reassociation of the hoisted contractions.  ``mesh``
-    shards the node axis exactly as in ``run_fleet``."""
+    shards the node axis exactly as in ``run_fleet``; ``inputs.mask``
+    makes the fleet ragged exactly as in ``run_fleet`` (masked ticks are
+    zeroed *before* the gram hoist, so they drop out of the hoisted
+    statistics too)."""
     if mesh is not None:
         return _run_sharded(
             run_fleet_gram, inputs, config, init_c, init_w, with_ticks, mesh
         )
+    inputs = _apply_mask(inputs)
     gram_fn = _gram_fn(config.backend)
     x0 = fleet_initial_estimate(
         inputs.c if init_c is None else init_c,
@@ -341,8 +416,12 @@ def run_fleet_sequential(
 
     Loops nodes x steps calling the per-step ``kalman_step`` exactly as the
     seed's per-node profiler did; used by tests as the ground truth the
-    batched paths must reproduce and by benchmarks as the baseline."""
+    batched paths must reproduce and by benchmarks as the baseline.
+    Ragged fleets go through the same ``_apply_mask`` fold as the batched
+    engines, so the oracle defines masked semantics too."""
     from repro.core.disaggregation import solve_nnls_gram
+
+    inputs = _apply_mask(inputs)
 
     b, s, n_w, m = inputs.c.shape
     ic = inputs.c if init_c is None else init_c
@@ -435,7 +514,16 @@ class FleetStep(NamedTuple):
     invocations *starting* in this tick; the engine only reads their running
     sums at Kalman-step boundaries, so any within-step placement that sums to
     the per-step statistics is equivalent (``fleet_ticks`` puts each step's
-    totals on its first tick when replaying segment inputs).
+    totals on its first valid tick when replaying segment inputs).
+
+    ``valid`` makes the tick *ragged*: a per-node liveness flag (1.0 = this
+    node really produced this tick; 0.0 = the node's stream has ended, has
+    not joined yet, or dropped the window).  Invalid node-ticks are folded
+    to zero telemetry before they touch the ring buffer or the attribution
+    split, so a dead node contributes nothing mid-step and its Kalman state
+    freezes once a whole step passes without valid ticks — global stream
+    time keeps advancing for the live nodes.  ``valid=None`` means every
+    node is live (the dense fleet; identical trace to the pre-ragged step).
     """
 
     c: Array          # (B, M) contribution seconds within this tick
@@ -443,6 +531,7 @@ class FleetStep(NamedTuple):
     a: Array          # (B, M) invocations starting in this tick
     lat_sum: Array    # (B, M) summed latency of those invocations (s)
     lat_sumsq: Array  # (B, M) summed squared latency (s^2)
+    valid: Array | None = None  # (B,) node liveness this tick; None = all live
 
 
 class FleetStreamState(NamedTuple):
@@ -538,13 +627,15 @@ def fleet_stream_init(
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_step_runner(config: EngineConfig, mesh):
+def _sharded_step_runner(config: EngineConfig, mesh, has_valid: bool):
     """shard_map of the streaming step over a ``FleetMesh`` (cached per
-    (config, mesh) — together with the jit cache this keeps the sharded
-    stream at exactly one trace for its whole lifetime).
+    (config, mesh, has_valid) — together with the jit cache this keeps the
+    sharded stream at exactly one trace for its whole lifetime).
 
-    Array state/step/attribution leaves shard over the node axis; the
-    scalar ``tick_in_step``/``step_idx``/``step_completed`` counters are
+    Array state/step/attribution leaves shard over the node axis — the
+    ragged-fleet ``valid`` flag included, so each device only ever sees its
+    own node block's liveness; the scalar
+    ``tick_in_step``/``step_idx``/``step_completed`` counters are
     replicated (every device advances them identically).
     """
     from jax.sharding import PartitionSpec as P
@@ -556,7 +647,10 @@ def _sharded_step_runner(config: EngineConfig, mesh):
         kalman=node, c_buf=node, w_buf=node, a=node,
         lat_sum=node, lat_sumsq=node, tick_in_step=rep, step_idx=rep,
     )
-    step_specs = FleetStep(c=node, w=node, a=node, lat_sum=node, lat_sumsq=node)
+    step_specs = FleetStep(
+        c=node, w=node, a=node, lat_sum=node, lat_sumsq=node,
+        valid=node if has_valid else None,
+    )
     att_specs = TickAttribution(
         tick_power=node, unattributed=node, x=node, step_completed=rep
     )
@@ -592,10 +686,24 @@ def _fleet_step_impl(
     node block's ring buffer and filter state), the per-tick math is
     collective-free, and the replicated ``tick_in_step``/``step_idx``
     counters drive the *same* boundary ``lax.cond`` on every device.
+
+    Ragged fleets (``step.valid``): invalid node-ticks write zero rows
+    into the ring buffer and add nothing to the invocation sums, so the
+    boundary update reduces each node's step over exactly its valid ticks
+    — the same semantics as the segment engines' ``_apply_mask`` — and
+    their attribution is exactly zero.  ``valid`` is data: a stream keeps
+    its single trace as nodes come and go.
     """
     if mesh is not None:
-        step_fn = _sharded_step_runner(config, mesh)
+        step_fn = _sharded_step_runner(config, mesh, step.valid is not None)
         return step_fn(state, step)
+    if step.valid is not None:
+        v = step.valid.astype(step.c.dtype)
+        step = FleetStep(
+            c=step.c * v[:, None], w=step.w * v,
+            a=step.a * v[:, None], lat_sum=step.lat_sum * v[:, None],
+            lat_sumsq=step.lat_sumsq * v[:, None],
+        )
     kcfg = config.kalman
     n_w = state.c_buf.shape[1]
     c_buf = jax.lax.dynamic_update_index_in_dim(
@@ -649,9 +757,11 @@ fleet_step.__doc__ = """Jitted streaming tick update (donates ``state``).
 ``fleet_step(state, step, config=..., mesh=...)`` — the live metering hot
 path.  ``config`` and ``mesh`` are static and the step length n_w comes
 from the state's ring buffer shape (set by ``fleet_stream_init``), so
-there is one trace per (fleet shape, config, mesh) triple, reused for
-every subsequent tick; the retracing guards in
-tests/test_streaming_engine.py and tests/test_sharded_fleet.py pin this.
+there is one trace per (fleet shape, config, mesh, has-valid) tuple,
+reused for every subsequent tick — ``step.valid``'s *values* are data, so
+ragged fleets with changing liveness never retrace; the retracing guards
+in tests/test_streaming_engine.py, tests/test_sharded_fleet.py, and
+tests/test_ragged_fleet.py pin this.
 The input ``state`` is donated — its buffers are reused for the output
 state (in place, and still sharded when a ``FleetMesh`` is active), so the
 caller must rebind (``state, att = fleet_step(state, step, ...)``) and must
@@ -675,19 +785,35 @@ def fleet_ticks(inputs: FleetInputs) -> FleetStep:
     """Explode segment inputs into a time-major (T, B, ...) tick stream.
 
     Inverse of the (B, S, n_w) step grouping: T = S * n_w ticks, with each
-    step's invocation/latency statistics placed on its first tick (the
-    engine only reads their sums at boundaries, so placement is free).
-    Feed the result to ``lax.scan`` (``run_fleet_stream``) or slice ticks
-    off it to drive ``fleet_step`` one dispatch at a time.
+    step's invocation/latency statistics placed on its first *valid* tick
+    (the engine only reads their sums at boundaries, so placement among
+    the valid ticks is free — an invalid tick would drop them, since the
+    streaming step zeroes invalid node-ticks).  A ragged ``inputs.mask``
+    becomes the per-tick ``FleetStep.valid`` flags.  Feed the result to
+    ``lax.scan`` (``run_fleet_stream``) or slice ticks off it to drive
+    ``fleet_step`` one dispatch at a time.
     """
+    return _fleet_ticks_masked(_apply_mask(inputs))
+
+
+def _fleet_ticks_masked(inputs: FleetInputs) -> FleetStep:
+    """``fleet_ticks`` body for inputs whose mask is already folded in
+    (``run_fleet_stream`` folds once and reuses the result for the init
+    solve, the tick stream, and the final attribution)."""
     b, s, n_w, m = inputs.c.shape
-    zeros = jnp.zeros((b, s, n_w, m), inputs.a.dtype)
-    a_t = zeros.at[:, :, 0, :].set(inputs.a)
-    ls_t = zeros.at[:, :, 0, :].set(inputs.lat_sum)
-    lq_t = zeros.at[:, :, 0, :].set(inputs.lat_sumsq)
     tm = lambda x: jnp.moveaxis(x.reshape((b, s * n_w) + x.shape[3:]), 0, 1)
+    if inputs.mask is None:
+        first = jnp.zeros((b, s), jnp.int32)
+        valid = None
+    else:
+        first = jnp.argmax(inputs.mask, axis=-1).astype(jnp.int32)  # (B, S)
+        valid = tm(inputs.mask.astype(inputs.w.dtype))              # (T, B)
+    onehot = jax.nn.one_hot(first, n_w, dtype=inputs.a.dtype)       # (B, S, n_w)
+    place = lambda x: onehot[..., None] * x[:, :, None, :]
     return FleetStep(
-        c=tm(inputs.c), w=tm(inputs.w), a=tm(a_t), lat_sum=tm(ls_t), lat_sumsq=tm(lq_t)
+        c=tm(inputs.c), w=tm(inputs.w), a=tm(place(inputs.a)),
+        lat_sum=tm(place(inputs.lat_sum)), lat_sumsq=tm(place(inputs.lat_sumsq)),
+        valid=valid,
     )
 
 
@@ -711,7 +837,9 @@ def run_fleet_stream(
     comparability (the causal live variant is what ``fleet_step`` emits).
 
     Args:
-      inputs: (B, S, n_w, M) step-grouped fleet batch.
+      inputs: (B, S, n_w, M) step-grouped fleet batch; a ragged
+        ``inputs.mask`` flows into per-tick ``FleetStep.valid`` flags via
+        ``fleet_ticks`` (same masked semantics as ``run_fleet``).
       config: engine configuration (``backend`` is ignored here — streaming
         accumulation is tick-wise by definition).
       init_c/init_w: optional dedicated init block for X_0 (profiler-style);
@@ -728,6 +856,7 @@ def run_fleet_stream(
         return _run_sharded(
             run_fleet_stream, inputs, config, init_c, init_w, with_ticks, mesh
         )
+    inputs = _apply_mask(inputs)
     x0 = fleet_initial_estimate(
         inputs.c if init_c is None else init_c,
         inputs.w if init_w is None else init_w,
@@ -735,7 +864,7 @@ def run_fleet_stream(
     )
     b, s, n_w, m = inputs.c.shape
     state0 = fleet_stream_init(x0, n_w, config)
-    final, att = _scan_stream(state0, fleet_ticks(inputs), config)
+    final, att = _scan_stream(state0, _fleet_ticks_masked(inputs), config)
     # Boundary ticks carry each step's post-update estimate: the trajectory.
     traj = jnp.moveaxis(att.x.reshape(s, n_w, b, m)[:, -1], 1, 0)  # (B, S, M)
     tick_power = unattributed = None
@@ -801,43 +930,134 @@ def pack_fleet_inputs(
     lat_sumsq_w: Array,  # (B, N, M)
     *,
     step_windows: int,
+    lengths: Sequence[int] | Array | None = None,
+    strict: bool = False,
 ) -> FleetInputs:
-    """Group per-window arrays into (B, S, n_w, ...) Kalman-step blocks.
+    """Group per-window arrays into (B, S, n_w, ...) Kalman-step blocks,
+    padding + masking ragged fleets instead of truncating them.
 
-    The ragged tail (``N mod step_windows`` windows) is truncated, mirroring
-    the per-node profiler's behavior; a ``UserWarning`` reports how many
-    ticks were dropped.  Full ragged-fleet support (per-node window counts
-    via padding + masks) is a ROADMAP item — see the "Padding, truncation,
-    and ragged fleets" section of docs/architecture.md.
+    Each node ``i`` contributes ``lengths[i]`` real windows (arrays are
+    padded to a common N on the window axis; values past a node's length
+    are ignored).  A Kalman update is defined over a full ``step_windows``
+    block, so node ``i`` yields ``S_i = lengths[i] // step_windows`` steps
+    — the sub-step remainder feeds no update, exactly like the per-node
+    profiler's ``segment_plan`` tail — and the fleet packs to
+    ``S = max_i S_i`` steps with a ``(B, S, n_w)`` validity mask marking
+    each node's real ticks.  Everything outside a node's valid region is
+    zeroed and masked, so junk in the padded tail of the caller's arrays
+    can never leak into grams, innovations, or attribution.  A uniform
+    fleet whose window count divides ``step_windows`` packs with
+    ``mask=None`` — the dense engines' exact pre-ragged inputs.
 
     Args:
       c_windows/w_windows: (B, N, M)/(B, N) per-window contributions/power.
       a_windows/lat_sum_w/lat_sumsq_w: (B, N, M) per-window invocation
         counts and latency moments (summed into per-step statistics).
       step_windows: n_w, ticks per Kalman step.
+      lengths: per-node real window counts; ``None`` means every node has
+        all N windows.
+      strict: require the old equal-length contract — every node must have
+        exactly N windows and N must divide ``step_windows`` evenly;
+        anything ragged raises ``ValueError`` instead of being masked.
 
     Returns:
-      ``FleetInputs`` with S = N // step_windows steps.
+      ``FleetInputs`` with S = max_i(lengths[i] // step_windows) steps and
+      ``mask`` set iff the fleet is actually ragged.
     """
     b, n, m = c_windows.shape
-    s = n // step_windows
+    if lengths is None:
+        lengths_arr = jnp.full((b,), n, jnp.int32)
+    else:
+        import numpy as np
+
+        lengths_np = np.asarray(lengths, np.int64)
+        if lengths_np.shape != (b,):
+            raise ValueError(
+                f"lengths must have shape ({b},), got {lengths_np.shape}"
+            )
+        if np.any(lengths_np < 0) or np.any(lengths_np > n):
+            raise ValueError(
+                f"lengths must lie in [0, {n}] (the padded window axis); "
+                f"got {lengths_np.tolist()}"
+            )
+        lengths_arr = jnp.asarray(lengths_np, jnp.int32)
+    if strict:
+        import numpy as np
+
+        lens = np.asarray(lengths_arr)
+        if np.any(lens != n) or n % step_windows != 0:
+            raise ValueError(
+                f"pack_fleet_inputs(strict=True) requires every node to "
+                f"have exactly N={n} windows with N divisible by "
+                f"step_windows={step_windows}; got lengths="
+                f"{lens.tolist()} (use strict=False for pad-and-mask)"
+            )
+    s_nodes = lengths_arr // step_windows            # (B,) full steps per node
+    s = int(jnp.max(s_nodes))
     if s == 0:
         raise ValueError(
-            f"need at least step_windows={step_windows} windows, got {n}"
+            f"need at least step_windows={step_windows} windows on at "
+            f"least one node, got lengths "
+            f"{jnp.asarray(lengths_arr).tolist()} (N={n})"
         )
     n_used = s * step_windows
-    if n_used < n:
-        warnings.warn(
-            f"pack_fleet_inputs: dropping {n - n_used} ragged-tail tick(s) "
-            f"per node ({n} windows, step_windows={step_windows}); ragged "
-            "fleets are not yet supported (docs/architecture.md)",
-            UserWarning,
-            stacklevel=2,
-        )
-    return FleetInputs(
-        c=c_windows[:, :n_used].reshape(b, s, step_windows, m),
-        w=w_windows[:, :n_used].reshape(b, s, step_windows),
-        a=a_windows[:, :n_used].reshape(b, s, step_windows, m).sum(axis=2),
-        lat_sum=lat_sum_w[:, :n_used].reshape(b, s, step_windows, m).sum(axis=2),
-        lat_sumsq=lat_sumsq_w[:, :n_used].reshape(b, s, step_windows, m).sum(axis=2),
+    if n < n_used:
+        raise ValueError(f"window axis N={n} shorter than S*n_w={n_used}")
+    # Per-node valid region: the first S_i full steps' ticks, nothing else.
+    tick_valid = (
+        jnp.arange(n_used, dtype=jnp.int32)[None, :]
+        < (s_nodes * step_windows)[:, None]
+    )                                                # (B, n_used) bool
+    mask = tick_valid.reshape(b, s, step_windows).astype(jnp.float32)
+    mv = mask[..., None]
+    grp = lambda x: x[:, :n_used].reshape(b, s, step_windows, m)
+    inputs = FleetInputs(
+        c=grp(c_windows) * mv,
+        w=w_windows[:, :n_used].reshape(b, s, step_windows) * mask,
+        a=(grp(a_windows) * mv).sum(axis=2),
+        lat_sum=(grp(lat_sum_w) * mv).sum(axis=2),
+        lat_sumsq=(grp(lat_sumsq_w) * mv).sum(axis=2),
+        mask=None if bool(jnp.all(tick_valid)) else mask,
+    )
+    return inputs
+
+
+def synthetic_ragged_windows(
+    b: int, n: int, m: int, *, lengths: Sequence[int], seed: int = 0,
+    density: float = 0.2,
+):
+    """Per-*window* synthetic fleet arrays for ragged packing.
+
+    The window-granular twin of ``synthetic_fleet``: returns
+    ``(c, w, a, lat_sum, lat_sumsq)`` with shape (B, N, ...) plus the
+    given per-node ``lengths``, ready for ``pack_fleet_inputs``.  Windows
+    past each node's length are filled with *non-zero junk* on purpose —
+    the pad-and-mask contract says they must not be able to leak into any
+    result, and the ragged tests and ``benchmarks/ragged_fleet.py`` both
+    rely on that property being exercised, not vacuously true.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    c = np.abs(rng.standard_normal((b, n, m))) * (rng.random((b, n, m)) > 1 - density)
+    x_true = np.abs(rng.standard_normal((b, m))) * 20.0 + 2.0
+    w = np.maximum(
+        np.einsum("bnm,bm->bn", c, x_true) + 0.1 * rng.standard_normal((b, n)), 0.0
+    )
+    a = ((rng.random((b, n, m)) > 0.8) * rng.integers(0, 3, (b, n, m))).astype(np.float32)
+    lat = np.abs(rng.standard_normal((b, n, m)))
+    ls, lq = lat * a, lat**2 * a
+    # Junk beyond each node's real windows: masking must erase it exactly.
+    for i, li in enumerate(lengths):
+        c[i, li:] = 7.7
+        w[i, li:] = 123.0
+        a[i, li:] = 3.0
+        ls[i, li:] = 9.9
+        lq[i, li:] = 9.9
+    return (
+        jnp.asarray(c, jnp.float32),
+        jnp.asarray(w, jnp.float32),
+        jnp.asarray(a, jnp.float32),
+        jnp.asarray(ls, jnp.float32),
+        jnp.asarray(lq, jnp.float32),
     )

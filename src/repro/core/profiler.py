@@ -20,7 +20,7 @@ vmap the underlying kernels over nodes.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -277,7 +277,7 @@ class FaasMeterProfiler:
         traces: list[tuple[Array, Array, Array]],
         *,
         num_fns: int,
-        duration: float,
+        duration: float | Sequence[float],
         idle_watts,
         has_chip: bool,
         has_cp: bool,
@@ -290,10 +290,13 @@ class FaasMeterProfiler:
         The streaming counterpart of ``fleet_profile_batched``: returns a
         ``StreamingFleetSession`` to be fed one telemetry window at a time
         via ``push_window``; ``finalize`` yields the same per-node
-        ``FootprintReport`` list.  Raises ``ValueError`` for configurations
-        the streaming engine does not cover (combined mode, non-default
-        disaggregation, segments too short for a Kalman step).  ``mesh``
-        (a ``distributed.sharding.FleetMesh``) shards the carried engine
+        ``FootprintReport`` list.  ``duration`` may be a per-node sequence
+        (ragged fleet: nodes whose streams end mid-segment are masked out
+        of the engine while the rest keep ticking).  Raises ``ValueError``
+        for configurations the streaming engine does not cover (combined
+        mode, non-default disaggregation, segments too short for a Kalman
+        step, ragged nodes too short to bootstrap).  ``mesh`` (a
+        ``distributed.sharding.FleetMesh``) shards the carried engine
         state and every per-tick update over the node axis.
         """
         return StreamingFleetSession(
@@ -386,22 +389,41 @@ class FaasMeterProfiler:
         return a_steps, lat_sums, lat_sumsqs
 
 
+def _node_durations(duration, b: int) -> tuple[list[float], bool]:
+    """Normalize a ``duration`` argument to per-node seconds.
+
+    Accepts one float (the homogeneous fleet) or a length-B sequence (the
+    ragged fleet — nodes covering different segment spans).  Returns the
+    per-node list plus whether the fleet is actually ragged.
+    """
+    if np.ndim(duration) == 0:
+        return [float(duration)] * b, False
+    durations = [float(d) for d in duration]
+    if len(durations) != b:
+        raise ValueError(
+            f"duration sequence has {len(durations)} entries for {b} node(s)"
+        )
+    return durations, len(set(durations)) > 1
+
+
 def fleet_profile(
     profiler: FaasMeterProfiler,
     traces: list[tuple[Array, Array, Array]],
     telemetries: list[Telemetry],
     *,
     num_fns: int,
-    duration: float,
+    duration: float | Sequence[float],
 ) -> list[FootprintReport]:
     """Profile many nodes sequentially (the per-node reference path).
 
     Orchestration-level loop; the per-node math is jitted and shape-stable
-    so XLA caches a single executable across nodes.  The compiled fleet hot
-    path is ``fleet_profile_batched``."""
+    so XLA caches a single executable across nodes (per distinct duration
+    when the fleet is ragged — ``duration`` may be a per-node sequence).
+    The compiled fleet hot path is ``fleet_profile_batched``."""
+    durations, _ = _node_durations(duration, len(traces))
     return [
-        profiler.profile(f, st, en, num_fns=num_fns, duration=duration, telemetry=tel)
-        for (f, st, en), tel in zip(traces, telemetries)
+        profiler.profile(f, st, en, num_fns=num_fns, duration=d, telemetry=tel)
+        for (f, st, en), tel, d in zip(traces, telemetries, durations)
     ]
 
 
@@ -423,6 +445,8 @@ class StreamTick(NamedTuple):
     target: np.ndarray          # (B,) idle-adjusted power fed to the engine (W)
     w_sys: np.ndarray           # (B,) synchronized system power (W)
     step_completed: bool        # did this tick close a Kalman step
+    valid: np.ndarray | None = None  # (B,) bool: node still streaming at t
+                                     # (None on a uniform fleet = all live)
 
 
 class StreamingFleetSession:
@@ -449,8 +473,13 @@ class StreamingFleetSession:
     path's edge clamp at ``finalize``.
 
     Restrictions (same fleet homogeneity as ``fleet_profile_batched``): pure
-    mode, default NNLS/no_idle disaggregation, equal duration/num_fns across
-    nodes, and at least one full Kalman step after the init window.
+    mode, default NNLS/no_idle disaggregation, equal num_fns across nodes,
+    every node covering the common init window, and at least one node with
+    a full Kalman step after it.  Durations may differ per node (a *ragged*
+    fleet): pass a sequence — nodes whose stream ends mid-segment simply
+    stop feeding the engine (``FleetStep.valid`` masks them out, so their
+    Kalman state freezes while the live nodes keep ticking) and finalize
+    against their own window count.
     """
 
     def __init__(
@@ -459,7 +488,7 @@ class StreamingFleetSession:
         traces: list[tuple[Array, Array, Array]],
         *,
         num_fns: int,
-        duration: float,
+        duration: float | Sequence[float],
         idle_watts,
         has_chip: bool,
         has_cp: bool,
@@ -471,7 +500,10 @@ class StreamingFleetSession:
           profiler: configured ``FaasMeterProfiler`` (pure mode only).
           traces: per-node (fn_id, start, end) invocation arrays.
           num_fns: number of unique functions M.
-          duration: segment length in seconds (fixes the window count).
+          duration: segment length in seconds — one float, or a per-node
+            sequence for a ragged fleet (every node must still cover the
+            N_init window; ``push_window`` spans the longest node, and
+            entries for already-ended nodes are ignored).
           idle_watts: (B,) static idle power per node.
           has_chip: whether ``push_window`` will carry a chip reference
             (enables skew estimation).
@@ -497,8 +529,9 @@ class StreamingFleetSession:
         self.cfg = cfg
         self.eng = eng
         self.num_fns = num_fns
-        self.duration = float(duration)
         self.b = len(traces)
+        self.durations, self._ragged = _node_durations(duration, self.b)
+        self.duration = max(self.durations)
         self.has_chip = has_chip
         self.has_cp = has_cp
         self.on_tick = on_tick
@@ -507,11 +540,32 @@ class StreamingFleetSession:
         if mesh is not None:
             mesh.validate(self.b)
 
-        self.n_windows, self.init_n, self.s, self.n_used = segment_plan(cfg, duration)
+        plans = [segment_plan(cfg, d) for d in self.durations]
+        self.s_nodes = [p[2] for p in plans]
+        self.n_windows = max(p[0] for p in plans)
+        self.init_n = plans[0][1]
+        self.s = max(self.s_nodes)
+        self.n_used = self.init_n + self.s * cfg.step_windows
+        if any(p[1] != self.init_n for p in plans):
+            raise ValueError(
+                "ragged fleet: every node must cover the common N_init "
+                f"window ({cfg.init_windows} windows); got per-node init "
+                f"blocks {[p[1] for p in plans]} (use the per-node path)"
+            )
         if self.s == 0:
             raise ValueError(
                 "segment too short for a Kalman step; use the per-node path"
             )
+        # Per-node engine span: the last tick node i really feeds.  Its
+        # sub-step tail (and everything after its stream ends) is masked
+        # out of the engine, mirroring the batched path's per-node S_i.
+        self._n_used_nodes = np.asarray(
+            [self.init_n + s_i * cfg.step_windows for s_i in self.s_nodes]
+        )
+        # Per-node real window counts: the sync edge clamp must stop at
+        # each node's OWN last real window (matching the batch path's
+        # apply_shift clamp), never read into another node's span.
+        self._n_nodes = np.asarray([p[0] for p in plans], np.float64)
         self.m_aug = num_fns + (1 if has_cp else 0)
         self.idle = jnp.asarray(np.asarray(idle_watts, np.float32))
         self.init_seconds = self.init_n * cfg.delta
@@ -615,13 +669,15 @@ class StreamingFleetSession:
     def _synced_window(self, t: int) -> np.ndarray:
         """(B,) synchronized system power for window ``t`` (``apply_shift``
         semantics: per-node linear interpolation of ``t + skew``, edges
-        clamped to the segment; the sync lookahead guarantees the needed
-        raw windows have arrived, except at the segment tail where the
-        clamp reproduces the batch path's zero-order hold)."""
-        n = self.n_windows
+        clamped to each node's OWN segment — on a ragged fleet a short
+        node's positively-skewed tail reads must zero-order-hold at its
+        last real window, exactly like the batch path's per-node clamp,
+        never interpolate into the padding after its stream ended; the
+        sync lookahead guarantees the needed raw windows have arrived)."""
+        n = self._n_nodes  # (B,) per-node real window counts
         pos = np.clip(t + self.skews, 0.0, n - 1.0)
         lo = np.floor(pos).astype(np.int64)
-        hi = np.minimum(lo + 1, n - 1)
+        hi = np.minimum(lo + 1, (n - 1).astype(np.int64))
         frac = (pos - lo).astype(np.float32)
         avail = self._n_raw - 1
         nodes = np.arange(self.b)
@@ -706,9 +762,16 @@ class StreamingFleetSession:
             z = np.zeros((self.b, 1), np.float32)
             ls_t = np.concatenate([ls_t, z], axis=1)
             lq_t = np.concatenate([lq_t, z], axis=1)
+        live = None
+        if self._ragged:
+            # Nodes whose stream (or sub-step tail) ended before t are
+            # masked out of the engine: zero rows into the ring buffer,
+            # frozen Kalman state, exactly-zero attribution.
+            live = t < self._n_used_nodes
         step = self.eng.FleetStep(
             c=c_t, w=target,
             a=jnp.asarray(a_t), lat_sum=jnp.asarray(ls_t), lat_sumsq=jnp.asarray(lq_t),
+            valid=None if live is None else jnp.asarray(live, jnp.float32),
         )
         self._state, att = self.eng.fleet_step(
             self._state, step, config=self._engine_cfg, mesh=self.mesh
@@ -728,6 +791,7 @@ class StreamingFleetSession:
                     target=np.asarray(target),
                     w_sys=w_sync,
                     step_completed=completed,
+                    valid=live,
                 )
             )
 
@@ -739,7 +803,10 @@ class StreamingFleetSession:
         Requires the full ``n_windows`` segment to have been pushed (the
         sync lookahead then unlocks every remaining tick).  Runs the shared
         ``_finalize_report`` per node — the same steps 5-6 as the per-node
-        and batched-segment paths.
+        and batched-segment paths.  On a ragged fleet each node finalizes
+        against its own step count S_i and duration; a node with zero
+        post-init steps reports its X_0 trajectory, exactly as the
+        per-node path would.
         """
         if self._n_raw < self.n_windows:
             raise ValueError(
@@ -759,23 +826,29 @@ class StreamingFleetSession:
         idle = np.asarray(self.idle)
         reports = []
         for i in range(self.b):
+            s_i = self.s_nodes[i]
+            n_used_i = self.init_n + s_i * cfg.step_windows
             reports.append(
                 _finalize_report(
                     x_fns=x_final[i, : self.num_fns],
                     x_cp=x_final[i, self.num_fns] if self.has_cp else jnp.asarray(0.0),
                     x0=self.x0[i],
-                    traj=traj[i],
+                    traj=traj[i, :s_i] if s_i > 0 else self.x0[i][None],
                     c_aug=c_aug[i],
-                    c_steps=c_aug[i, self.init_n : self.n_used].reshape(
-                        self.s, cfg.step_windows, self.m_aug
+                    c_steps=(
+                        c_aug[i, self.init_n : n_used_i].reshape(
+                            s_i, cfg.step_windows, self.m_aug
+                        )
+                        if s_i > 0
+                        else None
                     ),
                     w_sys=w_sys[i],
                     offset=float(idle[i]),
-                    init_n=self.init_n, s=self.s, step_windows=cfg.step_windows,
+                    init_n=self.init_n, s=s_i, step_windows=cfg.step_windows,
                     counts=self.counts[i], mean_lat=self.mean_latency[i],
                     cp_col=cp_col[i] if self.has_cp else None,
                     idle_watts=float(idle[i]),
-                    duration=self.duration,
+                    duration=self.durations[i],
                     skew=float(self.skews[i]),
                 )
             )
@@ -788,7 +861,7 @@ def fleet_profile_batched(
     telemetries: list[Telemetry],
     *,
     num_fns: int,
-    duration: float,
+    duration: float | Sequence[float],
     mesh=None,
 ) -> list[FootprintReport]:
     """Profile a whole fleet through the batched *segment* engine.
@@ -802,6 +875,15 @@ def fleet_profile_batched(
     of a finished segment) is ``StreamingFleetSession``.  ``mesh`` (a
     ``distributed.sharding.FleetMesh``) shards the engine's node axis over
     the mesh devices (B must tile it evenly).
+
+    Ragged fleets: ``duration`` may be a per-node sequence.  Every node
+    must still cover the common N_init window (a node too short to
+    bootstrap has no X_0 to batch — use ``fleet_profile``); past that,
+    nodes contribute their own ``S_i`` full Kalman steps, the batch pads
+    to ``max(S_i)`` with a validity mask (``FleetInputs.mask``), and each
+    node's report is finalized against its own window count — including
+    nodes with *zero* post-init steps, whose trajectory is just X_0,
+    exactly as on the per-node path.
     """
     from repro.core import batched_engine as eng
 
@@ -816,12 +898,23 @@ def fleet_profile_batched(
             "disaggregation config only"
         )
     delta = cfg.delta
-    n_windows, init_n, s, n_used = segment_plan(cfg, duration)
-    if s == 0:
-        # Too short for a Kalman trajectory: the per-node path handles the
-        # init-only case already.
+    b = len(traces)
+    durations, ragged = _node_durations(duration, b)
+    plans = [segment_plan(cfg, d) for d in durations]
+    s_nodes = [p[2] for p in plans]
+    s_max = max(s_nodes) if plans else 0
+    if s_max == 0:
+        # Too short for any Kalman trajectory: the per-node path handles
+        # the init-only case already.
         return fleet_profile(
             profiler, traces, telemetries, num_fns=num_fns, duration=duration
+        )
+    init_n = plans[0][1]
+    if any(p[1] != init_n for p in plans):
+        raise ValueError(
+            "fleet_profile_batched needs every node to cover the common "
+            f"N_init window ({cfg.init_windows} windows); got per-node "
+            f"init blocks {[p[1] for p in plans]} (use fleet_profile)"
         )
 
     # The batch stacks per-node matrices, so the fleet must be homogeneous
@@ -836,12 +929,16 @@ def fleet_profile_batched(
             "mix present/absent cp_cpu_frac (use fleet_profile instead)"
         )
 
+    n_w = cfg.step_windows
+    post_max = s_max * n_w
     c_nodes, target_nodes, skews, w_sys_nodes = [], [], [], []
     a_steps_nodes, lat_sum_nodes, lat_sumsq_nodes = [], [], []
     cp_cols, counts_nodes, mean_lat_nodes = [], [], []
-    for (fn_id, start, end), tel in zip(traces, telemetries):
+    for (fn_id, start, end), tel, (n_windows_i, _, s_i, _) in zip(
+        traces, telemetries, plans
+    ):
         w_sys, skew, _, c_aug, cp_col = profiler._prep_node(
-            fn_id, start, end, tel, num_fns, n_windows
+            fn_id, start, end, tel, num_fns, n_windows_i
         )
         skews.append(skew)
         w_sys_nodes.append(w_sys)
@@ -849,7 +946,7 @@ def fleet_profile_batched(
         c_nodes.append(c_aug)
         target_nodes.append(profiler._target_signal(w_sys, tel))
         a_s, ls, lq = profiler._per_step_stats(
-            fn_id, start, end, num_fns, c_aug.shape[1], init_n, s, cp_col
+            fn_id, start, end, num_fns, c_aug.shape[1], init_n, s_i, cp_col
         )
         a_steps_nodes.append(a_s)
         lat_sum_nodes.append(ls)
@@ -858,16 +955,47 @@ def fleet_profile_batched(
         counts_nodes.append(counts)
         mean_lat_nodes.append(mean_lat)
 
-    b = len(traces)
     m_aug = c_nodes[0].shape[1]
-    c_all = jnp.stack(c_nodes)            # (B, N, M_aug)
-    target_all = jnp.stack(target_nodes)  # (B, N)
+
+    def _post_block(rows_i, s_i, trailing):
+        """Pad one node's post-init rows to the fleet-wide step count."""
+        pad = jnp.zeros((post_max - s_i * n_w,) + trailing, rows_i.dtype)
+        return jnp.concatenate([rows_i, pad]) if s_i < s_max else rows_i
+
+    def _step_pad(steps_i, s_i, trailing):
+        pad = jnp.zeros((s_max - s_i,) + trailing, steps_i.dtype)
+        return jnp.concatenate([steps_i, pad]) if s_i < s_max else steps_i
+
+    c_post = jnp.stack(
+        [
+            _post_block(c[init_n : init_n + s_i * n_w], s_i, (m_aug,))
+            for c, s_i in zip(c_nodes, s_nodes)
+        ]
+    )
+    target_post = jnp.stack(
+        [
+            _post_block(t[init_n : init_n + s_i * n_w], s_i, ())
+            for t, s_i in zip(target_nodes, s_nodes)
+        ]
+    )
+    if ragged:
+        tick_ok = (
+            np.arange(post_max)[None, :] < (np.asarray(s_nodes) * n_w)[:, None]
+        )
+        mask = (
+            None
+            if bool(tick_ok.all())
+            else jnp.asarray(tick_ok.reshape(b, s_max, n_w), jnp.float32)
+        )
+    else:
+        mask = None
     inputs = eng.FleetInputs(
-        c=c_all[:, init_n:n_used].reshape(b, s, cfg.step_windows, m_aug),
-        w=target_all[:, init_n:n_used].reshape(b, s, cfg.step_windows),
-        a=jnp.stack(a_steps_nodes),
-        lat_sum=jnp.stack(lat_sum_nodes),
-        lat_sumsq=jnp.stack(lat_sumsq_nodes),
+        c=c_post.reshape(b, s_max, n_w, m_aug),
+        w=target_post.reshape(b, s_max, n_w),
+        a=jnp.stack([_step_pad(a, s_i, (m_aug,)) for a, s_i in zip(a_steps_nodes, s_nodes)]),
+        lat_sum=jnp.stack([_step_pad(l, s_i, (m_aug,)) for l, s_i in zip(lat_sum_nodes, s_nodes)]),
+        lat_sumsq=jnp.stack([_step_pad(l, s_i, (m_aug,)) for l, s_i in zip(lat_sumsq_nodes, s_nodes)]),
+        mask=mask,
     )
     engine_cfg = eng.EngineConfig(
         kalman=cfg.kalman, delta=delta,
@@ -876,7 +1004,8 @@ def fleet_profile_batched(
     )
     result = eng.run_fleet(
         inputs, engine_cfg,
-        init_c=c_all[:, :init_n], init_w=target_all[:, :init_n],
+        init_c=jnp.stack([c[:init_n] for c in c_nodes]),
+        init_w=jnp.stack([t[:init_n] for t in target_nodes]),
         # Per-tick attribution is a (B, T, M) dense product nothing in the
         # report consumes; callers that want it use the engine directly.
         with_ticks=False,
@@ -886,25 +1015,31 @@ def fleet_profile_batched(
     # Steps 5-6 through the shared finalizer, per node (the heavy math —
     # init solve + Kalman — already ran fleet-batched above; finalization is
     # window-sized and shared with the per-node and streaming paths so the
-    # three cannot drift).
+    # three cannot drift).  Each node finalizes against its OWN step count
+    # and duration; padded steps never reach a report.
     has_cp = cp_cols[0] is not None
     reports = []
     for i in range(b):
+        s_i = s_nodes[i]
         reports.append(
             _finalize_report(
                 x_fns=result.x_final[i, :num_fns],
                 x_cp=result.x_final[i, num_fns] if has_cp else jnp.asarray(0.0),
                 x0=result.x0[i],
-                traj=result.x_trajectory[i],
-                c_aug=c_all[i],
-                c_steps=inputs.c[i],
+                traj=result.x_trajectory[i, :s_i] if s_i > 0 else result.x0[i][None],
+                c_aug=c_nodes[i],
+                c_steps=(
+                    c_nodes[i][init_n : init_n + s_i * n_w].reshape(s_i, n_w, m_aug)
+                    if s_i > 0
+                    else None
+                ),
                 w_sys=w_sys_nodes[i],
                 offset=telemetries[i].idle_watts,
-                init_n=init_n, s=s, step_windows=cfg.step_windows,
+                init_n=init_n, s=s_i, step_windows=n_w,
                 counts=counts_nodes[i], mean_lat=mean_lat_nodes[i],
                 cp_col=cp_cols[i],
                 idle_watts=telemetries[i].idle_watts,
-                duration=duration, skew=skews[i],
+                duration=durations[i], skew=skews[i],
             )
         )
     return reports

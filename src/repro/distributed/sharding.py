@@ -370,6 +370,7 @@ def fleet_attribution_totals(
     unattributed: Array,          # (B, T)
     cp_power: Array | None = None,  # (B,) per-node control-plane power estimate
     *,
+    mask: Array | None = None,    # (B, T) tick validity for ragged fleets
     mesh: FleetMesh | None = None,
 ) -> FleetTotals:
     """Reduce per-node attribution to fleet totals (the ``psum`` path).
@@ -379,10 +380,26 @@ def fleet_attribution_totals(
     local node block and a single ``psum`` along the axis produces the
     replicated fleet totals — the only collective in the sharded
     controller (per-node Kalman/disaggregation math never communicates).
+
+    ``mask`` is the ragged fleet's ``(B, T)`` tick-validity mask
+    (``FleetInputs.mask`` flattened over steps): padded ticks are excluded
+    from every total *before* the reduction.  The masked engines already
+    emit exactly-zero attribution on padded ticks, so for engine outputs
+    the mask changes nothing — it exists so totals computed from any
+    per-tick source (replayed logs, external meters) honor the same
+    contract, and, sharded, it travels split over the node axis with the
+    partials it masks (no device ever sees another shard's rag pattern).
     """
     cp = jnp.zeros((tick_power.shape[0],), tick_power.dtype) if cp_power is None else cp_power
+    if mask is not None:
+        mask = mask.reshape(unattributed.shape).astype(tick_power.dtype)
 
-    def _local(tp, ua, cpv):
+    def _local(tp, ua, cpv, m):
+        # Dense fleets (mask=None) keep the original plain-sum cost: no
+        # ones-mask is ever materialized or multiplied through.
+        if m is not None:
+            tp = tp * m[..., None]
+            ua = ua * m
         return FleetTotals(
             per_fn=jnp.sum(tp, axis=(0, 1)),
             attributed=jnp.sum(tp),
@@ -391,33 +408,51 @@ def fleet_attribution_totals(
         )
 
     if mesh is None:
-        return _local(tick_power, unattributed, cp)
+        return _local(tick_power, unattributed, cp, mask)
     mesh.validate(tick_power.shape[0])
-    return _totals_runner(mesh)(tick_power, unattributed, cp)
+    if mask is None:
+        return _totals_runner(mesh, False)(tick_power, unattributed, cp)
+    return _totals_runner(mesh, True)(tick_power, unattributed, cp, mask)
 
 
 @functools.lru_cache(maxsize=None)
-def _totals_runner(mesh: FleetMesh):
+def _totals_runner(mesh: FleetMesh, has_mask: bool):
     """Compiled psum reduction for ``fleet_attribution_totals`` (cached per
-    mesh so repeated controller ticks reuse one executable)."""
+    (mesh, has_mask) so repeated controller ticks reuse one executable).
+    The ragged variant takes the tick mask as a fourth input, sharded
+    along the node axis like every other per-node array; the dense
+    variant keeps the original three-input plain-sum program."""
     from repro.distributed.compat import shard_map
 
     node = P(mesh.axis)
 
-    def _local_psum(tp, ua, cpv):
-        part = FleetTotals(
+    def _psum(part: FleetTotals) -> FleetTotals:
+        return jax.tree.map(lambda v: jax.lax.psum(v, mesh.axis), part)
+
+    def _part(tp, ua, cpv) -> FleetTotals:
+        return FleetTotals(
             per_fn=jnp.sum(tp, axis=(0, 1)),
             attributed=jnp.sum(tp),
             unattributed=jnp.sum(ua),
             cp_total=jnp.sum(cpv),
         )
-        return jax.tree.map(lambda v: jax.lax.psum(v, mesh.axis), part)
+
+    if has_mask:
+        def _local_psum(tp, ua, cpv, m):
+            return _psum(_part(tp * m[..., None], ua * m, cpv))
+
+        in_specs = (node, node, node, node)
+    else:
+        def _local_psum(tp, ua, cpv):
+            return _psum(_part(tp, ua, cpv))
+
+        in_specs = (node, node, node)
 
     return jax.jit(
         shard_map(
             _local_psum,
             mesh=mesh.mesh,
-            in_specs=(node, node, node),
+            in_specs=in_specs,
             out_specs=P(),
             check_vma=False,
         )

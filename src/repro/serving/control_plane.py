@@ -199,8 +199,18 @@ class EnergyFirstControlPlane:
         Falls back to the per-node path (no trackers) when the segment is
         too short for a single Kalman step.
 
+        Ragged fleets are first-class: traces may have different
+        ``duration``s (nodes joining a metering segment late or leaving it
+        early).  The simulator, the streaming session, and the engine all
+        mask the ended nodes out (``FleetStep.valid``), live trackers stop
+        accumulating the moment their node's stream ends, and each node's
+        report covers exactly its own span.  Only when some node is too
+        short to bootstrap (no common N_init window) — or no node reaches
+        a full Kalman step — does the fleet drop to the per-node path.
+
         Args:
-          traces: per-node invocation traces (equal duration/num_fns).
+          traces: per-node invocation traces (equal num_fns; durations may
+            differ).
           seeds: optional per-node simulator seeds.
           on_tick: optional hook ``(core.profiler.StreamTick,
             list[StreamingFootprintTracker]) -> None`` run per engine tick.
@@ -224,7 +234,9 @@ class EnergyFirstControlPlane:
 
             mesh = fleet_mesh_auto(len(traces))
         sims = self.simulator.simulate_fleet(traces, seeds)
-        duration = traces[0].duration
+        durations = [t.duration for t in traces]
+        ragged = len(set(durations)) > 1
+        duration = durations if ragged else durations[0]
         num_fns = traces[0].num_fns
         trace_arrays = [
             (jnp.asarray(t.fn_id), jnp.asarray(t.start), jnp.asarray(t.end))
@@ -232,7 +244,10 @@ class EnergyFirstControlPlane:
         ]
         tels = [s.telemetry for s in sims]
         cfg = self.profiler.config
-        n_windows, _, s, _ = segment_plan(cfg, duration)
+        plans = [segment_plan(cfg, d) for d in durations]
+        n_max = max(p[0] for p in plans)
+        s = max(p[2] for p in plans)
+        init_uniform = len({p[1] for p in plans}) == 1
         has_cp_flags = [
             cfg.account_control_plane and tel.cp_cpu_frac is not None for tel in tels
         ]
@@ -242,9 +257,10 @@ class EnergyFirstControlPlane:
                 "present/absent cp_cpu_frac (use fleet_profile instead)"
             )
 
-        if s == 0:
-            # Too short for any Kalman step: no streaming state to track.
-            # An attached-but-never-fed tracker would report 0 J/invocation
+        if s == 0 or not init_uniform:
+            # Too short for any Kalman step (or some node cannot even cover
+            # the common init window): no streaming state to track.  An
+            # attached-but-never-fed tracker would report 0 J/invocation
             # as if it were a measurement, so footprint_stream stays None.
             reports = fleet_profile(
                 self.profiler, trace_arrays, tels,
@@ -270,7 +286,11 @@ class EnergyFirstControlPlane:
 
             def _on_tick(tk):
                 for i, tr in enumerate(trackers):
-                    tr.observe_tick(tk.x[i], tk.busy_seconds[i], tk.a[i], cfg.delta)
+                    # Ragged fleet: a node whose stream has ended stops
+                    # accumulating (its engine state is frozen; folding the
+                    # dead ticks in would keep growing its idle share).
+                    if tk.valid is None or tk.valid[i]:
+                        tr.observe_tick(tk.x[i], tk.busy_seconds[i], tk.a[i], cfg.delta)
                 if on_tick is not None:
                     on_tick(tk, trackers)
 
@@ -282,22 +302,29 @@ class EnergyFirstControlPlane:
                 on_tick=_on_tick, on_bootstrap=_on_bootstrap,
                 mesh=mesh,
             )
-            # Stack each signal once into (N, B) so the replay loop indexes
-            # rows instead of doing B Python-level scalar reads per window.
-            sys_np = np.stack([np.asarray(tel.system_power) for tel in tels], axis=1)
+            # Stack each signal once into (N_max, B) so the replay loop
+            # indexes rows instead of doing B Python-level scalar reads per
+            # window; nodes shorter than the longest are zero-padded (the
+            # session masks their dead ticks out of the engine anyway).
+            def _stack(get):
+                arr = np.zeros((n_max, len(tels)), np.float32)
+                for i, tel in enumerate(tels):
+                    col = np.asarray(get(tel))
+                    arr[: col.shape[0], i] = col
+                return arr
+
+            sys_np = _stack(lambda tel: tel.system_power)
             chip_np = (
-                np.stack([np.asarray(tel.chip_power) for tel in tels], axis=1)
+                _stack(lambda tel: tel.chip_power)
                 if tels[0].chip_power is not None else None
             )
             cp_np = (
-                np.stack([np.asarray(tel.cp_cpu_frac) for tel in tels], axis=1)
-                if has_cp_flags[0] else None
+                _stack(lambda tel: tel.cp_cpu_frac) if has_cp_flags[0] else None
             )
             sf_np = (
-                np.stack([np.asarray(tel.sys_cpu_frac) for tel in tels], axis=1)
-                if has_cp_flags[0] else None
+                _stack(lambda tel: tel.sys_cpu_frac) if has_cp_flags[0] else None
             )
-            for t in range(n_windows):
+            for t in range(n_max):
                 session.push_window(
                     w_sys=sys_np[t],
                     w_chip=chip_np[t] if chip_np is not None else None,

@@ -70,7 +70,10 @@ class FleetTelemetryTick(NamedTuple):
 
     Yielded by ``NodeSimulator.stream_fleet`` in window order; the streaming
     profiler session (``core.profiler.StreamingFleetSession``) consumes these
-    one at a time.
+    one at a time.  On a ragged fleet (per-node durations) ``valid`` marks
+    which nodes really produced window ``t``; ended nodes carry zeros in the
+    value arrays and must be ignored downstream (the profiler session masks
+    them out of the engine via ``FleetStep.valid``).
     """
 
     t: int                      # window index
@@ -78,6 +81,7 @@ class FleetTelemetryTick(NamedTuple):
     w_chip: np.ndarray | None   # (B,) sensed chip power, None without chip sensor
     cp_frac: np.ndarray         # (B,) control-plane CPU fraction
     sys_frac: np.ndarray        # (B,) system-wide CPU fraction
+    valid: np.ndarray | None = None  # (B,) bool node liveness; None = all live
 
 
 def _activity_numpy(trace: InvocationTrace, num_bins: int, dt: float) -> np.ndarray:
@@ -147,15 +151,19 @@ class NodeSimulator:
 
         Activity scatter and the dynamic-power contractions run batched over
         all B nodes; only the (cheap, rng-dependent) sensor front-ends run
-        per node.  Traces must share ``duration`` and ``num_fns``."""
+        per node.  Traces must share ``num_fns``; durations may differ (a
+        *ragged* fleet — nodes joining/leaving at different times): the
+        batched truth pass runs on the longest node's fine grid and each
+        node's sensing covers exactly its own ``duration``, so every
+        ``SimResult`` has that node's own window count."""
         if not traces:
             return []
-        d0, m0 = traces[0].duration, traces[0].num_fns
-        if any(t.duration != d0 or t.num_fns != m0 for t in traces):
-            raise ValueError("simulate_fleet needs traces with equal duration/num_fns")
+        m0 = traces[0].num_fns
+        if any(t.num_fns != m0 for t in traces):
+            raise ValueError("simulate_fleet needs traces with equal num_fns")
         cfg = self.config
-        num_bins = int(round(d0 / cfg.dt))
-        act = _fleet_activity(traces, num_bins, cfg.dt)          # (B, T, M)
+        num_bins = int(round(max(t.duration for t in traces) / cfg.dt))
+        act = _fleet_activity(traces, num_bins, cfg.dt)          # (B, T_max, M)
         p_dyn = np.einsum("btm,m->bt", act, self.model.dyn_power_w)
         p_cpu = np.einsum("btm,m->bt", act, self.model.dyn_power_w * self.model.cpu_frac)
         if seeds is None:
@@ -163,10 +171,16 @@ class NodeSimulator:
             # every node the identical sensor-noise realization, silently
             # correlating fleet-wide error statistics.
             seeds = [cfg.seed + i for i in range(len(traces))]
-        return [
-            self._finish(t, act[i], seed=seeds[i], p_dyn=p_dyn[i], p_cpu=p_cpu[i])
-            for i, t in enumerate(traces)
-        ]
+        out = []
+        for i, t in enumerate(traces):
+            bins_i = int(round(t.duration / cfg.dt))
+            out.append(
+                self._finish(
+                    t, act[i, :bins_i], seed=seeds[i],
+                    p_dyn=p_dyn[i, :bins_i], p_cpu=p_cpu[i, :bins_i],
+                )
+            )
+        return out
 
     def _node_truth(
         self,
@@ -282,24 +296,29 @@ class NodeSimulator:
         RNG note: each sensor owns a child RNG spawned from the node seed, so
         noise realizations differ from ``simulate_fleet`` (same pathology
         model; per-sensor stream == batch equality is pinned separately in
-        tests).  Traces must share duration/num_fns, as in ``simulate_fleet``.
+        tests).  Traces must share ``num_fns``; durations may differ (a
+        ragged fleet): each node's sensors stream for exactly its own
+        windows, a node's resampler flushes the moment its stream ends, and
+        once a node has ended the yielded ticks carry ``valid[i] = False``
+        with zeros in its value slots while the live nodes keep streaming.
 
         Yields:
           ``FleetTelemetryTick`` with (B,) arrays per window, for every
-          window index 0..N-1 in order.
+          window index 0..max(N_i)-1 in order.
         """
         from repro.telemetry.sources import StreamingSensor, StreamingWindowResampler
 
         if not traces:
             return
-        d0, m0 = traces[0].duration, traces[0].num_fns
-        if any(t.duration != d0 or t.num_fns != m0 for t in traces):
-            raise ValueError("stream_fleet needs traces with equal duration/num_fns")
+        m0 = traces[0].num_fns
+        if any(t.num_fns != m0 for t in traces):
+            raise ValueError("stream_fleet needs traces with equal num_fns")
         cfg = self.config
         b = len(traces)
-        num_bins = int(round(d0 / cfg.dt))
-        n_windows = int(round(d0 / cfg.delta))
         bins_per_win = int(round(cfg.delta / cfg.dt))
+        n_list = [int(round(t.duration / cfg.delta)) for t in traces]
+        n_max = max(n_list)
+        num_bins = int(round(max(t.duration for t in traces) / cfg.dt))
         act = _fleet_activity(traces, num_bins, cfg.dt)
         p_dyn = np.einsum("btm,m->bt", act, self.model.dyn_power_w)
         p_cpu = np.einsum("btm,m->bt", act, self.model.dyn_power_w * self.model.cpu_frac)
@@ -308,12 +327,13 @@ class NodeSimulator:
 
         true_sys, true_chip, cp_fracs, sys_fracs = [], [], [], []
         for i, trace in enumerate(traces):
+            bins_i = int(round(trace.duration / cfg.dt))
             cp_power, _, t_sys, t_chip = self._node_truth(
-                trace, act[i], p_dyn[i], p_cpu[i]
+                trace, act[i, :bins_i], p_dyn[i, :bins_i], p_cpu[i, :bins_i]
             )
             true_sys.append(t_sys)
             true_chip.append(t_chip)
-            cp_f, sys_f = self._frac_windows(act[i], cp_power, n_windows)
+            cp_f, sys_f = self._frac_windows(act[i, :bins_i], cp_power, n_list[i])
             cp_fracs.append(cp_f)
             sys_fracs.append(sys_f)
 
@@ -331,34 +351,56 @@ class NodeSimulator:
         pending_chip: list[list[float]] = [[] for _ in range(b)]
         emitted = 0
 
+        def _ready(pending: list[list[float]]) -> bool:
+            # A window can ship once every node still alive at it has closed
+            # it; ended nodes are never waited on.
+            return all(
+                n_list[i] <= emitted or len(pending[i]) > 0 for i in range(b)
+            )
+
+        def _take(pending: list[list[float]], live: np.ndarray) -> np.ndarray:
+            return np.asarray(
+                [pending[i].pop(0) if live[i] else 0.0 for i in range(b)]
+            )
+
         def _drain() -> Iterator[FleetTelemetryTick]:
             nonlocal emitted
-            while all(len(q) > 0 for q in pending_sys) and (
-                not has_chip or all(len(q) > 0 for q in pending_chip)
+            while emitted < n_max and _ready(pending_sys) and (
+                not has_chip or _ready(pending_chip)
             ):
                 t = emitted
+                live = np.asarray([t < n_list[i] for i in range(b)])
                 yield FleetTelemetryTick(
                     t=t,
-                    w_sys=np.asarray([q.pop(0) for q in pending_sys]),
-                    w_chip=np.asarray([q.pop(0) for q in pending_chip]) if has_chip else None,
-                    cp_frac=np.asarray([cp_fracs[i][t] for i in range(b)]),
-                    sys_frac=np.asarray([sys_fracs[i][t] for i in range(b)]),
+                    w_sys=_take(pending_sys, live),
+                    w_chip=_take(pending_chip, live) if has_chip else None,
+                    cp_frac=np.asarray(
+                        [cp_fracs[i][t] if live[i] else 0.0 for i in range(b)]
+                    ),
+                    sys_frac=np.asarray(
+                        [sys_fracs[i][t] if live[i] else 0.0 for i in range(b)]
+                    ),
+                    valid=live,
                 )
                 emitted += 1
 
-        for w in range(n_windows):
+        for w in range(n_max):
             lo, hi = w * bins_per_win, (w + 1) * bins_per_win
             for i in range(b):
+                if w >= n_list[i]:
+                    continue
                 sig = sys_sensors[i].push(true_sys[i][lo:hi])
                 pending_sys[i].extend(sys_rs[i].push(sig.times, sig.watts))
                 if has_chip:
                     sig = chip_sensors[i].push(true_chip[i][lo:hi])
                     pending_chip[i].extend(chip_rs[i].push(sig.times, sig.watts))
+                if w == n_list[i] - 1:
+                    # This node's stream just ended: flush its tail windows
+                    # now so the fleet never stalls waiting on a dead node.
+                    pending_sys[i].extend(sys_rs[i].flush(n_list[i]))
+                    if has_chip:
+                        pending_chip[i].extend(chip_rs[i].flush(n_list[i]))
             yield from _drain()
-        for i in range(b):
-            pending_sys[i].extend(sys_rs[i].flush(n_windows))
-            if has_chip:
-                pending_chip[i].extend(chip_rs[i].flush(n_windows))
         yield from _drain()
 
     def marginal_energy(

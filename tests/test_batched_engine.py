@@ -141,14 +141,23 @@ def test_pack_fleet_inputs_shapes():
     c = jnp.asarray(rng.random((b, n, m)), jnp.float32)
     w = jnp.asarray(rng.random((b, n)), jnp.float32)
     a = jnp.asarray(rng.integers(0, 3, (b, n, m)), jnp.float32)
-    with pytest.warns(UserWarning, match="ragged-tail"):  # 37 % 10 != 0
-        packed = pack_fleet_inputs(c, w, a, a * 0.5, a * 0.25, step_windows=step)
+    # 37 % 10 != 0: the sub-step remainder feeds no Kalman step (same plan
+    # as segment_plan's tail), the fleet stays dense (mask=None)
+    packed = pack_fleet_inputs(c, w, a, a * 0.5, a * 0.25, step_windows=step)
     assert packed.c.shape == (b, 3, step, m)
     assert packed.w.shape == (b, 3, step)
     assert packed.a.shape == (b, 3, m)
+    assert packed.mask is None
     # step invocation counts are sums over the step's windows
     np.testing.assert_allclose(
         np.asarray(packed.a[:, 0]), np.asarray(a[:, :step].sum(axis=1))
+    )
+    # strict=True restores the old equal-length contract by raising
+    with pytest.raises(ValueError, match="strict"):
+        pack_fleet_inputs(c, w, a, a * 0.5, a * 0.25, step_windows=step, strict=True)
+    pack_fleet_inputs(
+        c[:, :30], w[:, :30], a[:, :30], a[:, :30] * 0.5, a[:, :30] * 0.25,
+        step_windows=step, strict=True,
     )
 
 

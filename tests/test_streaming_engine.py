@@ -365,18 +365,30 @@ def test_profile_fleet_short_segment_has_no_tracker():
     assert len(out) == 1 and out[0].footprint_stream is None
 
 
-def test_pack_fleet_inputs_warns_on_ragged_tail():
+def test_pack_fleet_inputs_pads_and_masks_without_warning():
+    """The old ragged-tail UserWarning + truncation is gone: packing is
+    pad-and-mask by default (warning-free), with ``lengths`` driving the
+    per-node validity mask and ``strict=True`` restoring the equal-length
+    contract as a hard error."""
     rng = np.random.default_rng(7)
     b, n, m, step = 2, 37, 4, 10
     c = jnp.asarray(rng.random((b, n, m)), jnp.float32)
     w = jnp.asarray(rng.random((b, n)), jnp.float32)
     a = jnp.asarray(rng.integers(0, 3, (b, n, m)), jnp.float32)
-    with pytest.warns(UserWarning, match=r"dropping 7 ragged-tail"):
-        pack_fleet_inputs(c, w, a, a * 0.5, a * 0.25, step_windows=step)
-    # no warning when the windows divide evenly
     with warnings.catch_warnings():
         warnings.simplefilter("error")
+        dense = pack_fleet_inputs(c, w, a, a * 0.5, a * 0.25, step_windows=step)
+        ragged = pack_fleet_inputs(
+            c, w, a, a * 0.5, a * 0.25, step_windows=step, lengths=[37, 13]
+        )
+    assert dense.mask is None  # uniform fleet: sub-step tail, no padding
+    assert ragged.mask is not None and ragged.mask.shape == (b, 3, step)
+    # node 1 has one full step; its other ticks are masked and zeroed
+    np.testing.assert_array_equal(np.asarray(ragged.mask[1, 0]), 1.0)
+    np.testing.assert_array_equal(np.asarray(ragged.mask[1, 1:]), 0.0)
+    assert float(jnp.max(jnp.abs(ragged.c[1, 1:]))) == 0.0
+    with pytest.raises(ValueError, match="strict"):
         pack_fleet_inputs(
-            c[:, :30], w[:, :30], a[:, :30], a[:, :30] * 0.5, a[:, :30] * 0.25,
-            step_windows=step,
+            c, w, a, a * 0.5, a * 0.25, step_windows=step,
+            lengths=[37, 13], strict=True,
         )
