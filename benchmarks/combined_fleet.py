@@ -1,0 +1,129 @@
+"""Combined-mode (§4.3) fleet overhead: chip/rest split vs pure mode.
+
+Combined mode adds three stages on top of the pure disaggregation pipeline:
+the batched counter-model fit (``cpu_model.fit_ridge`` over (B, N, F)
+window features), the combined target assembly
+(``batched_engine.combined_rest_target``), and the fleet-wide chip-side
+split (``predict_function_power_split``).  All three are O(B·N·F) /
+O(B·M·F) element-wise work next to the engine's O(B·S·M^2) Kalman scan, so
+the acceptance bar is that combined stays within ~1.2x of pure wall-clock
+at fleet-controller scale (B64 x M128).
+
+Metrics:
+
+- ``pure_ms``           : run_fleet on the idle-adjusted target
+- ``combined_ms``       : fit + target + run_fleet + chip split
+- ``overhead_ratio``    : combined / pure (accept <= ~1.2)
+- ``fit_ms``            : the batched ridge fit alone
+- ``chip_split_ms``     : the fleet-wide predict_function_power_split alone
+- ``conservation_err``  : max per-tick |attributed + unattributed - target|
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cpu_model as cpumod
+from repro.core.batched_engine import (
+    EngineConfig,
+    combined_rest_target,
+    fleet_rest_idle,
+    run_fleet,
+    synthetic_fleet,
+)
+from repro.telemetry.counters import function_counters, window_counters
+
+
+def _time(fn, reps=3):
+    jax.block_until_ready(fn())  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Time pure vs combined (§4.3) fleet profiling at controller scale.
+
+    ``smoke`` runs tiny shapes for the CI rot gate; ``quick`` the B64 x
+    M128 fleet-controller shape; full adds more Kalman steps."""
+    if smoke:
+        b, s, n_w, m = 8, 2, 20, 16
+    else:
+        b, s, n_w, m = (64, 4, 60, 128) if quick else (64, 12, 60, 128)
+    n = s * n_w
+    cfg = EngineConfig()
+    inputs = synthetic_fleet(b, s, n_w, m, seed=0)
+    rng = np.random.default_rng(1)
+
+    # Synthetic chip telemetry + per-function step-counter specs.
+    gflops = jnp.asarray(np.abs(rng.standard_normal(m)) * 40.0 + 1.0, jnp.float32)
+    hbm_gb = gflops / 30.0
+    lat = jnp.asarray(np.abs(rng.standard_normal(m)) * 0.8 + 0.2, jnp.float32)
+    c_windows = inputs.c.reshape(b, n, m)
+    wf = window_counters(c_windows, gflops, hbm_gb, lat, cfg.delta)   # (B, N, F)
+    w_chip_true = jnp.asarray([0.002, 0.1, 30.0])
+    chip = (
+        wf @ w_chip_true + 40.0
+        + jnp.asarray(0.5 * rng.standard_normal((b, n)), jnp.float32)
+    )
+    idle = jnp.asarray(np.full(b, 90.0), jnp.float32)
+    w_sys = inputs.w.reshape(b, n) + chip + 48.0
+    fn_c = function_counters(c_windows, gflops, hbm_gb, lat)          # (B, M, F)
+    busy = jnp.sum(c_windows, axis=1)                                 # (B, M)
+    duration = jnp.full((b,), float(n), jnp.float32)
+
+    # --- pure mode: engine on the idle-adjusted target.
+    def pure():
+        return run_fleet(inputs, cfg)
+
+    pure_s = _time(pure)
+
+    # --- combined mode: fit + combined target + engine + chip split.
+    init_n = min(60, n)
+
+    def fit():
+        return cpumod.fit_ridge(wf[:, :init_n], chip[:, :init_n])
+
+    def split(models):
+        return cpumod.predict_function_power_split(models, fn_c, busy / duration[:, None])
+
+    def combined():
+        models = cpumod.fit_ridge(wf[:, :init_n], chip[:, :init_n])
+        rest_idle = fleet_rest_idle(chip[:, :init_n], idle)
+        target = combined_rest_target(w_sys, chip, rest_idle[:, None])
+        out = run_fleet(inputs._replace(w=target.reshape(b, s, n_w)), cfg)
+        x_cpu, resid = split(models)
+        return out, x_cpu, resid
+
+    combined_s = _time(combined)
+    fit_s = _time(fit)
+    models = fit()
+    split_s = _time(lambda: split(models))
+
+    # conservation of the rest side under the combined target
+    out, _, _ = combined()
+    rest_idle = fleet_rest_idle(chip[:, :init_n], idle)
+    target = combined_rest_target(w_sys, chip, rest_idle[:, None])
+    recon = np.asarray(out.tick_power).sum(-1) + np.asarray(out.unattributed)
+    cons = float(np.max(np.abs(recon - np.asarray(target))))
+
+    return {
+        "fleet_shape": f"B{b} S{s} n_w{n_w} M{m}",
+        "pure_ms": pure_s * 1e3,
+        "combined_ms": combined_s * 1e3,
+        "overhead_ratio": combined_s / pure_s,
+        "fit_ms": fit_s * 1e3,
+        "chip_split_ms": split_s * 1e3,
+        "conservation_err": cons,
+    }
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k:20s} {v:.4g}" if isinstance(v, float) else f"{k:20s} {v}")

@@ -33,6 +33,7 @@ MODULES = [
     ("streaming_overhead", "Perf: streaming engine per-tick overhead"),
     ("sharded_fleet", "Perf: mesh-sharded fleet scaling"),
     ("ragged_fleet", "Perf: ragged-fleet padding overhead vs rag ratio"),
+    ("combined_fleet", "Perf: combined-mode (§4.3) chip/rest split overhead"),
     ("kernel_bench", "Perf: kernel path"),
 ]
 

@@ -34,9 +34,12 @@ import inspect
 SURFACES = (
     "repro.core.batched_engine",
     "repro.core.profiler",
+    "repro.core.cpu_model",
+    "repro.telemetry.counters",
     "repro.serving.control_plane",
     "repro.distributed.sharding",
     "benchmarks.ragged_fleet",
+    "benchmarks.combined_fleet",
 )
 for mod_name in SURFACES:
     mod = importlib.import_module(mod_name)
@@ -75,9 +78,10 @@ if missing:
 print(f"benchmark smoke OK ({len(results)} modules, strict well-formed JSON)")
 EOF
 
-echo "== sharded + ragged fleet pins (forced 8-device host mesh, own subprocess) =="
+echo "== sharded + ragged + combined fleet pins (forced 8-device host mesh, own subprocess) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-  python -m pytest -q tests/test_sharded_fleet.py tests/test_ragged_fleet.py
+  python -m pytest -q tests/test_sharded_fleet.py tests/test_ragged_fleet.py \
+  tests/test_combined_fleet.py
 
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"

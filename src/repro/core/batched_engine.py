@@ -37,6 +37,12 @@ measured active power over the functions running in it, proportional to
 their estimated draw — the Shapley efficiency property enforced per tick,
 so per-function footprints sum to the measured total by construction.
 
+The engines are target-agnostic: combined mode (§4.3) feeds them the
+chip-subtracted 'rest' power instead of the idle-adjusted system signal,
+built by every profiling path through the shared ``combined_rest_target``
+/ ``fleet_rest_idle`` helpers below (the chip side is attributed by
+``core.cpu_model``'s fleet-batched counter model).
+
 Fleets may be *ragged* — per-node window counts, nodes joining or leaving
 mid-stream: ``pack_fleet_inputs(lengths=)`` pads to the longest node and
 every engine carries the resulting validity mask (``FleetInputs.mask`` /
@@ -191,6 +197,47 @@ def fleet_initial_estimate(
 
 def _init_states(x0: Array) -> KalmanState:
     return jax.vmap(lambda x: kalman_init(x.shape[-1], x0=x))(x0)
+
+
+@jax.jit
+def fleet_rest_idle(chip_init: Array, idle_watts) -> Array:
+    """Idle power of the non-chip components, per node (§4.3).
+
+    Approximated as total idle minus the chip's observed floor over the
+    N_init initial-estimate block:  ``max(idle - min(chip_init), 0)``.
+    Using the init block (rather than the full segment) keeps the estimate
+    identical across the per-node, batched, and *streaming* paths — the
+    stream knows only the init windows when it must start producing
+    combined targets — and never reads past the accounting segment.
+
+    Args:
+      chip_init: (..., N_init) chip power over the init block (one node or
+        a (B, N_init) fleet).
+      idle_watts: scalar or (...,) per-node total idle power.
+
+    Returns:
+      (...,) rest-side idle watts, traceable (no host sync).
+    """
+    return jnp.maximum(
+        jnp.asarray(idle_watts, jnp.float32) - jnp.min(chip_init, axis=-1), 0.0
+    )
+
+
+@jax.jit
+def combined_rest_target(w_sys: Array, chip: Array, rest_idle) -> Array:
+    """Combined-mode (§4.3) disaggregation target: the 'rest' power.
+
+    ``max(W_sys - W_chip - rest_idle, 0)`` — the chip side is modeled by
+    the linear counter model, so the Kalman/NNLS engines disaggregate only
+    what is left of the system signal.  Pure broadcasting: callers align
+    ``rest_idle`` themselves (scalar, or ``(B, 1)`` against ``(B, N)``
+    windows, or ``(B,)`` against per-tick ``(B,)`` power).  All three fleet
+    engines and the per-node profiler build their combined targets through
+    this single helper, so the mode cannot drift between paths.  Masked
+    (padded) ticks arrive with ``w_sys = chip = 0`` after the engines'
+    mask fold and therefore produce a zero target (``rest_idle >= 0``).
+    """
+    return jnp.maximum(w_sys - chip - rest_idle, 0.0)
 
 
 def _apply_mask(inputs: FleetInputs) -> FleetInputs:

@@ -13,21 +13,32 @@ system-wide totals of the interval; same normalization scheme as the paper
 
 Two trainers:
 
-- ``fit_ridge``: closed-form ridge regression (default; exact, fast).
+- ``fit_ridge``: closed-form ridge regression (default; exact, fast).  The
+  normal equations are solved in *standardized* feature space: the raw
+  counter scales ``telemetry.counters.window_counters`` emits differ by
+  ~1e3 (GFLOP/s vs duty cycle), which made the raw-space gram
+  ill-conditioned in float32.
 - ``fit_linear_svr``: epsilon-insensitive linear SVR via proximal subgradient
   descent in ``lax.fori_loop`` — the in-JAX stand-in for the paper's
   sklearn SVR (no sklearn on the target hosts).
 
+Every inference/training entry point is *fleet-batched*: a model whose
+``weights``/``bias`` carry a leading ``(B,)`` node axis (one model per node,
+as stacked by ``stack_models`` or a batched ``fit_ridge`` call) is applied
+to ``(B, ...)`` feature arrays in one jitted call — this is what lets the
+fleet engines run combined mode (§4.3) without per-node Python loops.
+
 Model health is monitored (observed chip power vs sum of predicted function
 powers); ``needs_retrain`` flags drift beyond the threshold (default 5 %),
-matching the paper's continuous-retraining loop.
+matching the paper's continuous-retraining loop — ``retrain_flags`` is its
+traceable fleet-shaped twin used by the streaming session.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +47,14 @@ Array = jax.Array
 
 
 class LinearPowerModel(NamedTuple):
-    weights: Array  # (F,) per-counter watts
-    bias: Array     # scalar watts
+    """theta: weights (F,) watts-per-counter + bias () watts.
+
+    Fleet-batched models carry a leading node axis — weights ``(B, F)``,
+    bias ``(B,)`` — and every predictor in this module broadcasts over it.
+    """
+
+    weights: Array  # (F,) per-counter watts; (B, F) for a fleet of models
+    bias: Array     # scalar watts; (B,) for a fleet of models
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,21 +66,57 @@ class CpuModelConfig:
     retrain_threshold: float = 0.05  # 5 % model error triggers retraining
 
 
-@functools.partial(jax.jit, static_argnames=())
-def fit_ridge(features: Array, power: Array, lam: float = 1e-4) -> LinearPowerModel:
-    """Closed-form ridge fit of power ~ features.
+def stack_models(models: Sequence[LinearPowerModel]) -> LinearPowerModel:
+    """Stack per-node models into one fleet-batched ``LinearPowerModel``.
 
-    Args:
-      features: (N, F) system-interval counter vectors (already normalized).
-      power: (N,) observed chip power (watts).
-    """
+    The result has ``weights (B, F)`` / ``bias (B,)`` and can be fed
+    directly to the batched predictors (``predict_power``,
+    ``predict_function_power_split``, ``model_error``)."""
+    return LinearPowerModel(
+        weights=jnp.stack([jnp.asarray(m.weights) for m in models]),
+        bias=jnp.stack([jnp.reshape(jnp.asarray(m.bias), ()) for m in models]),
+    )
+
+
+def model_row(model: LinearPowerModel, i: int) -> LinearPowerModel:
+    """Slice node ``i``'s model out of a fleet-batched model."""
+    return LinearPowerModel(weights=model.weights[i], bias=model.bias[i])
+
+
+def _fit_ridge_one(features: Array, power: Array, lam) -> LinearPowerModel:
+    # Standardize (as fit_linear_svr already did): the counter features span
+    # ~3 orders of magnitude, and the raw-space normal equations are
+    # ill-conditioned in float32.  The ridge penalty applies to the
+    # standardized weights, so lam is scale-free.
+    x_mean = jnp.mean(features, axis=0)
+    x_std = jnp.maximum(jnp.std(features, axis=0), 1e-8)
+    xs = (features - x_mean) / x_std
     n, f = features.shape
     ones = jnp.ones((n, 1), features.dtype)
-    xb = jnp.concatenate([features, ones], axis=1)
+    xb = jnp.concatenate([xs, ones], axis=1)
     reg = lam * jnp.eye(f + 1, dtype=features.dtype)
     reg = reg.at[f, f].set(0.0)  # don't penalize the bias
     theta = jnp.linalg.solve(xb.T @ xb + reg, xb.T @ power)
-    return LinearPowerModel(weights=theta[:f], bias=theta[f])
+    w = theta[:f] / x_std
+    b = theta[f] - jnp.sum(theta[:f] * x_mean / x_std)
+    return LinearPowerModel(weights=w, bias=b)
+
+
+@jax.jit
+def fit_ridge(features: Array, power: Array, lam: float = 1e-4) -> LinearPowerModel:
+    """Closed-form ridge fit of power ~ features (standardized solve).
+
+    Args:
+      features: (N, F) system-interval counter vectors, or (B, N, F) for a
+        fleet — one independent model is fit per node, vmapped.
+      power: (N,) observed chip power (watts), or (B, N).
+
+    Returns:
+      ``LinearPowerModel`` with (F,)/() leaves, or (B, F)/(B,) when batched.
+    """
+    if features.ndim == 3:
+        return jax.vmap(_fit_ridge_one, in_axes=(0, 0, None))(features, power, lam)
+    return _fit_ridge_one(features, power, lam)
 
 
 @functools.partial(jax.jit, static_argnames=("iters",))
@@ -107,10 +160,69 @@ def fit_linear_svr(
     return LinearPowerModel(weights=w_raw, bias=b_raw)
 
 
+def _dynamic_power(model: LinearPowerModel, features: Array) -> Array:
+    """features (..., F) x weights -> (...); fleet-batched models contract
+    each node's features against that node's own weight row."""
+    w = model.weights
+    if w.ndim == 1:
+        return features @ w
+    return jnp.einsum("b...f,bf->b...", features, w)
+
+
+def _bias_like(model: LinearPowerModel, out_ndim: int) -> Array:
+    """Bias broadcast against a (...,) prediction of rank ``out_ndim``."""
+    b = model.bias
+    if b.ndim == 0:
+        return b
+    return b.reshape(b.shape + (1,) * (out_ndim - 1))
+
+
 @jax.jit
 def predict_power(model: LinearPowerModel, features: Array) -> Array:
-    """X_CPU = theta(S).  features: (..., F) -> (...,) watts."""
-    return features @ model.weights + model.bias
+    """X_CPU = theta(S).  features: (..., F) -> (...,) watts.
+
+    With a fleet-batched model (weights (B, F)), features are (B, ..., F)
+    and each node is evaluated under its own model."""
+    dyn = _dynamic_power(model, features)
+    return dyn + _bias_like(model, dyn.ndim)
+
+
+@jax.jit
+def predict_function_power_split(
+    model: LinearPowerModel, fn_features: Array, fn_active_frac: Array
+) -> tuple[Array, Array]:
+    """Per-function chip power plus the *un-attributed* static bias.
+
+    The bias (static chip power) is amortized over functions by activity
+    fraction so summing over functions reproduces the interval's chip power
+    estimate.  On an idle interval (``sum(fn_active_frac) ~ 0``) there is no
+    activity to amortize over; instead of silently dropping the bias (which
+    made combined-mode footprints violate conservation on quiet segments)
+    it is returned as the second element, for the caller to route into the
+    report's idle/offset term:
+
+        sum(per_fn) + residual == relu-clamped theta(total counters)
+
+    Args:
+      fn_features: (M, F) per-function counters normalized by system totals,
+        or (B, M, F) for a fleet (with a fleet-batched model).
+      fn_active_frac: (M,) or (B, M) fraction of the interval each function
+        was running.
+
+    Returns:
+      ``(per_fn, residual)`` — (M,)/(B, M) watts per function and the ()/
+      (B,) watts of static bias left un-attributed (non-zero only on idle
+      intervals).
+    """
+    dynamic = _dynamic_power(model, fn_features)          # (..., M)
+    bias = _bias_like(model, dynamic.ndim)                # broadcastable
+    total = jnp.sum(fn_active_frac, axis=-1, keepdims=True)
+    has = total > 1e-9
+    static_share = jnp.where(
+        has, bias * fn_active_frac / jnp.where(has, total, 1.0), 0.0
+    )
+    residual = jnp.where(has[..., 0], 0.0, model.bias)
+    return jnp.maximum(dynamic, 0.0) + static_share, residual
 
 
 @jax.jit
@@ -119,24 +231,53 @@ def predict_function_power(
 ) -> Array:
     """Per-function chip power from per-function normalized counters.
 
-    The bias (static chip power) is amortized by activity fraction so that
-    summing over functions reproduces the interval's chip power estimate.
-
-    Args:
-      fn_features: (M, F) per-function counters normalized by system totals.
-      fn_active_frac: (M,) fraction of the interval the function was running.
+    The attributed half of ``predict_function_power_split``; callers that
+    must conserve energy on idle intervals (the combined-mode profiler)
+    use the split form and route the residual bias into their idle term.
     """
-    dynamic = fn_features @ model.weights
-    total_active = jnp.maximum(jnp.sum(fn_active_frac), 1e-9)
-    static_share = model.bias * fn_active_frac / total_active
-    return jnp.maximum(dynamic, 0.0) + static_share
+    per_fn, _ = predict_function_power_split(model, fn_features, fn_active_frac)
+    return per_fn
 
 
 @jax.jit
-def model_error(model: LinearPowerModel, features: Array, power: Array) -> Array:
-    """Relative error of the model on held-out intervals (retraining signal)."""
+def model_error(
+    model: LinearPowerModel,
+    features: Array,
+    power: Array,
+    *,
+    mask: Array | None = None,
+) -> Array:
+    """Relative error of the model on held-out intervals (retraining signal).
+
+    (N, F)/(N,) inputs give a scalar; fleet-batched (B, N, F)/(B, N) inputs
+    give one error per node, (B,).  ``mask`` (matching ``power``) restricts
+    the mean to valid intervals — a ragged fleet's dead windows score 0 and
+    a node with none stays at error 0.  This is the single definition of
+    the retraining criterion; ``retrain_flags``/``needs_retrain`` and the
+    streaming session's per-step checks all reduce through it.
+    """
     pred = predict_power(model, features)
-    return jnp.mean(jnp.abs(pred - power) / jnp.maximum(power, 1e-9))
+    rel = jnp.abs(pred - power) / jnp.maximum(power, 1e-9)
+    if mask is None:
+        return jnp.mean(rel, axis=-1)
+    m = mask.astype(rel.dtype)
+    return jnp.sum(rel * m, axis=-1) / jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+
+
+def retrain_flags(
+    model: LinearPowerModel,
+    features: Array,
+    power: Array,
+    config: CpuModelConfig = CpuModelConfig(),
+    *,
+    mask: Array | None = None,
+) -> Array:
+    """Traceable fleet retrain signal: (B,) bool, no host sync.
+
+    The streaming session evaluates this at every Kalman-step boundary
+    (paper: retrain when observed-vs-predicted error exceeds 5 %), with
+    ``mask`` marking each node's live windows on a ragged fleet."""
+    return model_error(model, features, power, mask=mask) > config.retrain_threshold
 
 
 def needs_retrain(

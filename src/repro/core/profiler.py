@@ -29,6 +29,7 @@ import numpy as np
 from repro.core import contribution as contrib
 from repro.core import cpu_model as cpumod
 from repro.core import sync as syncmod
+from repro.core.batched_engine import combined_rest_target, fleet_rest_idle
 from repro.core.disaggregation import DisaggregationConfig, disaggregate
 from repro.core.footprints import FootprintSpectrum, assemble_spectrum
 from repro.core.kalman import KalmanConfig, kalman_init, run_kalman
@@ -122,6 +123,7 @@ def _finalize_report(
     idle_watts: float,
     duration: float,
     skew: float,
+    idle_extra_watts: float = 0.0,
 ) -> FootprintReport:
     """Profiler steps 5-6, shared by ALL disaggregation paths (§4.3-§4.4).
 
@@ -137,9 +139,15 @@ def _finalize_report(
     window, then each Kalman step's X) and scores against the synchronized
     raw signal — comparing against the raw lagged series would charge the
     sensor's reporting delay to the model.
+
+    ``idle_extra_watts`` routes additional always-on power into the idle
+    energy term: combined mode (§4.3) passes the counter model's
+    *un-attributed* static bias here (non-zero only on idle intervals, see
+    ``cpu_model.predict_function_power_split``) so no measured chip energy
+    silently vanishes from the accounting.
     """
     cp_energy = float(x_cp * jnp.sum(cp_col)) if cp_col is not None else 0.0
-    idle_energy = idle_watts * duration
+    idle_energy = (idle_watts + float(idle_extra_watts)) * duration
     spectrum = assemble_spectrum(
         x_fns, mean_lat, counts, jnp.asarray(cp_energy), jnp.asarray(idle_energy)
     )
@@ -190,6 +198,149 @@ def _per_fn_latency_stats(fn_id, start, end, num_fns):
     return counts, mean, lat_sum, lat_sumsq
 
 
+def combined_chip_power(
+    counter_model: cpumod.LinearPowerModel,
+    fn_counters: Array,   # (..., M, F) normalized per-function counters
+    busy_seconds: Array,  # (..., M) per-function runtime over the segment
+    duration,             # scalar or (...,) segment seconds
+) -> tuple[Array, Array]:
+    """Per-function X_CPU + un-attributed static bias for a segment (§4.3).
+
+    The single place the combined mode turns counters into chip-side power
+    — the per-node ``profile``, ``fleet_profile_batched``, and
+    ``StreamingFleetSession`` all call it (per node or fleet-batched), so
+    the chip split cannot drift between paths.  The second element is the
+    static bias left un-attributed on idle intervals; callers route it into
+    the report's idle/offset term (``_finalize_report(idle_extra_watts=)``).
+    """
+    dur = jnp.asarray(duration, jnp.float32)
+    if dur.ndim:
+        dur = dur[..., None]
+    return cpumod.predict_function_power_split(
+        counter_model, fn_counters, busy_seconds / dur
+    )
+
+
+def _as_fleet_model(counter_model, b: int) -> cpumod.LinearPowerModel:
+    """Normalize ``counter_model`` to a fleet-batched ``LinearPowerModel``.
+
+    Accepts a sequence of per-node models (stacked), an already-batched
+    model with ``(B, F)``/``(B,)`` leaves (validated), or a single shared
+    model (broadcast to every node).
+    """
+    if not isinstance(counter_model, cpumod.LinearPowerModel) and isinstance(
+        counter_model, (list, tuple)
+    ):
+        if len(counter_model) != b:
+            raise ValueError(
+                f"got {len(counter_model)} counter model(s) for {b} node(s)"
+            )
+        return cpumod.stack_models(counter_model)
+    w = jnp.asarray(counter_model.weights)
+    bias = jnp.asarray(counter_model.bias)
+    if w.ndim == 1:
+        return cpumod.LinearPowerModel(
+            weights=jnp.broadcast_to(w, (b,) + w.shape),
+            bias=jnp.broadcast_to(jnp.reshape(bias, ()), (b,)),
+        )
+    if w.shape[0] != b:
+        raise ValueError(
+            f"batched counter model covers {w.shape[0]} node(s), fleet has {b}"
+        )
+    return cpumod.LinearPowerModel(weights=w, bias=bias)
+
+
+def _as_fleet_counters(fn_counters, b: int, num_fns: int) -> Array:
+    """Normalize per-function counters to one (B, M, F) array."""
+    arr = (
+        jnp.stack([jnp.asarray(f) for f in fn_counters])
+        if isinstance(fn_counters, (list, tuple))
+        else jnp.asarray(fn_counters)
+    )
+    if arr.ndim == 2:
+        arr = jnp.broadcast_to(arr, (b,) + arr.shape)
+    if arr.shape[0] != b or arr.shape[1] != num_fns:
+        raise ValueError(
+            f"fn_counters shape {arr.shape} does not match fleet "
+            f"(B={b}, M={num_fns})"
+        )
+    return arr
+
+
+def prepare_combined_fleet(
+    config: ProfilerConfig,
+    traces: "list[tuple[Array, Array, Array]]",
+    telemetries: "list[Telemetry]",
+    *,
+    num_fns: int,
+    duration,
+    gflops,
+    hbm_gb,
+    mean_latency,
+):
+    """Build everything combined-mode (§4.3) fleet profiling needs.
+
+    Per node: assemble the contribution matrix over that node's own window
+    count, derive its system-interval counter features
+    (``telemetry.counters.window_counters``) and normalized per-function
+    counters (``function_counters``), and fit its ``LinearPowerModel`` on
+    the **N_init block** of chip-power observations — one batched
+    ``fit_ridge`` call for the whole fleet.  Fitting on the init block
+    (like the skew estimate and X_0) keeps the model causal on the
+    streaming path, so the batch and streaming engines consume *identical*
+    models; the paper's continuous-retraining loop then monitors drift
+    past it (``cpu_model.retrain_flags`` at Kalman-step boundaries).
+
+    Args:
+      config: profiler configuration (delta + segment plan come from here).
+      traces: per-node (fn_id, start, end) invocation arrays.
+      telemetries: per-node ``Telemetry`` — every node needs chip power.
+      num_fns: number of unique functions M.
+      duration: segment seconds — one float or a per-node sequence.
+      gflops/hbm_gb/mean_latency: (M,) per-function step-counter specs.
+
+    Returns:
+      ``(fn_counters, window_features, models)`` — (B, M, F) normalized
+      per-function counters, (B, N_max, F) per-window features (zero-padded
+      past each node's span; the streaming session's retrain checks consume
+      them), and the fleet-batched ``LinearPowerModel``.
+    """
+    from repro.telemetry import counters as cntr
+
+    b = len(traces)
+    durations, _ = _node_durations(duration, b)
+    plans = [segment_plan(config, d) for d in durations]
+    init_n = plans[0][1]
+    if any(p[1] != init_n for p in plans):
+        raise ValueError(
+            "combined fleet: every node must cover the common N_init window "
+            f"({config.init_windows} windows); got per-node init blocks "
+            f"{[p[1] for p in plans]}"
+        )
+    n_max = max(p[0] for p in plans)
+    gf = jnp.asarray(np.asarray(gflops, np.float32))
+    hb = jnp.asarray(np.asarray(hbm_gb, np.float32))
+    lat = jnp.asarray(np.asarray(mean_latency, np.float32))
+    fn_list, wf_list, feats_init, chip_init = [], [], [], []
+    for (fn_id, start, end), tel, (n_i, _, _, _) in zip(traces, telemetries, plans):
+        if tel.chip_power is None:
+            raise ValueError("combined mode needs chip_power on every node")
+        c = contrib.contribution_matrix(
+            fn_id, start, end, num_fns=num_fns, num_windows=n_i, delta=config.delta
+        )
+        wf = cntr.window_counters(c, gf, hb, lat, config.delta)
+        fn_list.append(cntr.function_counters(c, gf, hb, lat))
+        if n_i < n_max:
+            wf = jnp.concatenate(
+                [wf, jnp.zeros((n_max - n_i, cntr.NUM_FEATURES), wf.dtype)]
+            )
+        wf_list.append(wf)
+        feats_init.append(wf[:init_n])
+        chip_init.append(tel.chip_power[:init_n])
+    models = cpumod.fit_ridge(jnp.stack(feats_init), jnp.stack(chip_init))
+    return jnp.stack(fn_list), jnp.stack(wf_list), models
+
+
 class FaasMeterProfiler:
     """Stateless-per-call profiler; hold one per node (or vmap the internals)."""
 
@@ -229,7 +380,7 @@ class FaasMeterProfiler:
         m_aug = c_aug.shape[1]
 
         # --- 3+4. Initial disaggregation + Kalman trajectory.
-        target = self._target_signal(w_sys, telemetry)
+        target = self._target_signal(w_sys, telemetry, init_n)
         x0 = disaggregate(c_aug[:init_n], target[:init_n], cfg.disagg)
 
         if s > 0:
@@ -247,13 +398,16 @@ class FaasMeterProfiler:
             traj = x0[None, :]
             x_final = x0
 
-        # --- 5. Combined mode: X = X_CPU + X_Rest (§4.3).
+        # --- 5. Combined mode: X = X_CPU + X_Rest (§4.3), shared helper.
+        idle_extra = 0.0
         if cfg.mode == "combined":
             if fn_counters is None or counter_model is None or telemetry.chip_power is None:
                 raise ValueError("combined mode needs fn_counters, counter_model, chip_power")
-            active_frac = jnp.sum(c, axis=0) / duration
-            x_cpu = cpumod.predict_function_power(counter_model, fn_counters, active_frac)
+            x_cpu, x_cpu_resid = combined_chip_power(
+                counter_model, fn_counters, jnp.sum(c, axis=0), duration
+            )
             x_fns = x_final[:num_fns] + x_cpu
+            idle_extra = float(x_cpu_resid)
         else:
             x_fns = x_final[:num_fns]
 
@@ -262,7 +416,7 @@ class FaasMeterProfiler:
         x_cp = x_final[num_fns] if cp_col is not None else jnp.asarray(0.0)
         offset = telemetry.idle_watts
         if cfg.mode == "combined":
-            offset = telemetry.chip_power[:n_windows] + self._rest_idle(telemetry)
+            offset = telemetry.chip_power[:n_windows] + self._rest_idle(telemetry, init_n)
         return _finalize_report(
             x_fns=x_fns, x_cp=x_cp, x0=x0, traj=traj,
             c_aug=c_aug, c_steps=c_steps if s > 0 else None,
@@ -270,6 +424,7 @@ class FaasMeterProfiler:
             init_n=init_n, s=s, step_windows=cfg.step_windows,
             counts=counts, mean_lat=mean_lat, cp_col=cp_col,
             idle_watts=telemetry.idle_watts, duration=duration, skew=skew,
+            idle_extra_watts=idle_extra,
         )
 
     def start_fleet_stream(
@@ -284,6 +439,10 @@ class FaasMeterProfiler:
         on_tick=None,
         on_bootstrap=None,
         mesh=None,
+        fn_counters=None,
+        counter_model=None,
+        window_features=None,
+        retrain_config: cpumod.CpuModelConfig = cpumod.CpuModelConfig(),
     ) -> "StreamingFleetSession":
         """Open an online profiling session for a fleet (docs/streaming.md).
 
@@ -292,17 +451,23 @@ class FaasMeterProfiler:
         via ``push_window``; ``finalize`` yields the same per-node
         ``FootprintReport`` list.  ``duration`` may be a per-node sequence
         (ragged fleet: nodes whose streams end mid-segment are masked out
-        of the engine while the rest keep ticking).  Raises ``ValueError``
-        for configurations the streaming engine does not cover (combined
-        mode, non-default disaggregation, segments too short for a Kalman
-        step, ragged nodes too short to bootstrap).  ``mesh`` (a
-        ``distributed.sharding.FleetMesh``) shards the carried engine
-        state and every per-tick update over the node axis.
+        of the engine while the rest keep ticking).  Combined mode (§4.3)
+        needs ``has_chip=True`` plus per-node ``fn_counters`` and
+        ``counter_model`` (see ``prepare_combined_fleet``); pass
+        ``window_features`` as well to get retrain checks at every Kalman
+        step boundary.  Raises ``ValueError`` for configurations the
+        streaming engine does not cover (non-default disaggregation,
+        segments too short for a Kalman step, ragged nodes too short to
+        bootstrap).  ``mesh`` (a ``distributed.sharding.FleetMesh``) shards
+        the carried engine state and every per-tick update over the node
+        axis.
         """
         return StreamingFleetSession(
             self, traces, num_fns=num_fns, duration=duration,
             idle_watts=idle_watts, has_chip=has_chip, has_cp=has_cp,
             on_tick=on_tick, on_bootstrap=on_bootstrap, mesh=mesh,
+            fn_counters=fn_counters, counter_model=counter_model,
+            window_features=window_features, retrain_config=retrain_config,
         )
 
     def _prep_node(self, fn_id, start, end, telemetry, num_fns, n_windows):
@@ -334,20 +499,26 @@ class FaasMeterProfiler:
             c_aug = c
         return w_sys, skew, c, c_aug, cp_col
 
-    def _target_signal(self, w_sys: Array, telemetry: Telemetry) -> Array:
+    def _target_signal(self, w_sys: Array, telemetry: Telemetry, init_n: int) -> Array:
         """Disaggregation target per mode (always idle-subtracted: X_No_Idle)."""
         cfg = self.config
         if cfg.mode == "combined":
-            # 'rest' power: system minus chip; chip side is modeled separately.
-            rest = w_sys - telemetry.chip_power[: w_sys.shape[0]]
-            return jnp.maximum(rest - self._rest_idle(telemetry), 0.0)
+            # 'rest' power: system minus chip; chip side is modeled separately
+            # (the shared engine helper — all fleet paths use the same one).
+            return combined_rest_target(
+                w_sys,
+                telemetry.chip_power[: w_sys.shape[0]],
+                self._rest_idle(telemetry, init_n),
+            )
         return jnp.maximum(w_sys - telemetry.idle_watts, 0.0)
 
-    def _rest_idle(self, telemetry: Telemetry) -> float:
+    def _rest_idle(self, telemetry: Telemetry, init_n: int) -> Array:
         # Idle power of the non-chip components; approximated as total idle
-        # minus the chip's floor (min observed chip power).
-        chip_floor = float(jnp.min(telemetry.chip_power))
-        return max(telemetry.idle_watts - chip_floor, 0.0)
+        # minus the chip's floor over the N_init block (never the raw
+        # telemetry's full length — a chip series longer than the segment
+        # must not change the estimate) and kept as a traced scalar so the
+        # batched/jitted paths never block on a host sync.
+        return fleet_rest_idle(telemetry.chip_power[:init_n], telemetry.idle_watts)
 
     def _per_step_stats(
         self, fn_id, start, end, num_fns, m_aug, init_n, s, cp_col,
@@ -413,14 +584,37 @@ def fleet_profile(
     *,
     num_fns: int,
     duration: float | Sequence[float],
+    fn_counters=None,
+    counter_model=None,
 ) -> list[FootprintReport]:
     """Profile many nodes sequentially (the per-node reference path).
 
     Orchestration-level loop; the per-node math is jitted and shape-stable
     so XLA caches a single executable across nodes (per distinct duration
     when the fleet is ragged — ``duration`` may be a per-node sequence).
-    The compiled fleet hot path is ``fleet_profile_batched``."""
-    durations, _ = _node_durations(duration, len(traces))
+    In combined mode pass per-node ``fn_counters`` ((B, M, F) or a list)
+    and ``counter_model`` (fleet-batched, a list, or one shared model —
+    see ``prepare_combined_fleet``).  The compiled fleet hot path is
+    ``fleet_profile_batched``."""
+    b = len(traces)
+    durations, _ = _node_durations(duration, b)
+    if profiler.config.mode == "combined":
+        if fn_counters is None or counter_model is None:
+            raise ValueError(
+                "combined mode needs fn_counters and counter_model "
+                "(see prepare_combined_fleet)"
+            )
+        fnc = _as_fleet_counters(fn_counters, b, num_fns)
+        models = _as_fleet_model(counter_model, b)
+        return [
+            profiler.profile(
+                f, st, en, num_fns=num_fns, duration=d, telemetry=tel,
+                fn_counters=fnc[i], counter_model=cpumod.model_row(models, i),
+            )
+            for i, ((f, st, en), tel, d) in enumerate(
+                zip(traces, telemetries, durations)
+            )
+        ]
     return [
         profiler.profile(f, st, en, num_fns=num_fns, duration=d, telemetry=tel)
         for (f, st, en), tel, d in zip(traces, telemetries, durations)
@@ -472,14 +666,27 @@ class StreamingFleetSession:
     instead of acausal peeking.  Tail windows are flushed with the batch
     path's edge clamp at ``finalize``.
 
-    Restrictions (same fleet homogeneity as ``fleet_profile_batched``): pure
-    mode, default NNLS/no_idle disaggregation, equal num_fns across nodes,
-    every node covering the common init window, and at least one node with
-    a full Kalman step after it.  Durations may differ per node (a *ragged*
+    Restrictions (same fleet homogeneity as ``fleet_profile_batched``):
+    default NNLS/no_idle disaggregation, equal num_fns across nodes, every
+    node covering the common init window, and at least one node with a
+    full Kalman step after it.  Durations may differ per node (a *ragged*
     fleet): pass a sequence — nodes whose stream ends mid-segment simply
     stop feeding the engine (``FleetStep.valid`` masks them out, so their
     Kalman state freezes while the live nodes keep ticking) and finalize
     against their own window count.
+
+    Combined mode (§4.3): with ``mode="combined"`` the session disaggregates
+    only the chip-subtracted 'rest' power — the per-tick target becomes
+    ``max(w_sync - chip - rest_idle, 0)`` through the same engine helper as
+    the segment paths, with the rest-side idle estimated over the init
+    block (causal).  The chip side comes from the per-node counter models
+    (``fn_counters`` + ``counter_model``; ``x_cpu`` is exposed for live
+    consumers and added into the finalized footprints).  When
+    ``window_features`` is given, the paper's continuous-retraining loop
+    runs live: each pushed chip window is paired with that tick's counter
+    features, and at every completed Kalman step the per-node model error
+    over the step is appended to ``model_errors`` with ``retrain_needed``
+    re-flagged (threshold ``cpu_model.CpuModelConfig.retrain_threshold``).
     """
 
     def __init__(
@@ -495,9 +702,13 @@ class StreamingFleetSession:
         on_tick=None,
         on_bootstrap=None,
         mesh=None,
+        fn_counters=None,
+        counter_model=None,
+        window_features=None,
+        retrain_config: cpumod.CpuModelConfig = cpumod.CpuModelConfig(),
     ):
         """Args:
-          profiler: configured ``FaasMeterProfiler`` (pure mode only).
+          profiler: configured ``FaasMeterProfiler`` (pure or combined mode).
           traces: per-node (fn_id, start, end) invocation arrays.
           num_fns: number of unique functions M.
           duration: segment length in seconds — one float, or a per-node
@@ -514,17 +725,35 @@ class StreamingFleetSession:
           mesh: optional ``distributed.sharding.FleetMesh``; the engine
             state lives sharded over the node axis and every ``fleet_step``
             runs under ``shard_map`` (B must tile the mesh evenly).
+          fn_counters: (B, M, F) normalized per-function counters (combined
+            mode; see ``prepare_combined_fleet``).
+          counter_model: fleet-batched / per-node-list / shared
+            ``LinearPowerModel`` (combined mode).
+          window_features: optional (B, N, F) per-window counter features —
+            enables live ``needs_retrain`` checks at step boundaries.
+          retrain_config: thresholds for those checks.
         """
         from repro.core import batched_engine as eng
 
         cfg = profiler.config
-        if cfg.mode != "pure":
-            raise ValueError("StreamingFleetSession supports mode='pure' only")
+        if cfg.mode not in ("pure", "combined"):
+            raise ValueError(f"unknown profiler mode {cfg.mode!r}")
         if not cfg.disagg.nonneg or cfg.disagg.mode != "no_idle":
             raise ValueError(
                 "StreamingFleetSession supports the default NNLS/no_idle "
                 "disaggregation config only"
             )
+        self.combined = cfg.mode == "combined"
+        if self.combined:
+            if not has_chip:
+                raise ValueError(
+                    "combined mode needs a chip reference (has_chip=True)"
+                )
+            if fn_counters is None or counter_model is None:
+                raise ValueError(
+                    "combined mode needs fn_counters and counter_model "
+                    "(see prepare_combined_fleet)"
+                )
         self.profiler = profiler
         self.cfg = cfg
         self.eng = eng
@@ -613,6 +842,29 @@ class StreamingFleetSession:
             init_iters=cfg.disagg.nnls_iters,
             init_ridge_lambda=cfg.disagg.ridge_lambda,
         )
+
+        # Combined mode (§4.3): the chip-side split is static per segment
+        # (the trace — hence busy seconds and counters — is known up front;
+        # only the power telemetry streams), so X_CPU is computed once here
+        # and exposed for live consumers (the control plane adds it to every
+        # tick's rest estimate before feeding footprint trackers).
+        self.x_cpu: Array | None = None
+        self._x_cpu_resid: Array | None = None
+        self._models: cpumod.LinearPowerModel | None = None
+        self._win_feats = None
+        self._retrain_cfg = retrain_config
+        self.model_errors: list[np.ndarray] = []
+        self.retrain_needed = np.zeros(self.b, bool)
+        if self.combined:
+            self._models = _as_fleet_model(counter_model, self.b)
+            fnc = _as_fleet_counters(fn_counters, self.b, num_fns)
+            busy = jnp.sum(self._c_fns, axis=1)            # (B, M) seconds
+            self.x_cpu, self._x_cpu_resid = combined_chip_power(
+                self._models, fnc, busy, jnp.asarray(self.durations, jnp.float32)
+            )
+            if window_features is not None:
+                self._win_feats = np.asarray(window_features, np.float32)
+        self._rest_idle_nodes: np.ndarray | None = None    # (B,) set at bootstrap
 
         # Streaming state.
         self._raw_w = np.zeros((self.n_windows, self.b), np.float32)
@@ -725,7 +977,21 @@ class StreamingFleetSession:
         for t in range(self.init_n):
             self._w_sync.append(self._synced_window(t))
         w_init = jnp.asarray(np.stack(self._w_sync, axis=1))       # (B, init_n)
-        target = jnp.maximum(w_init - self.idle[:, None], 0.0)
+        if self.combined:
+            # Rest-side idle from the chip floor over the init block — the
+            # same estimator (and block) as the batch paths' _rest_idle, so
+            # the streaming targets are causal AND identical to theirs.
+            chip_init = jnp.asarray(
+                np.stack(self._raw_chip[: self.init_n], axis=1)
+            )                                                      # (B, init_n)
+            self._rest_idle_nodes = np.asarray(
+                eng.fleet_rest_idle(chip_init, self.idle)
+            )
+            target = eng.combined_rest_target(
+                w_init, chip_init, jnp.asarray(self._rest_idle_nodes)[:, None]
+            )
+        else:
+            target = jnp.maximum(w_init - self.idle[:, None], 0.0)
         init_c = self._c_aug_block(0, self.init_n)                 # (B, init_n, M_aug)
         self.x0 = eng.fleet_initial_estimate(init_c, target, self._engine_cfg)
         self.init_busy_seconds = init_c.sum(axis=1)
@@ -748,7 +1014,14 @@ class StreamingFleetSession:
         cfg = self.cfg
         w_sync = self._synced_window(t)
         self._w_sync.append(w_sync)
-        target = jnp.maximum(jnp.asarray(w_sync) - self.idle, 0.0)
+        if self.combined:
+            target = self.eng.combined_rest_target(
+                jnp.asarray(w_sync),
+                jnp.asarray(self._raw_chip[t]),
+                jnp.asarray(self._rest_idle_nodes, jnp.float32),
+            )
+        else:
+            target = jnp.maximum(jnp.asarray(w_sync) - self.idle, 0.0)
         c_t = self._c_fns[:, t]
         j = t - self.init_n
         a_t = self._a_win[:, j]
@@ -779,6 +1052,8 @@ class StreamingFleetSession:
         completed = bool(att.step_completed)
         if completed:
             self._traj.append(att.x)
+            if self._win_feats is not None:
+                self._check_retrain(t)
         if self.on_tick is not None:
             self.on_tick(
                 StreamTick(
@@ -794,6 +1069,28 @@ class StreamingFleetSession:
                     valid=live,
                 )
             )
+
+    def _check_retrain(self, t: int) -> None:
+        """Paper §4.3 continuous retraining, live: at the Kalman-step
+        boundary closing at tick ``t``, score each node's counter model on
+        the step's (window features, observed chip power) pairs — the
+        per-tick counter feed — through ``cpu_model.model_error`` /
+        ``retrain_flags`` (the one place the retraining criterion is
+        defined).  Dead (ragged) nodes score only their real windows; a
+        node with none stays un-flagged."""
+        lo, hi = t - self.cfg.step_windows + 1, t + 1
+        feats = jnp.asarray(self._win_feats[:, lo:hi])             # (B, n_w, F)
+        chip = jnp.asarray(np.stack(self._raw_chip[lo:hi], axis=1))  # (B, n_w)
+        live = jnp.asarray(
+            np.arange(lo, hi)[None, :] < self._n_nodes[:, None]
+        )
+        err = cpumod.model_error(self._models, feats, chip, mask=live)
+        self.model_errors.append(np.asarray(err))
+        self.retrain_needed = np.asarray(
+            cpumod.retrain_flags(
+                self._models, feats, chip, self._retrain_cfg, mask=live
+            )
+        )
 
     # -- completion --------------------------------------------------------
 
@@ -824,13 +1121,27 @@ class StreamingFleetSession:
             jnp.asarray(np.stack(self._cp_col, axis=1)) if self.has_cp else None
         )
         idle = np.asarray(self.idle)
+        chip = (
+            np.stack(self._raw_chip, axis=1) if self._raw_chip else None
+        )                                                          # (B, n_raw)
         reports = []
         for i in range(self.b):
             s_i = self.s_nodes[i]
             n_used_i = self.init_n + s_i * cfg.step_windows
+            if self.combined:
+                x_fns_i = x_final[i, : self.num_fns] + self.x_cpu[i]
+                n_i = int(self._n_nodes[i])
+                offset_i = (
+                    jnp.asarray(chip[i, :n_i]) + float(self._rest_idle_nodes[i])
+                )
+                idle_extra_i = float(self._x_cpu_resid[i])
+            else:
+                x_fns_i = x_final[i, : self.num_fns]
+                offset_i = float(idle[i])
+                idle_extra_i = 0.0
             reports.append(
                 _finalize_report(
-                    x_fns=x_final[i, : self.num_fns],
+                    x_fns=x_fns_i,
                     x_cp=x_final[i, self.num_fns] if self.has_cp else jnp.asarray(0.0),
                     x0=self.x0[i],
                     traj=traj[i, :s_i] if s_i > 0 else self.x0[i][None],
@@ -843,13 +1154,14 @@ class StreamingFleetSession:
                         else None
                     ),
                     w_sys=w_sys[i],
-                    offset=float(idle[i]),
+                    offset=offset_i,
                     init_n=self.init_n, s=s_i, step_windows=cfg.step_windows,
                     counts=self.counts[i], mean_lat=self.mean_latency[i],
                     cp_col=cp_col[i] if self.has_cp else None,
                     idle_watts=float(idle[i]),
                     duration=self.durations[i],
                     skew=float(self.skews[i]),
+                    idle_extra_watts=idle_extra_i,
                 )
             )
         return reports
@@ -863,6 +1175,8 @@ def fleet_profile_batched(
     num_fns: int,
     duration: float | Sequence[float],
     mesh=None,
+    fn_counters=None,
+    counter_model=None,
 ) -> list[FootprintReport]:
     """Profile a whole fleet through the batched *segment* engine.
 
@@ -870,11 +1184,16 @@ def fleet_profile_batched(
     shape-stable, cached across nodes) and the cheap window-sized sync; the
     initial solve, the full Kalman trajectory, and the footprint spectra
     for all B nodes run as fleet-wide batched calls
-    (``core.batched_engine``).  Pure mode only — combined mode stays on the
-    per-node path.  The *online* counterpart (live per-tick state instead
-    of a finished segment) is ``StreamingFleetSession``.  ``mesh`` (a
-    ``distributed.sharding.FleetMesh``) shards the engine's node axis over
-    the mesh devices (B must tile it evenly).
+    (``core.batched_engine``).  In combined mode (§4.3) the engine
+    disaggregates each node's chip-subtracted 'rest' target
+    (``batched_engine.combined_rest_target``) and finalization adds the
+    counter model's per-function X_CPU — pass ``fn_counters`` ((B, M, F)
+    or a per-node list) and ``counter_model`` (fleet-batched, a list, or
+    one shared model; see ``prepare_combined_fleet``), with chip power on
+    every node's telemetry.  The *online* counterpart (live per-tick state
+    instead of a finished segment) is ``StreamingFleetSession``.  ``mesh``
+    (a ``distributed.sharding.FleetMesh``) shards the engine's node axis
+    over the mesh devices (B must tile it evenly).
 
     Ragged fleets: ``duration`` may be a per-node sequence.  Every node
     must still cover the common N_init window (a node too short to
@@ -888,8 +1207,8 @@ def fleet_profile_batched(
     from repro.core import batched_engine as eng
 
     cfg = profiler.config
-    if cfg.mode != "pure":
-        raise ValueError("fleet_profile_batched supports mode='pure' only")
+    if cfg.mode not in ("pure", "combined"):
+        raise ValueError(f"unknown profiler mode {cfg.mode!r}")
     if not cfg.disagg.nonneg or cfg.disagg.mode != "no_idle":
         # The engine's initial solve is gram-domain NNLS on the idle-adjusted
         # target; other disagg configs stay on the per-node reference path.
@@ -897,8 +1216,17 @@ def fleet_profile_batched(
             "fleet_profile_batched supports the default NNLS/no_idle "
             "disaggregation config only"
         )
+    combined = cfg.mode == "combined"
     delta = cfg.delta
     b = len(traces)
+    if combined:
+        if fn_counters is None or counter_model is None:
+            raise ValueError(
+                "combined mode needs fn_counters and counter_model "
+                "(see prepare_combined_fleet)"
+            )
+        if any(tel.chip_power is None for tel in telemetries):
+            raise ValueError("combined mode needs chip_power on every node")
     durations, ragged = _node_durations(duration, b)
     plans = [segment_plan(cfg, d) for d in durations]
     s_nodes = [p[2] for p in plans]
@@ -907,7 +1235,8 @@ def fleet_profile_batched(
         # Too short for any Kalman trajectory: the per-node path handles
         # the init-only case already.
         return fleet_profile(
-            profiler, traces, telemetries, num_fns=num_fns, duration=duration
+            profiler, traces, telemetries, num_fns=num_fns, duration=duration,
+            fn_counters=fn_counters, counter_model=counter_model,
         )
     init_n = plans[0][1]
     if any(p[1] != init_n for p in plans):
@@ -933,7 +1262,7 @@ def fleet_profile_batched(
     post_max = s_max * n_w
     c_nodes, target_nodes, skews, w_sys_nodes = [], [], [], []
     a_steps_nodes, lat_sum_nodes, lat_sumsq_nodes = [], [], []
-    cp_cols, counts_nodes, mean_lat_nodes = [], [], []
+    cp_cols, counts_nodes, mean_lat_nodes, rest_idles = [], [], [], []
     for (fn_id, start, end), tel, (n_windows_i, _, s_i, _) in zip(
         traces, telemetries, plans
     ):
@@ -944,7 +1273,9 @@ def fleet_profile_batched(
         w_sys_nodes.append(w_sys)
         cp_cols.append(cp_col)
         c_nodes.append(c_aug)
-        target_nodes.append(profiler._target_signal(w_sys, tel))
+        target_nodes.append(profiler._target_signal(w_sys, tel, init_n))
+        if combined:
+            rest_idles.append(profiler._rest_idle(tel, init_n))
         a_s, ls, lq = profiler._per_step_stats(
             fn_id, start, end, num_fns, c_aug.shape[1], init_n, s_i, cp_col
         )
@@ -1012,6 +1343,19 @@ def fleet_profile_batched(
         mesh=mesh,
     )
 
+    # Combined mode: one fleet-batched chip-side split (§4.3) — per-node
+    # busy seconds against per-node counter models, no Python-level loop.
+    x_cpu = x_cpu_resid = None
+    if combined:
+        models = _as_fleet_model(counter_model, b)
+        fnc = _as_fleet_counters(fn_counters, b, num_fns)
+        busy = jnp.stack(
+            [jnp.sum(c[:, :num_fns], axis=0) for c in c_nodes]
+        )                                                  # (B, M) seconds
+        x_cpu, x_cpu_resid = combined_chip_power(
+            models, fnc, busy, jnp.asarray(durations, jnp.float32)
+        )
+
     # Steps 5-6 through the shared finalizer, per node (the heavy math —
     # init solve + Kalman — already ran fleet-batched above; finalization is
     # window-sized and shared with the per-node and streaming paths so the
@@ -1021,9 +1365,19 @@ def fleet_profile_batched(
     reports = []
     for i in range(b):
         s_i = s_nodes[i]
+        if combined:
+            x_fns_i = result.x_final[i, :num_fns] + x_cpu[i]
+            offset_i = (
+                telemetries[i].chip_power[: plans[i][0]] + rest_idles[i]
+            )
+            idle_extra_i = float(x_cpu_resid[i])
+        else:
+            x_fns_i = result.x_final[i, :num_fns]
+            offset_i = telemetries[i].idle_watts
+            idle_extra_i = 0.0
         reports.append(
             _finalize_report(
-                x_fns=result.x_final[i, :num_fns],
+                x_fns=x_fns_i,
                 x_cp=result.x_final[i, num_fns] if has_cp else jnp.asarray(0.0),
                 x0=result.x0[i],
                 traj=result.x_trajectory[i, :s_i] if s_i > 0 else result.x0[i][None],
@@ -1034,12 +1388,13 @@ def fleet_profile_batched(
                     else None
                 ),
                 w_sys=w_sys_nodes[i],
-                offset=telemetries[i].idle_watts,
+                offset=offset_i,
                 init_n=init_n, s=s_i, step_windows=n_w,
                 counts=counts_nodes[i], mean_lat=mean_lat_nodes[i],
                 cp_col=cp_cols[i],
                 idle_watts=telemetries[i].idle_watts,
                 duration=durations[i], skew=skews[i],
+                idle_extra_watts=idle_extra_i,
             )
         )
     return reports

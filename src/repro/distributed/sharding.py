@@ -357,12 +357,20 @@ class FleetTotals(NamedTuple):
     ``per_fn.sum() + unattributed == attributed + unattributed`` equals the
     fleet's total measured active power-ticks: the per-tick efficiency
     property survives the cross-node reduction by linearity.
+
+    Combined mode (§4.3) keeps the chip and 'rest' sides split all the way
+    up: ``per_fn``/``attributed`` cover the disaggregated rest power, while
+    ``chip_per_fn``/``chip_total`` aggregate the counter-model X_CPU (zeros
+    when profiling pure mode) — a controller can bill the two spectra
+    separately or sum them for full-spectrum totals.
     """
 
     per_fn: Array        # (M,) attributed power summed over nodes and ticks (W)
     attributed: Array    # ()   total attributed power-ticks across the fleet
     unattributed: Array  # ()   total unattributed power-ticks across the fleet
     cp_total: Array      # ()   control-plane power summed over nodes (0 if absent)
+    chip_per_fn: Array   # (M,) counter-model chip power summed over nodes (W)
+    chip_total: Array    # ()   fleet chip-side total (0 in pure mode)
 
 
 def fleet_attribution_totals(
@@ -370,16 +378,24 @@ def fleet_attribution_totals(
     unattributed: Array,          # (B, T)
     cp_power: Array | None = None,  # (B,) per-node control-plane power estimate
     *,
+    chip_power: Array | None = None,  # (B, M) per-node per-function X_CPU (§4.3)
     mask: Array | None = None,    # (B, T) tick validity for ragged fleets
     mesh: FleetMesh | None = None,
 ) -> FleetTotals:
     """Reduce per-node attribution to fleet totals (the ``psum`` path).
 
-    Unsharded this is three ``jnp.sum`` calls.  With a :class:`FleetMesh`
-    the inputs stay sharded over the node axis: each device reduces its
-    local node block and a single ``psum`` along the axis produces the
-    replicated fleet totals — the only collective in the sharded
-    controller (per-node Kalman/disaggregation math never communicates).
+    Unsharded this is a handful of ``jnp.sum`` calls.  With a
+    :class:`FleetMesh` the inputs stay sharded over the node axis: each
+    device reduces its local node block and a single ``psum`` along the
+    axis produces the replicated fleet totals — the only collective in the
+    sharded controller (per-node Kalman/disaggregation math never
+    communicates).
+
+    ``chip_power`` is combined mode's (B, M) per-function chip-side power
+    (``StreamingFleetSession.x_cpu`` / the counter-model split): it rides
+    the same local-reduce + psum as the rest-side partials, keeping the
+    §4.3 chip/rest split intact at fleet level (``chip_per_fn`` /
+    ``chip_total``; zeros when absent).
 
     ``mask`` is the ragged fleet's ``(B, T)`` tick-validity mask
     (``FleetInputs.mask`` flattened over steps): padded ticks are excluded
@@ -394,33 +410,47 @@ def fleet_attribution_totals(
     if mask is not None:
         mask = mask.reshape(unattributed.shape).astype(tick_power.dtype)
 
-    def _local(tp, ua, cpv, m):
+    def _local(tp, ua, cpv, m, chip):
         # Dense fleets (mask=None) keep the original plain-sum cost: no
         # ones-mask is ever materialized or multiplied through.
         if m is not None:
             tp = tp * m[..., None]
             ua = ua * m
-        return FleetTotals(
-            per_fn=jnp.sum(tp, axis=(0, 1)),
-            attributed=jnp.sum(tp),
-            unattributed=jnp.sum(ua),
-            cp_total=jnp.sum(cpv),
-        )
+        return _part(tp, ua, cpv, chip)
 
     if mesh is None:
-        return _local(tick_power, unattributed, cp, mask)
+        return _local(tick_power, unattributed, cp, mask, chip_power)
     mesh.validate(tick_power.shape[0])
-    if mask is None:
-        return _totals_runner(mesh, False)(tick_power, unattributed, cp)
-    return _totals_runner(mesh, True)(tick_power, unattributed, cp, mask)
+    args = [tick_power, unattributed, cp]
+    if mask is not None:
+        args.append(mask)
+    if chip_power is not None:
+        args.append(chip_power)
+    return _totals_runner(mesh, mask is not None, chip_power is not None)(*args)
+
+
+def _part(tp, ua, cpv, chip) -> FleetTotals:
+    """Node-local (single-shard) totals; ``chip=None`` fills zeros."""
+    m = tp.shape[-1]
+    return FleetTotals(
+        per_fn=jnp.sum(tp, axis=(0, 1)),
+        attributed=jnp.sum(tp),
+        unattributed=jnp.sum(ua),
+        cp_total=jnp.sum(cpv),
+        chip_per_fn=(
+            jnp.zeros((m,), tp.dtype) if chip is None else jnp.sum(chip, axis=0)
+        ),
+        chip_total=jnp.zeros((), tp.dtype) if chip is None else jnp.sum(chip),
+    )
 
 
 @functools.lru_cache(maxsize=None)
-def _totals_runner(mesh: FleetMesh, has_mask: bool):
+def _totals_runner(mesh: FleetMesh, has_mask: bool, has_chip: bool):
     """Compiled psum reduction for ``fleet_attribution_totals`` (cached per
-    (mesh, has_mask) so repeated controller ticks reuse one executable).
-    The ragged variant takes the tick mask as a fourth input, sharded
-    along the node axis like every other per-node array; the dense
+    (mesh, has_mask, has_chip) so repeated controller ticks reuse one
+    executable).  The ragged variant takes the tick mask as an extra
+    input, the combined variant the (B, M) chip split — each sharded
+    along the node axis like every other per-node array; the plain dense
     variant keeps the original three-input plain-sum program."""
     from repro.distributed.compat import shard_map
 
@@ -429,24 +459,16 @@ def _totals_runner(mesh: FleetMesh, has_mask: bool):
     def _psum(part: FleetTotals) -> FleetTotals:
         return jax.tree.map(lambda v: jax.lax.psum(v, mesh.axis), part)
 
-    def _part(tp, ua, cpv) -> FleetTotals:
-        return FleetTotals(
-            per_fn=jnp.sum(tp, axis=(0, 1)),
-            attributed=jnp.sum(tp),
-            unattributed=jnp.sum(ua),
-            cp_total=jnp.sum(cpv),
-        )
+    def _local_psum(tp, ua, cpv, *rest):
+        it = iter(rest)
+        m = next(it) if has_mask else None
+        chip = next(it) if has_chip else None
+        if m is not None:
+            tp = tp * m[..., None]
+            ua = ua * m
+        return _psum(_part(tp, ua, cpv, chip))
 
-    if has_mask:
-        def _local_psum(tp, ua, cpv, m):
-            return _psum(_part(tp * m[..., None], ua * m, cpv))
-
-        in_specs = (node, node, node, node)
-    else:
-        def _local_psum(tp, ua, cpv):
-            return _psum(_part(tp, ua, cpv))
-
-        in_specs = (node, node, node)
+    in_specs = (node, node, node) + (node,) * (int(has_mask) + int(has_chip))
 
     return jax.jit(
         shard_map(

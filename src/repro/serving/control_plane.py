@@ -34,6 +34,7 @@ from repro.core.profiler import (
     FootprintReport,
     ProfilerConfig,
     fleet_profile,
+    prepare_combined_fleet,
     segment_plan,
 )
 from repro.telemetry.simulator import NodeSimulator, SimResult, SimulatorConfig
@@ -177,6 +178,34 @@ class EnergyFirstControlPlane:
         )
         return ProfiledWorkload(report=report, sim=sim, trace=trace, prices=prices)
 
+    def combined_counter_inputs(
+        self,
+        profiler: FaasMeterProfiler,
+        trace_arrays,
+        telemetries,
+        *,
+        num_fns: int,
+        duration,
+    ):
+        """Counter features + per-node ridge models for combined mode (§4.3).
+
+        Derives the (M,) step-counter specs (gflops/hbm/mean latency) from
+        the registry and delegates to ``core.profiler.prepare_combined_fleet``
+        — models are fit on each node's N_init block of chip power, so the
+        same inputs drive the batch, streaming, and per-node-oracle paths
+        identically.  Returns ``(fn_counters, window_features, models)``.
+        """
+        specs = self.registry.specs
+        return prepare_combined_fleet(
+            profiler.config, trace_arrays, telemetries,
+            num_fns=num_fns, duration=duration,
+            gflops=np.asarray([s.gflops for s in specs]),
+            hbm_gb=np.asarray([s.hbm_gb for s in specs]),
+            mean_latency=np.asarray(
+                [max(s.mean_latency_s, 1e-3) for s in specs]
+            ),
+        )
+
     def profile_fleet(
         self,
         traces: list[InvocationTrace],
@@ -184,6 +213,7 @@ class EnergyFirstControlPlane:
         seeds: list[int] | None = None,
         on_tick=None,
         mesh="auto",
+        mode: str | None = None,
     ) -> list[ProfiledWorkload]:
         """Profile many nodes through the *streaming* fleet engine, live.
 
@@ -220,6 +250,13 @@ class EnergyFirstControlPlane:
             multi-device controller shards transparently; pass an explicit
             ``FleetMesh`` to pin the layout or ``None`` to force the
             single-device path.
+          mode: ``"pure"`` | ``"combined"`` (§4.3) — defaults to the
+            profiler config's mode.  Combined needs chip telemetry on
+            every node; per-node counter models are fit on the N_init
+            block (``combined_counter_inputs``), the engines disaggregate
+            the chip-subtracted 'rest' power, live trackers are fed the
+            full X = X_CPU + X_Rest, and retrain flags are checked at
+            every Kalman step (``session.retrain_needed``).
 
         Returns:
           One ``ProfiledWorkload`` per node, with ``footprint_stream``
@@ -233,6 +270,17 @@ class EnergyFirstControlPlane:
             from repro.distributed.sharding import fleet_mesh_auto
 
             mesh = fleet_mesh_auto(len(traces))
+        cfg = self.profiler.config
+        mode = cfg.mode if mode is None else mode
+        if mode not in ("pure", "combined"):
+            raise ValueError(f"mode must be 'pure' or 'combined'; got {mode!r}")
+        profiler = (
+            self.profiler
+            if mode == cfg.mode
+            else FaasMeterProfiler(dataclasses.replace(cfg, mode=mode))
+        )
+        cfg = profiler.config
+        combined = mode == "combined"
         sims = self.simulator.simulate_fleet(traces, seeds)
         durations = [t.duration for t in traces]
         ragged = len(set(durations)) > 1
@@ -243,7 +291,11 @@ class EnergyFirstControlPlane:
             for t in traces
         ]
         tels = [s.telemetry for s in sims]
-        cfg = self.profiler.config
+        if combined and any(tel.chip_power is None for tel in tels):
+            raise ValueError(
+                "profile_fleet(mode='combined') needs a chip power source "
+                "on every node (the edge platform has none — use pure mode)"
+            )
         plans = [segment_plan(cfg, d) for d in durations]
         n_max = max(p[0] for p in plans)
         s = max(p[2] for p in plans)
@@ -256,15 +308,27 @@ class EnergyFirstControlPlane:
                 "profile_fleet needs a homogeneous fleet: telemetries mix "
                 "present/absent cp_cpu_frac (use fleet_profile instead)"
             )
+        fn_counters = window_feats = counter_model = None
+        if combined and init_uniform:
+            fn_counters, window_feats, counter_model = self.combined_counter_inputs(
+                profiler, trace_arrays, tels, num_fns=num_fns, duration=duration
+            )
 
         if s == 0 or not init_uniform:
             # Too short for any Kalman step (or some node cannot even cover
             # the common init window): no streaming state to track.  An
             # attached-but-never-fed tracker would report 0 J/invocation
             # as if it were a measurement, so footprint_stream stays None.
+            if combined and not init_uniform:
+                raise ValueError(
+                    "profile_fleet(mode='combined') needs every node to "
+                    "cover the common N_init window (counter models are "
+                    "fit on it); use the per-node path"
+                )
             reports = fleet_profile(
-                self.profiler, trace_arrays, tels,
+                profiler, trace_arrays, tels,
                 num_fns=num_fns, duration=duration,
+                fn_counters=fn_counters, counter_model=counter_model,
             )
             trackers: list[StreamingFootprintTracker | None] = [None] * len(traces)
         else:
@@ -273,12 +337,19 @@ class EnergyFirstControlPlane:
                 for tel in tels
             ]
 
+            def _full_x(x_rest, i):
+                # Combined mode: live trackers meter the full spectrum —
+                # the causal rest estimate plus the node's (static) X_CPU.
+                if not combined:
+                    return x_rest
+                return np.asarray(x_rest[:num_fns]) + x_cpu_np[i]
+
             def _on_bootstrap(sess):
                 # Seed with the init segment (X_0 estimate) so functions
                 # active only early still carry their energy.
                 for i, tr in enumerate(trackers):
                     tr.observe_step(
-                        np.asarray(sess.x0[i]),
+                        _full_x(np.asarray(sess.x0[i]), i),
                         np.asarray(sess.init_busy_seconds[i]),
                         np.asarray(sess.init_invocations[i]),
                         sess.init_seconds,
@@ -290,18 +361,23 @@ class EnergyFirstControlPlane:
                     # accumulating (its engine state is frozen; folding the
                     # dead ticks in would keep growing its idle share).
                     if tk.valid is None or tk.valid[i]:
-                        tr.observe_tick(tk.x[i], tk.busy_seconds[i], tk.a[i], cfg.delta)
+                        tr.observe_tick(
+                            _full_x(tk.x[i], i), tk.busy_seconds[i], tk.a[i], cfg.delta
+                        )
                 if on_tick is not None:
                     on_tick(tk, trackers)
 
-            session = self.profiler.start_fleet_stream(
+            session = profiler.start_fleet_stream(
                 trace_arrays, num_fns=num_fns, duration=duration,
                 idle_watts=[tel.idle_watts for tel in tels],
                 has_chip=tels[0].chip_power is not None,
                 has_cp=has_cp_flags[0],
                 on_tick=_on_tick, on_bootstrap=_on_bootstrap,
                 mesh=mesh,
+                fn_counters=fn_counters, counter_model=counter_model,
+                window_features=window_feats,
             )
+            x_cpu_np = np.asarray(session.x_cpu) if combined else None
             # Stack each signal once into (N_max, B) so the replay loop
             # indexes rows instead of doing B Python-level scalar reads per
             # window; nodes shorter than the longest are zero-padded (the
