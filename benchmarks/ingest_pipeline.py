@@ -1,0 +1,192 @@
+"""Telemetry ingest pipeline: batched front-end + async prefetch throughput.
+
+The engines behind the profiler are vmapped, sharded, and jitted; this
+benchmark measures the layer *in front of* them — the sensor degradation
+chain and window resampling that turn true power into telemetry — and the
+ingest stage that feeds the streaming engine.  Two questions:
+
+1. **Front-end batching** — how much faster is the fleet-batched chain than
+   the per-node loop it replaces (bitwise-equal output)?  Measured in both
+   forms: the *ingest* form — window-sized chunks through
+   ``FleetStreamingSensor`` / ``FleetWindowResampler`` vs B per-node
+   ``StreamingSensor`` / ``StreamingWindowResampler`` pushes per tick, the
+   per-tick serial bottleneck this pipeline removes (acceptance: >= 3x at
+   B = 64) — and the *segment* form, one ``sense_fleet`` /
+   ``resample_fleet`` pass vs the per-node ``sense`` /
+   ``resample_to_windows`` loop (smaller win: both sides pay the identical
+   sequential-IIR FLOPs, batching only amortizes the per-node Python and
+   dispatch overhead).
+2. **Ingest overlap** — end-to-end ticks/sec of ``stream_fleet`` feeding a
+   ``StreamingFleetSession``, with the tick stream pulled on a background
+   thread (``session.ingest(prefetch=4)``: sensing of window t + 1 overlaps
+   the jitted ``fleet_step`` on window t) vs strict alternation
+   (``prefetch=0``).  Acceptance: overlapped > alternating, no retrace
+   across ticks.
+
+Metrics:
+
+- ``frontend_loop_ms``    : per-tick ingest front-end, B per-node pushes
+- ``frontend_fleet_ms``   : per-tick ingest front-end, one fleet push
+- ``frontend_speedup``    : loop / fleet (accept >= 3 at B = 64)
+- ``frontend_batch_loop_ms`` / ``frontend_batch_fleet_ms`` /
+  ``frontend_batch_speedup`` : segment-form counterparts
+- ``ticks_per_s_alternating`` / ``ticks_per_s_overlapped`` : end-to-end
+  (front-end + engine) tick throughput of the streaming session
+- ``overlap_speedup``     : overlapped / alternating (accept > 1)
+- ``stream_traces``       : jit cache growth across the measured runs (must
+  be 0; -1 if the private jit cache counter is unavailable)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+import repro.telemetry.sources as src
+from repro.core.batched_engine import fleet_step
+from repro.core.profiler import FaasMeterProfiler, ProfilerConfig
+from repro.telemetry.simulator import NodeSimulator, SimulatorConfig
+from repro.workload.azure import WorkloadConfig, generate_trace
+from repro.workload.functions import paper_functions
+
+import jax.numpy as jnp
+
+
+def _timed(fn, reps: int) -> float:
+    fn()  # warm caches (scipy import, allocator, lazy compiles)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def _frontend(b: int, duration: float, reps: int) -> dict:
+    """Per-node loops vs the fleet-batched chain over the same (B, T) truth."""
+    dt, delta = 0.02, 1.0
+    t_len = int(round(duration / dt))
+    n_w = int(round(duration / delta))
+    bins = int(round(delta / dt))
+    rng = np.random.default_rng(0)
+    true = 90.0 + 25.0 * np.abs(np.sin(np.arange(t_len) * dt))[None, :] + \
+        2.0 * rng.standard_normal((b, t_len))
+    kinds = [src.IPMI_LIKE, src.RAPL_LIKE]
+
+    # Ingest form: one delta-window chunk per push, as the live pipeline
+    # delivers it — the per-node Python loop is the serial bottleneck here.
+    def loop_stream():
+        for cfg in kinds:
+            ss = [src.StreamingSensor(cfg, dt, np.random.default_rng(i)) for i in range(b)]
+            rs = [src.StreamingWindowResampler(delta) for _ in range(b)]
+            for w in range(n_w):
+                for i in range(b):
+                    sig = ss[i].push(true[i, w * bins:(w + 1) * bins])
+                    rs[i].push(sig.times, sig.watts)
+
+    def fleet_stream():
+        for cfg in kinds:
+            fs = src.FleetStreamingSensor(
+                cfg, dt, [np.random.default_rng(i) for i in range(b)]
+            )
+            fr = src.FleetWindowResampler(delta, b)
+            for w in range(n_w):
+                sig = fs.push(true[:, w * bins:(w + 1) * bins])
+                fr.push(sig.times, sig.watts)
+
+    # Segment form: the whole finished segment in one call per node/fleet.
+    def loop_batch():
+        for cfg in kinds:
+            for i in range(b):
+                sig = src.sense(true[i], dt, cfg, np.random.default_rng(i))
+                src.resample_to_windows(sig, n_w, delta)
+
+    def fleet_batch():
+        for cfg in kinds:
+            rngs = [np.random.default_rng(i) for i in range(b)]
+            fs = src.sense_fleet(true, dt, cfg, rngs=rngs)
+            src.resample_fleet(fs, n_w, delta)
+
+    loop_s = _timed(loop_stream, reps)
+    fleet_s = _timed(fleet_stream, reps)
+    bloop_s = _timed(loop_batch, reps)
+    bfleet_s = _timed(fleet_batch, reps)
+    return {
+        "frontend_shape": f"B{b} T{t_len} n_w{n_w}",
+        "frontend_loop_ms": loop_s * 1e3,
+        "frontend_fleet_ms": fleet_s * 1e3,
+        "frontend_speedup": loop_s / fleet_s,
+        "frontend_batch_loop_ms": bloop_s * 1e3,
+        "frontend_batch_fleet_ms": bfleet_s * 1e3,
+        "frontend_batch_speedup": bloop_s / bfleet_s,
+    }
+
+
+def _end_to_end(b: int, duration: float, profiler_cfg: ProfilerConfig) -> dict:
+    """stream_fleet -> StreamingFleetSession ticks/sec, overlap on vs off."""
+    reg = paper_functions()
+    sim = NodeSimulator(reg, SimulatorConfig(platform="server"))
+    traces = [
+        generate_trace(reg, WorkloadConfig(duration_s=duration, seed=100 + i))
+        for i in range(b)
+    ]
+    seeds = list(range(b))
+    profiler = FaasMeterProfiler(profiler_cfg)
+    trace_arrays = [
+        (jnp.asarray(t.fn_id), jnp.asarray(t.start), jnp.asarray(t.end))
+        for t in traces
+    ]
+    idle = [sim.power_cfg.idle_w] * b
+    n_ticks = int(round(duration / sim.config.delta))
+
+    def session():
+        return profiler.start_fleet_stream(
+            trace_arrays, num_fns=reg.specs.__len__(), duration=duration,
+            idle_watts=idle, has_chip=True, has_cp=True,
+        )
+
+    def run_once(prefetch: int) -> float:
+        s = session()
+        t0 = time.perf_counter()
+        s.ingest(sim.stream_fleet(traces, seeds=seeds), prefetch=prefetch)
+        s.finalize()
+        return time.perf_counter() - t0
+
+    cache_size = getattr(fleet_step, "_cache_size", lambda: None)
+    run_once(0)  # compile fleet_step / bootstrap once, outside the clock
+    traces_before = cache_size()
+    alt_s = run_once(0)
+    ovl_s = run_once(4)
+    return {
+        "e2e_shape": f"B{b} ticks{n_ticks}",
+        "ticks_per_s_alternating": n_ticks / alt_s,
+        "ticks_per_s_overlapped": n_ticks / ovl_s,
+        "overlap_speedup": alt_s / ovl_s,
+        "stream_traces": (
+            cache_size() - traces_before if traces_before is not None else -1
+        ),
+    }
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Front-end batching + ingest-overlap metrics (module docstring)."""
+    if smoke:
+        # Rot gate: tiny fleet, shortest segment the streaming engine
+        # accepts under a small init/step plan — seconds, not minutes.
+        front = _frontend(b=8, duration=20.0, reps=1)
+        e2e = _end_to_end(
+            b=8, duration=40.0,
+            profiler_cfg=ProfilerConfig(init_windows=20, step_windows=10),
+        )
+    else:
+        front = _frontend(b=64, duration=90.0, reps=3 if quick else 10)
+        e2e = _end_to_end(
+            b=64, duration=150.0 if quick else 300.0,
+            profiler_cfg=ProfilerConfig(init_windows=60, step_windows=30),
+        )
+    return {**front, **e2e}
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k:28s} {v:.4g}" if isinstance(v, float) else f"{k:28s} {v}")

@@ -34,6 +34,7 @@ MODULES = [
     ("sharded_fleet", "Perf: mesh-sharded fleet scaling"),
     ("ragged_fleet", "Perf: ragged-fleet padding overhead vs rag ratio"),
     ("combined_fleet", "Perf: combined-mode (§4.3) chip/rest split overhead"),
+    ("ingest_pipeline", "Perf: telemetry ingest — batched front-end + prefetch overlap"),
     ("kernel_bench", "Perf: kernel path"),
 ]
 

@@ -36,10 +36,12 @@ SURFACES = (
     "repro.core.profiler",
     "repro.core.cpu_model",
     "repro.telemetry.counters",
+    "repro.telemetry.sources",
     "repro.serving.control_plane",
     "repro.distributed.sharding",
     "benchmarks.ragged_fleet",
     "benchmarks.combined_fleet",
+    "benchmarks.ingest_pipeline",
 )
 for mod_name in SURFACES:
     mod = importlib.import_module(mod_name)
@@ -78,10 +80,10 @@ if missing:
 print(f"benchmark smoke OK ({len(results)} modules, strict well-formed JSON)")
 EOF
 
-echo "== sharded + ragged + combined fleet pins (forced 8-device host mesh, own subprocess) =="
+echo "== sharded + ragged + combined fleet + telemetry front-end pins (forced 8-device host mesh, own subprocess) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m pytest -q tests/test_sharded_fleet.py tests/test_ragged_fleet.py \
-  tests/test_combined_fleet.py
+  tests/test_combined_fleet.py tests/test_telemetry_frontend.py
 
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"

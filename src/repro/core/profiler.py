@@ -916,6 +916,26 @@ class StreamingFleetSession:
             self._cp_col.append(np.asarray(col, np.float32))
         self._advance()
 
+    def ingest(self, ticks, *, prefetch: int = 2) -> None:
+        """Feed a whole telemetry tick stream, prefetched ahead of the engine.
+
+        ``ticks`` is any iterator of objects with ``w_sys`` / ``w_chip`` /
+        ``cp_frac`` / ``sys_frac`` attributes (``simulator.FleetTelemetryTick``
+        in practice).  With ``prefetch >= 1`` the stream is pulled on a
+        background thread (``data.pipeline.prefetch_iterator``), so the
+        host-side sensing/resampling that produces tick ``t + 1`` overlaps
+        the jitted ``fleet_step`` dispatched for tick ``t`` — the async
+        ingest stage.  ``prefetch = 0`` falls back to strict alternation
+        (sense, then step, then sense ...), which is the baseline the ingest
+        benchmark compares against.
+        """
+        if prefetch > 0:
+            from repro.data.pipeline import prefetch_iterator
+
+            ticks = prefetch_iterator(ticks, size=prefetch)
+        for tk in ticks:
+            self.push_window(tk.w_sys, tk.w_chip, tk.cp_frac, tk.sys_frac)
+
     # -- internals ---------------------------------------------------------
 
     def _synced_window(self, t: int) -> np.ndarray:

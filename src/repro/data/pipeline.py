@@ -61,6 +61,50 @@ def synthetic_batch(
     return batch
 
 
+def prefetch_iterator(
+    it: Iterator[Any], size: int = 2, *, transfer: Any = None
+) -> Iterator[Any]:
+    """Run ``it`` on a background thread, ``size`` elements ahead.
+
+    The producer thread fills a bounded queue while the consumer (usually a
+    jitted device loop) drains it, so host-side work — telemetry sensing,
+    batch synthesis, host->device transfer — overlaps device compute.  The
+    host stages release the GIL in their numpy/scipy kernels and in device
+    transfers, which is where the overlap comes from; ``transfer`` (e.g. a
+    ``jax.device_put`` wrapper) runs on the producer thread so the consumer
+    only ever sees device-resident elements.
+
+    Exceptions raised by ``it`` or ``transfer`` re-raise at the consuming
+    ``next()`` call; the thread is a daemon, so an abandoned iterator never
+    blocks interpreter exit.
+    """
+    import queue
+    import threading
+
+    if size < 1:
+        raise ValueError(f"prefetch size must be >= 1, got {size}")
+    q: "queue.Queue[tuple[Any, Any]]" = queue.Queue(maxsize=size)
+    done = object()
+
+    def _produce() -> None:
+        try:
+            for item in it:
+                q.put((item if transfer is None else transfer(item), None))
+        except BaseException as e:  # noqa: BLE001 - re-raised on the consumer
+            q.put((done, e))
+        else:
+            q.put((done, None))
+
+    threading.Thread(target=_produce, daemon=True).start()
+    while True:
+        item, err = q.get()
+        if item is done:
+            if err is not None:
+                raise err
+            return
+        yield item
+
+
 def batch_iterator(
     api: ModelApi,
     shape: ShapeConfig,

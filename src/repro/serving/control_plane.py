@@ -37,7 +37,12 @@ from repro.core.profiler import (
     prepare_combined_fleet,
     segment_plan,
 )
-from repro.telemetry.simulator import NodeSimulator, SimResult, SimulatorConfig
+from repro.telemetry.simulator import (
+    FleetTelemetryTick,
+    NodeSimulator,
+    SimResult,
+    SimulatorConfig,
+)
 from repro.workload.functions import FunctionRegistry
 from repro.workload.trace import InvocationTrace
 
@@ -214,6 +219,7 @@ class EnergyFirstControlPlane:
         on_tick=None,
         mesh="auto",
         mode: str | None = None,
+        prefetch: int = 2,
     ) -> list[ProfiledWorkload]:
         """Profile many nodes through the *streaming* fleet engine, live.
 
@@ -257,6 +263,11 @@ class EnergyFirstControlPlane:
             the chip-subtracted 'rest' power, live trackers are fed the
             full X = X_CPU + X_Rest, and retrain flags are checked at
             every Kalman step (``session.retrain_needed``).
+          prefetch: ingest lookahead — ticks are pulled on a background
+            thread this many windows ahead of the engine
+            (``StreamingFleetSession.ingest``), overlapping host-side
+            telemetry work with the jitted ``fleet_step``; ``0`` forces
+            strict sense/step alternation.
 
         Returns:
           One ``ProfiledWorkload`` per node, with ``footprint_stream``
@@ -378,7 +389,7 @@ class EnergyFirstControlPlane:
                 window_features=window_feats,
             )
             x_cpu_np = np.asarray(session.x_cpu) if combined else None
-            # Stack each signal once into (N_max, B) so the replay loop
+            # Stack each signal once into (N_max, B) so the tick generator
             # indexes rows instead of doing B Python-level scalar reads per
             # window; nodes shorter than the longest are zero-padded (the
             # session masks their dead ticks out of the engine anyway).
@@ -400,13 +411,20 @@ class EnergyFirstControlPlane:
             sf_np = (
                 _stack(lambda tel: tel.sys_cpu_frac) if has_cp_flags[0] else None
             )
-            for t in range(n_max):
-                session.push_window(
-                    w_sys=sys_np[t],
-                    w_chip=chip_np[t] if chip_np is not None else None,
-                    cp_frac=cp_np[t] if cp_np is not None else None,
-                    sys_frac=sf_np[t] if sf_np is not None else None,
-                )
+
+            def _ticks():
+                for t in range(n_max):
+                    yield FleetTelemetryTick(
+                        t=t,
+                        w_sys=sys_np[t],
+                        w_chip=chip_np[t] if chip_np is not None else None,
+                        cp_frac=cp_np[t] if cp_np is not None else None,
+                        sys_frac=sf_np[t] if sf_np is not None else None,
+                    )
+
+            # The ingest stage pulls ticks on a background thread so window
+            # t + 1's host work overlaps the engine's jitted step on t.
+            session.ingest(_ticks(), prefetch=prefetch)
             reports = session.finalize()
 
         mem = jnp.asarray([sp.mem_gb for sp in self.registry.specs], jnp.float32)

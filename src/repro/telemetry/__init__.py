@@ -8,7 +8,17 @@ the degraded signals, making marginal-energy validation a genuine test.
 """
 
 from repro.telemetry.power_model import PowerModelConfig, NodePowerModel
-from repro.telemetry.sources import SensorConfig, PowerSignal, sense, resample_to_windows
+from repro.telemetry.sources import (
+    FleetPowerSignal,
+    FleetStreamingSensor,
+    FleetWindowResampler,
+    PowerSignal,
+    SensorConfig,
+    resample_fleet,
+    resample_to_windows,
+    sense,
+    sense_fleet,
+)
 from repro.telemetry.counters import window_counters, function_counters
 from repro.telemetry.simulator import NodeSimulator, SimResult, SimulatorConfig
 
@@ -17,8 +27,13 @@ __all__ = [
     "NodePowerModel",
     "SensorConfig",
     "PowerSignal",
+    "FleetPowerSignal",
+    "FleetStreamingSensor",
+    "FleetWindowResampler",
     "sense",
+    "sense_fleet",
     "resample_to_windows",
+    "resample_fleet",
     "window_counters",
     "function_counters",
     "NodeSimulator",

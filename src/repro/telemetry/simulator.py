@@ -147,21 +147,25 @@ class NodeSimulator:
     def simulate_fleet(
         self, traces: list[InvocationTrace], seeds: list[int] | None = None
     ) -> list[SimResult]:
-        """Simulate a fleet of nodes with one vectorized true-power pass.
+        """Simulate a fleet of nodes with one vectorized measurement pass.
 
-        Activity scatter and the dynamic-power contractions run batched over
-        all B nodes; only the (cheap, rng-dependent) sensor front-ends run
-        per node.  Traces must share ``num_fns``; durations may differ (a
+        Activity scatter, the dynamic-power contractions, *and* the sensor
+        front-ends run batched over all B nodes: one ``sense_fleet`` call
+        per sensor kind (one noise block draw per node, from its spawned
+        child RNG) and one ``resample_fleet`` call per kind — node ``i``'s
+        telemetry is bitwise what a per-node ``simulate`` with the same seed
+        produces.  Traces must share ``num_fns``; durations may differ (a
         *ragged* fleet — nodes joining/leaving at different times): the
-        batched truth pass runs on the longest node's fine grid and each
-        node's sensing covers exactly its own ``duration``, so every
-        ``SimResult`` has that node's own window count."""
+        batched passes run padded to the longest node and each node's
+        results cover exactly its own ``duration``, so every ``SimResult``
+        has that node's own window count."""
         if not traces:
             return []
         m0 = traces[0].num_fns
         if any(t.num_fns != m0 for t in traces):
             raise ValueError("simulate_fleet needs traces with equal num_fns")
         cfg = self.config
+        b = len(traces)
         num_bins = int(round(max(t.duration for t in traces) / cfg.dt))
         act = _fleet_activity(traces, num_bins, cfg.dt)          # (B, T_max, M)
         p_dyn = np.einsum("btm,m->bt", act, self.model.dyn_power_w)
@@ -170,14 +174,54 @@ class NodeSimulator:
             # Distinct per-node default seeds: a shared cfg.seed would give
             # every node the identical sensor-noise realization, silently
             # correlating fleet-wide error statistics.
-            seeds = [cfg.seed + i for i in range(len(traces))]
+            seeds = [cfg.seed + i for i in range(b)]
+
+        # Per-node physical truth, stacked zero-padded for the batched
+        # sensors (the chain is causal and `sense_fleet` clamps decimation at
+        # each node's own length, so padding never reaches a valid sample).
+        bins = np.array([int(round(t.duration / cfg.dt)) for t in traces])
+        n_wins = [int(round(t.duration / cfg.delta)) for t in traces]
+        truths = []
+        true_sys_pad = np.zeros((b, num_bins))
+        true_chip_pad = np.zeros((b, num_bins))
+        for i, t in enumerate(traces):
+            truth = self._node_truth(
+                t, act[i, : bins[i]], p_dyn[i, : bins[i]], p_cpu[i, : bins[i]]
+            )
+            truths.append(truth)
+            true_sys_pad[i, : bins[i]] = truth[2]
+            true_chip_pad[i, : bins[i]] = truth[3]
+
+        children = [np.random.default_rng(s).spawn(2) for s in seeds]
+        sys_fs = src.sense_fleet(
+            true_sys_pad, cfg.dt, self.system_sensor,
+            rngs=[c[0] for c in children], lengths=bins,
+        )
+        chip_fs = (
+            src.sense_fleet(
+                true_chip_pad, cfg.dt, self.chip_sensor,
+                rngs=[c[1] for c in children], lengths=bins,
+            )
+            if self.chip_sensor
+            else None
+        )
+        w_sys_all = src.resample_fleet(sys_fs, max(n_wins), cfg.delta)
+        w_chip_all = (
+            src.resample_fleet(chip_fs, max(n_wins), cfg.delta)
+            if chip_fs is not None
+            else None
+        )
+
         out = []
         for i, t in enumerate(traces):
-            bins_i = int(round(t.duration / cfg.dt))
+            chip_sig = chip_fs.node(i) if chip_fs is not None else None
+            w_chip = w_chip_all[i, : n_wins[i]] if w_chip_all is not None else None
             out.append(
                 self._finish(
-                    t, act[i, :bins_i], seed=seeds[i],
-                    p_dyn=p_dyn[i, :bins_i], p_cpu=p_cpu[i, :bins_i],
+                    t, act[i, : bins[i]], seed=seeds[i],
+                    truth=truths[i],
+                    sensed=(sys_fs.node(i), chip_sig),
+                    windows=(w_sys_all[i, : n_wins[i]], w_chip),
                 )
             )
         return out
@@ -227,23 +271,41 @@ class NodeSimulator:
         seed: int | None,
         p_dyn: np.ndarray | None = None,
         p_cpu: np.ndarray | None = None,
+        truth: tuple | None = None,
+        sensed: tuple | None = None,
+        windows: tuple | None = None,
     ) -> SimResult:
         cfg = self.config
-        rng = np.random.default_rng(cfg.seed if seed is None else seed)
         dt = cfg.dt
         n_windows = int(round(trace.duration / cfg.delta))
 
-        cp_power, p_dyn, true_sys, true_chip = self._node_truth(trace, act, p_dyn, p_cpu)
+        if truth is None:
+            truth = self._node_truth(trace, act, p_dyn, p_cpu)
+        cp_power, p_dyn, true_sys, true_chip = truth
 
-        sys_sig = src.sense(true_sys, dt, self.system_sensor, rng)
-        chip_sig = src.sense(true_chip, dt, self.chip_sensor, rng) if self.chip_sensor else None
+        if sensed is None:
+            # One spawned child RNG per sensor (system first, chip second) —
+            # the same layout as the streaming path, so batch and streaming
+            # telemetry are bitwise-identical under matched seeds.
+            children = np.random.default_rng(cfg.seed if seed is None else seed).spawn(2)
+            sys_sig = src.sense(true_sys, dt, self.system_sensor, children[0])
+            chip_sig = (
+                src.sense(true_chip, dt, self.chip_sensor, children[1])
+                if self.chip_sensor
+                else None
+            )
+        else:
+            sys_sig, chip_sig = sensed
 
-        w_sys = src.resample_to_windows(sys_sig, n_windows, cfg.delta)
-        w_chip = (
-            src.resample_to_windows(chip_sig, n_windows, cfg.delta)
-            if chip_sig is not None
-            else None
-        )
+        if windows is None:
+            w_sys = src.resample_to_windows(sys_sig, n_windows, cfg.delta)
+            w_chip = (
+                src.resample_to_windows(chip_sig, n_windows, cfg.delta)
+                if chip_sig is not None
+                else None
+            )
+        else:
+            w_sys, w_chip = windows
 
         cp_frac, sys_frac = self._frac_windows(act, cp_power, n_windows)
 
@@ -285,28 +347,30 @@ class NodeSimulator:
         """Drive the sensor front-ends *live*: yield telemetry window by window.
 
         The physical truth (activity, true power) is still computed in one
-        vectorized pass — it is the measurement path that streams: every
-        node's system/chip sensor is a ``StreamingSensor`` fed one window's
-        worth of the fine grid per iteration, its samples folded into a
-        ``StreamingWindowResampler``, and a ``FleetTelemetryTick`` is yielded
-        as soon as *all* nodes have closed window ``t`` on every signal
-        (slow/laggy sensors close windows late, so yields can lag pushes and
-        arrive in bursts — exactly like a real collection pipeline).
+        vectorized pass — it is the measurement path that streams, and it
+        streams *batched*: the whole fleet shares one ``FleetStreamingSensor``
+        per sensor kind, fed one window's worth of the (B, T) fine grid per
+        iteration, its samples folded into one ``FleetWindowResampler``; a
+        ``FleetTelemetryTick`` is yielded as soon as the fleet has closed
+        window ``t`` on every signal (slow/laggy sensors close windows late,
+        so yields can lag pushes and arrive in bursts — exactly like a real
+        collection pipeline).
 
-        RNG note: each sensor owns a child RNG spawned from the node seed, so
-        noise realizations differ from ``simulate_fleet`` (same pathology
-        model; per-sensor stream == batch equality is pinned separately in
-        tests).  Traces must share ``num_fns``; durations may differ (a
-        ragged fleet): each node's sensors stream for exactly its own
-        windows, a node's resampler flushes the moment its stream ends, and
-        once a node has ended the yielded ticks carry ``valid[i] = False``
-        with zeros in its value slots while the live nodes keep streaming.
+        RNG note: each sensor owns a child RNG spawned from the node seed
+        (``np.random.default_rng(seed).spawn(2)``, system then chip) — the
+        same layout as ``simulate_fleet``, so the two paths emit
+        bitwise-identical telemetry on every valid tick entry.  Traces must
+        share ``num_fns``; durations may differ (a ragged fleet): the shared
+        sample clock keeps running past a node's end, its padding samples
+        land strictly after its own last window edge, and once a node has
+        ended the yielded ticks carry ``valid[i] = False`` with zeros in its
+        value slots while the live nodes keep streaming.
 
         Yields:
           ``FleetTelemetryTick`` with (B,) arrays per window, for every
           window index 0..max(N_i)-1 in order.
         """
-        from repro.telemetry.sources import StreamingSensor, StreamingWindowResampler
+        from repro.telemetry.sources import FleetStreamingSensor, FleetWindowResampler
 
         if not traces:
             return
@@ -317,6 +381,7 @@ class NodeSimulator:
         b = len(traces)
         bins_per_win = int(round(cfg.delta / cfg.dt))
         n_list = [int(round(t.duration / cfg.delta)) for t in traces]
+        n_arr = np.asarray(n_list)
         n_max = max(n_list)
         num_bins = int(round(max(t.duration for t in traces) / cfg.dt))
         act = _fleet_activity(traces, num_bins, cfg.dt)
@@ -325,55 +390,48 @@ class NodeSimulator:
         if seeds is None:
             seeds = [cfg.seed + i for i in range(b)]
 
-        true_sys, true_chip, cp_fracs, sys_fracs = [], [], [], []
+        true_sys = np.zeros((b, num_bins))
+        true_chip = np.zeros((b, num_bins))
+        cp_fracs, sys_fracs = [], []
         for i, trace in enumerate(traces):
             bins_i = int(round(trace.duration / cfg.dt))
             cp_power, _, t_sys, t_chip = self._node_truth(
                 trace, act[i, :bins_i], p_dyn[i, :bins_i], p_cpu[i, :bins_i]
             )
-            true_sys.append(t_sys)
-            true_chip.append(t_chip)
+            true_sys[i, :bins_i] = t_sys
+            true_chip[i, :bins_i] = t_chip
             cp_f, sys_f = self._frac_windows(act[i, :bins_i], cp_power, n_list[i])
             cp_fracs.append(cp_f)
             sys_fracs.append(sys_f)
 
         has_chip = self.chip_sensor is not None
-        sys_sensors, chip_sensors = [], []
-        sys_rs = [StreamingWindowResampler(cfg.delta) for _ in range(b)]
-        chip_rs = [StreamingWindowResampler(cfg.delta) for _ in range(b)] if has_chip else None
-        for i in range(b):
-            children = np.random.default_rng(seeds[i]).spawn(2)
-            sys_sensors.append(StreamingSensor(self.system_sensor, cfg.dt, children[0]))
-            if has_chip:
-                chip_sensors.append(StreamingSensor(self.chip_sensor, cfg.dt, children[1]))
+        children = [np.random.default_rng(s).spawn(2) for s in seeds]
+        sys_sensor = FleetStreamingSensor(
+            self.system_sensor, cfg.dt, [c[0] for c in children]
+        )
+        chip_sensor = (
+            FleetStreamingSensor(self.chip_sensor, cfg.dt, [c[1] for c in children])
+            if has_chip
+            else None
+        )
+        sys_rs = FleetWindowResampler(cfg.delta, b)
+        chip_rs = FleetWindowResampler(cfg.delta, b) if has_chip else None
 
-        pending_sys: list[list[float]] = [[] for _ in range(b)]
-        pending_chip: list[list[float]] = [[] for _ in range(b)]
+        # Closed windows arrive fleet-synchronized (one shared sample clock),
+        # so pending work is a queue of (B,) columns per signal.
+        pending_sys: list[np.ndarray] = []
+        pending_chip: list[np.ndarray] = []
         emitted = 0
-
-        def _ready(pending: list[list[float]]) -> bool:
-            # A window can ship once every node still alive at it has closed
-            # it; ended nodes are never waited on.
-            return all(
-                n_list[i] <= emitted or len(pending[i]) > 0 for i in range(b)
-            )
-
-        def _take(pending: list[list[float]], live: np.ndarray) -> np.ndarray:
-            return np.asarray(
-                [pending[i].pop(0) if live[i] else 0.0 for i in range(b)]
-            )
 
         def _drain() -> Iterator[FleetTelemetryTick]:
             nonlocal emitted
-            while emitted < n_max and _ready(pending_sys) and (
-                not has_chip or _ready(pending_chip)
-            ):
+            while emitted < n_max and pending_sys and (not has_chip or pending_chip):
                 t = emitted
-                live = np.asarray([t < n_list[i] for i in range(b)])
+                live = t < n_arr
                 yield FleetTelemetryTick(
                     t=t,
-                    w_sys=_take(pending_sys, live),
-                    w_chip=_take(pending_chip, live) if has_chip else None,
+                    w_sys=np.where(live, pending_sys.pop(0), 0.0),
+                    w_chip=np.where(live, pending_chip.pop(0), 0.0) if has_chip else None,
                     cp_frac=np.asarray(
                         [cp_fracs[i][t] if live[i] else 0.0 for i in range(b)]
                     ),
@@ -386,21 +444,17 @@ class NodeSimulator:
 
         for w in range(n_max):
             lo, hi = w * bins_per_win, (w + 1) * bins_per_win
-            for i in range(b):
-                if w >= n_list[i]:
-                    continue
-                sig = sys_sensors[i].push(true_sys[i][lo:hi])
-                pending_sys[i].extend(sys_rs[i].push(sig.times, sig.watts))
-                if has_chip:
-                    sig = chip_sensors[i].push(true_chip[i][lo:hi])
-                    pending_chip[i].extend(chip_rs[i].push(sig.times, sig.watts))
-                if w == n_list[i] - 1:
-                    # This node's stream just ended: flush its tail windows
-                    # now so the fleet never stalls waiting on a dead node.
-                    pending_sys[i].extend(sys_rs[i].flush(n_list[i]))
-                    if has_chip:
-                        pending_chip[i].extend(chip_rs[i].flush(n_list[i]))
+            sig = sys_sensor.push(true_sys[:, lo:hi])
+            pending_sys.extend(sys_rs.push(sig.times, sig.watts).T)
+            if has_chip:
+                sig = chip_sensor.push(true_chip[:, lo:hi])
+                pending_chip.extend(chip_rs.push(sig.times, sig.watts).T)
             yield from _drain()
+        # End of the fleet stream: close every window still open (lag and
+        # slow sensors leave a tail that no future sample will close).
+        pending_sys.extend(sys_rs.flush(n_max).T)
+        if has_chip:
+            pending_chip.extend(chip_rs.flush(n_max).T)
         yield from _drain()
 
     def marginal_energy(

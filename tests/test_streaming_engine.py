@@ -314,6 +314,20 @@ def test_stream_fleet_yields_ordered_windows():
         assert tk.w_sys.shape == (2,) and np.all(tk.w_sys > 0)
         assert tk.w_chip is not None and tk.w_chip.shape == (2,)
         assert tk.cp_frac.shape == (2,) and tk.sys_frac.shape == (2,)
+    # The streaming measurement path is bitwise the batch path: both spawn
+    # the same per-sensor child RNGs and the fleet resampler reproduces the
+    # batch cumulative-sum float for float, so the tick stream must equal
+    # simulate_fleet's telemetry EXACTLY, noise included.
+    sims = sim.simulate_fleet(traces, seeds=[5, 6])
+    w_sys = np.stack([np.asarray(tk.w_sys) for tk in ticks], axis=1)
+    w_chip = np.stack([np.asarray(tk.w_chip) for tk in ticks], axis=1)
+    for i, s in enumerate(sims):
+        np.testing.assert_array_equal(
+            w_sys[i].astype(np.float32), np.asarray(s.telemetry.system_power)
+        )
+        np.testing.assert_array_equal(
+            w_chip[i].astype(np.float32), np.asarray(s.telemetry.chip_power)
+        )
 
 
 # ---------------------------------------------------------------------------
