@@ -1,0 +1,110 @@
+"""Closed-loop energy control at trace scale (paper §5 + §4.3, ISSUE 7).
+
+One causal control round over the streaming fleet replay
+(``profile_fleet(control=ControlLoop(...))``), then the reshaped
+``controlled_traces()`` are re-simulated to measure what the control did:
+
+- ``overshoot_uncontrolled`` / ``overshoot_controlled``: fraction of 1 s
+  windows above the cap before/after admission control (the paper's Fig. 10
+  comparison at fleet scale; controlled must land below uncontrolled);
+- ``mean_queue_wait_s`` / ``max_queue_wait_s`` / ``makespan_stretch``:
+  the deferred-work latency cost of holding the cap;
+- ``retrain_*``: mid-stream chip drift -> ``retrain_needed`` -> fleet-batched
+  sliding-window refit -> counter-model error recovery (err_peak is the
+  drift's damage, err_post the recovered level vs the 0.05 threshold);
+- ``control_wall_s``: wall-clock of the controlled replay (loop overhead
+  rides the streaming engine's tick path).
+
+``smoke`` is a tiny CI shape; ``quick`` a moderate fleet; full is the
+Azure-scale acceptance shape (>= 1e5 invocations).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import PROFILER_CONFIG
+from repro.serving.control_plane import (
+    ControlConfig,
+    ControlLoop,
+    EnergyFirstControlPlane,
+)
+from repro.telemetry.simulator import SimulatorConfig, chip_drift_transform
+from repro.workload.azure import WorkloadConfig, fleet_traces
+from repro.workload.functions import paper_functions
+
+
+def _replay(duration, load, nodes, seed, *, tick_transform=None):
+    reg = paper_functions()
+    traces = fleet_traces(
+        reg, WorkloadConfig(duration_s=duration, load=load, seed=seed), nodes
+    )
+    cp = EnergyFirstControlPlane(
+        reg, SimulatorConfig(platform="server", seed=0), PROFILER_CONFIG
+    )
+    sims = cp.simulator.simulate_fleet(traces, None)
+    w = np.stack([np.asarray(s.telemetry.system_power) for s in sims])
+    cap = float(np.quantile(w, 0.90))
+    loop = ControlLoop(ControlConfig(cap_watts=cap))
+    t0 = time.perf_counter()
+    cp.profile_fleet(
+        traces, mode="combined", mesh=None, control=loop,
+        tick_transform=tick_transform,
+    )
+    wall = time.perf_counter() - t0
+    return cp, traces, w, cap, loop, wall
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Closed-loop capping + retrain recovery on an Azure-style fleet replay.
+
+    ``smoke`` runs a tiny 2-node shape for the CI rot gate; ``quick`` a
+    3-node moderate-load fleet; full the 4-node >= 1e5-invocation
+    acceptance shape."""
+    if smoke:
+        duration, load, nodes = 150.0, 3.0, 2
+    elif quick:
+        duration, load, nodes = 300.0, 8.0, 3
+    else:
+        duration, load, nodes = 420.0, 45.0, 4
+
+    cp, traces, w, cap, loop, wall = _replay(duration, load, nodes, seed=7)
+    ct = loop.controlled_traces()
+    wc = np.stack(
+        [np.asarray(s.telemetry.system_power)
+         for s in cp.simulator.simulate_fleet(ct, None)]
+    )
+    summ = loop.summary()
+
+    # Retrain recovery: drift the chip sensor mid-stream on a small replay.
+    # Drift lands at tick 120 — after two clean Kalman steps, with enough
+    # stream left for the refit to show recovery in err_post.
+    _, _, _, _, dloop, _ = _replay(
+        240.0 if smoke else 300.0, 3.0 if smoke else 4.0, 2, seed=11,
+        tick_transform=chip_drift_transform(1.4, 120.0),
+    )
+    errs = np.stack(dloop.session.model_errors)
+
+    return {
+        "fleet_shape": f"B{nodes} x {duration:.0f}s @ load {load:g}",
+        "invocations": sum(int((t.fn_id >= 0).sum()) for t in traces),
+        "cap_watts": cap,
+        "overshoot_uncontrolled": float(np.mean(w > cap)),
+        "overshoot_controlled": float(np.mean(wc > cap)),
+        "deferred_by_cap": summ["deferred_by_cap"],
+        "mean_queue_wait_s": summ["mean_queue_wait_s"],
+        "max_queue_wait_s": summ["max_queue_wait_s"],
+        "makespan_stretch": float(ct[0].duration) / duration,
+        "retrain_events": len(dloop.retrain_events),
+        "retrain_err_pre": float(errs[0].max()),
+        "retrain_err_peak": float(errs.max()),
+        "retrain_err_post": float(errs[-1].max()),
+        "control_wall_s": wall,
+    }
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k:24s} {v:.4g}" if isinstance(v, float) else f"{k:24s} {v}")

@@ -35,6 +35,7 @@ MODULES = [
     ("ragged_fleet", "Perf: ragged-fleet padding overhead vs rag ratio"),
     ("combined_fleet", "Perf: combined-mode (§4.3) chip/rest split overhead"),
     ("ingest_pipeline", "Perf: telemetry ingest — batched front-end + prefetch overlap"),
+    ("control_loop", "Closed-loop control: cap overshoot, deferral cost, retrain recovery"),
     ("kernel_bench", "Perf: kernel path"),
 ]
 

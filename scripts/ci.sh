@@ -35,13 +35,17 @@ SURFACES = (
     "repro.core.batched_engine",
     "repro.core.profiler",
     "repro.core.cpu_model",
+    "repro.core.capping",
+    "repro.core.pricing",
     "repro.telemetry.counters",
     "repro.telemetry.sources",
     "repro.serving.control_plane",
+    "repro.serving.scheduler",
     "repro.distributed.sharding",
     "benchmarks.ragged_fleet",
     "benchmarks.combined_fleet",
     "benchmarks.ingest_pipeline",
+    "benchmarks.control_loop",
 )
 for mod_name in SURFACES:
     mod = importlib.import_module(mod_name)
@@ -80,10 +84,11 @@ if missing:
 print(f"benchmark smoke OK ({len(results)} modules, strict well-formed JSON)")
 EOF
 
-echo "== sharded + ragged + combined fleet + telemetry front-end pins (forced 8-device host mesh, own subprocess) =="
+echo "== sharded + ragged + combined fleet + telemetry front-end + control-loop pins (forced 8-device host mesh, own subprocess) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m pytest -q tests/test_sharded_fleet.py tests/test_ragged_fleet.py \
-  tests/test_combined_fleet.py tests/test_telemetry_frontend.py
+  tests/test_combined_fleet.py tests/test_telemetry_frontend.py \
+  tests/test_control_loop.py -m "not slow"
 
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"

@@ -85,6 +85,40 @@ class PowerCapController:
         else:
             self._guard = max(self._guard - self.config.guard_decay, self.config.guard_band)
 
+    @property
+    def headroom_watts(self) -> float:
+        """Admission headroom under the guarded cap at the current power
+        sample (negative when already over it); +inf when uncapped."""
+        if self.config.power_cap_watts == float("inf"):
+            return float("inf")
+        return self.config.power_cap_watts * (1.0 - self._guard) - self._current_power
+
+    def _decision(
+        self, footprint_joules: float | None, duration_s: float | None
+    ) -> tuple[bool, float | None]:
+        """The admission predicate, shared by ``admit`` and ``would_admit``:
+        ``(ok, j_interval)`` where j_interval is the optimistic energy charge
+        (None on the static-buffer fallback and the uncapped case)."""
+        if self.config.power_cap_watts == float("inf"):
+            return True, None
+        cap = self.config.power_cap_watts * (1.0 - self._guard)
+        t = self.config.control_interval_s
+        w = self._current_power
+        if self.config.use_footprints and footprint_joules is not None:
+            j_interval = footprint_joules
+            if duration_s is not None and duration_s > t:
+                j_interval = footprint_joules * t / duration_s
+            return w * t + j_interval <= cap * t, j_interval
+        return w + self.config.static_buffer_watts < cap, None
+
+    def would_admit(
+        self, footprint_joules: float | None, duration_s: float | None = None
+    ) -> bool:
+        """Pure admission probe: the same rule as ``admit`` with *no* side
+        effects — no stats, no optimistic power accounting.  Placement uses
+        it to test candidate nodes without charging the losers."""
+        return self._decision(footprint_joules, duration_s)[0]
+
     def admit(self, footprint_joules: float | None, duration_s: float | None = None) -> bool:
         """Head-of-queue admission decision (paper: W*t + J_lambda <= W_cap*t).
 
@@ -99,27 +133,68 @@ class PowerCapController:
             t = 1 s, where the distinction is negligible).
         """
         self.stats.decisions += 1
-        cap = self.config.power_cap_watts * (1.0 - self._guard)
-        t = self.config.control_interval_s
-        w = self._current_power
-        if self.config.power_cap_watts == float("inf"):
-            self.stats.admitted += 1
-            return True
-        if self.config.use_footprints and footprint_joules is not None:
-            j_interval = footprint_joules
-            if duration_s is not None and duration_s > t:
-                j_interval = footprint_joules * t / duration_s
-            ok = w * t + j_interval <= cap * t
-        else:
-            j_interval = None
-            ok = w + self.config.static_buffer_watts < cap
+        ok, j_interval = self._decision(footprint_joules, duration_s)
         if ok:
             self.stats.admitted += 1
             # Optimistically account for the admitted function's power so a
             # burst of admissions within one control interval can't blow
             # through the cap before the next power sample arrives.
             if j_interval is not None:
-                self._current_power += j_interval / t
+                self._current_power += j_interval / self.config.control_interval_s
         else:
             self.stats.deferred += 1
         return ok
+
+
+class FleetPowerCapController:
+    """B per-node ``PowerCapController``s behind one fleet-shaped facade.
+
+    The streaming control loop observes a (B,) power vector per tick and
+    admits invocations onto individual nodes; this facade keeps each node's
+    AIMD guard band and overshoot bookkeeping independent (a noisy node must
+    not widen a quiet node's guard) while exposing fleet-level aggregates.
+    """
+
+    def __init__(self, config: CappingConfig, num_nodes: int):
+        self.config = config
+        self.nodes = [PowerCapController(config) for _ in range(num_nodes)]
+
+    def observe_power(self, watts, valid=None) -> None:
+        """Feed one (B,) fleet power sample; ``valid`` (B,) bool masks nodes
+        whose stream has ended (ragged fleets) out of the statistics."""
+        for i, ctl in enumerate(self.nodes):
+            if valid is None or valid[i]:
+                ctl.observe_power(float(watts[i]))
+
+    def headroom_watts(self):
+        """(B,) guarded-cap headroom per node (placement sort key)."""
+        import numpy as np
+
+        return np.asarray([ctl.headroom_watts for ctl in self.nodes])
+
+    def would_admit(
+        self, node: int, footprint_joules: float | None, duration_s: float | None = None
+    ) -> bool:
+        """Pure per-node admission probe (no stats, no power charge)."""
+        return self.nodes[node].would_admit(footprint_joules, duration_s)
+
+    def admit(
+        self, node: int, footprint_joules: float | None, duration_s: float | None = None
+    ) -> bool:
+        """Admit onto ``node`` (stats + optimistic accounting on that node)."""
+        return self.nodes[node].admit(footprint_joules, duration_s)
+
+    @property
+    def stats(self) -> CapStats:
+        """Fleet-aggregate ``CapStats`` (sums over nodes; max of maxes)."""
+        agg = CapStats()
+        for ctl in self.nodes:
+            s = ctl.stats
+            agg.decisions += s.decisions
+            agg.admitted += s.admitted
+            agg.deferred += s.deferred
+            agg.overshoot_samples += s.overshoot_samples
+            agg.power_samples += s.power_samples
+            agg.sum_overshoot_frac += s.sum_overshoot_frac
+            agg.max_overshoot_frac = max(agg.max_overshoot_frac, s.max_overshoot_frac)
+        return agg

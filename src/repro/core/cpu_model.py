@@ -83,40 +83,80 @@ def model_row(model: LinearPowerModel, i: int) -> LinearPowerModel:
     return LinearPowerModel(weights=model.weights[i], bias=model.bias[i])
 
 
-def _fit_ridge_one(features: Array, power: Array, lam) -> LinearPowerModel:
+def _fit_ridge_one(features: Array, power: Array, lam, mask=None) -> LinearPowerModel:
     # Standardize (as fit_linear_svr already did): the counter features span
     # ~3 orders of magnitude, and the raw-space normal equations are
     # ill-conditioned in float32.  The ridge penalty applies to the
-    # standardized weights, so lam is scale-free.
-    x_mean = jnp.mean(features, axis=0)
-    x_std = jnp.maximum(jnp.std(features, axis=0), 1e-8)
-    xs = (features - x_mean) / x_std
+    # standardized weights, so lam is scale-free.  ``mask`` (N,) weights the
+    # solve (ragged sliding windows: dead windows carry weight 0); the
+    # moments and normal equations become mask-weighted, and an all-masked
+    # input degenerates to the zero-weights / zero-bias model instead of a
+    # singular solve.
     n, f = features.shape
+    if mask is None:
+        m = jnp.ones((n,), features.dtype)
+    else:
+        m = mask.astype(features.dtype)
+    msum = jnp.maximum(jnp.sum(m), 1e-9)
+    x_mean = jnp.sum(features * m[:, None], axis=0) / msum
+    x_var = jnp.sum((features - x_mean) ** 2 * m[:, None], axis=0) / msum
+    x_std = jnp.maximum(jnp.sqrt(x_var), 1e-8)
+    xs = (features - x_mean) / x_std
     ones = jnp.ones((n, 1), features.dtype)
     xb = jnp.concatenate([xs, ones], axis=1)
     reg = lam * jnp.eye(f + 1, dtype=features.dtype)
-    reg = reg.at[f, f].set(0.0)  # don't penalize the bias
-    theta = jnp.linalg.solve(xb.T @ xb + reg, xb.T @ power)
+    # Don't penalize the bias — except, under a mask, by a vanishing epsilon
+    # that keeps the gram invertible when every sample is masked out (the
+    # unmasked path stays bit-identical to the pre-mask solve).
+    reg = reg.at[f, f].set(0.0 if mask is None else 1e-9)
+    theta = jnp.linalg.solve(
+        (xb * m[:, None]).T @ xb + reg, (xb * m[:, None]).T @ power
+    )
     w = theta[:f] / x_std
     b = theta[f] - jnp.sum(theta[:f] * x_mean / x_std)
     return LinearPowerModel(weights=w, bias=b)
 
 
 @jax.jit
-def fit_ridge(features: Array, power: Array, lam: float = 1e-4) -> LinearPowerModel:
+def fit_ridge(
+    features: Array, power: Array, lam: float = 1e-4, *, mask: Array | None = None
+) -> LinearPowerModel:
     """Closed-form ridge fit of power ~ features (standardized solve).
 
     Args:
       features: (N, F) system-interval counter vectors, or (B, N, F) for a
         fleet — one independent model is fit per node, vmapped.
       power: (N,) observed chip power (watts), or (B, N).
+      mask: optional (N,)/(B, N) sample weights — the streaming refit passes
+        each node's live-window mask so a ragged fleet's dead (zero-padded)
+        windows don't drag the fit (mask-weighted moments + normal
+        equations).
 
     Returns:
       ``LinearPowerModel`` with (F,)/() leaves, or (B, F)/(B,) when batched.
     """
     if features.ndim == 3:
-        return jax.vmap(_fit_ridge_one, in_axes=(0, 0, None))(features, power, lam)
-    return _fit_ridge_one(features, power, lam)
+        return jax.vmap(_fit_ridge_one, in_axes=(0, 0, None, None if mask is None else 0))(
+            features, power, lam, mask
+        )
+    return _fit_ridge_one(features, power, lam, mask)
+
+
+def merge_models(
+    old: LinearPowerModel, new: LinearPowerModel, flags: Array
+) -> LinearPowerModel:
+    """Row-wise swap of fleet-batched models: nodes with ``flags`` take
+    ``new``'s (weights, bias), the rest keep ``old``'s.
+
+    This is the streaming retrain swap: model parameters are *data* to the
+    jitted engine/predictor calls, so replacing rows triggers no retrace —
+    the next ``predict_*`` simply contracts against the new weights.
+    """
+    f = jnp.asarray(flags)
+    return LinearPowerModel(
+        weights=jnp.where(f[:, None], new.weights, old.weights),
+        bias=jnp.where(f, new.bias, old.bias),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("iters",))

@@ -21,6 +21,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -75,3 +76,64 @@ def price_report(
             latency_s, mem_gb, config.usd_per_gb_second
         ),
     }
+
+
+class LivePriceMeter:
+    """Running per-function bill, accumulated tick-by-tick (§4.4, §6.2).
+
+    The batch path prices a *finished* segment (``price_report`` over the
+    footprint spectrum); this meter is its streaming twin — the control
+    loop folds every conserved engine tick (attributed watts x tick
+    seconds, invocation starts) into per-function joules, so the bill is
+    always current during the segment.  Idle energy is accrued
+    continuously and shared evenly over the functions seen so far (the
+    same static-resource policy as
+    ``StreamingFootprintTracker.per_invocation_total``), which keeps the
+    conservation property exact at every instant:
+
+        sum_f (j_indiv_f + idle_share_f)  ==  sum_f j_indiv_f + idle_watts * elapsed
+    """
+
+    def __init__(self, num_fns: int, config: PricingConfig = PricingConfig()):
+        self.num_fns = num_fns
+        self.config = config
+        self.j_indiv = np.zeros(num_fns)      # cumulative attributed joules
+        self.invocations = np.zeros(num_fns)  # cumulative invocation starts
+        self.idle_joules = 0.0
+        self.elapsed_s = 0.0
+        self.ticks_seen = 0
+
+    def observe_tick(
+        self,
+        tick_power: np.ndarray,   # (M+,) attributed watts for the tick
+        a_tick: np.ndarray,       # (M+,) invocations starting in the tick
+        tick_seconds: float,
+        idle_watts: float = 0.0,
+    ) -> None:
+        """Fold one conserved engine tick into the running bill; entries
+        past ``num_fns`` (shared principals) are ignored."""
+        self.j_indiv += np.asarray(tick_power[: self.num_fns], float) * tick_seconds
+        self.invocations += np.asarray(a_tick[: self.num_fns], float)
+        self.idle_joules += idle_watts * tick_seconds
+        self.elapsed_s += tick_seconds
+        self.ticks_seen += 1
+
+    @property
+    def j_total(self) -> np.ndarray:
+        """(M,) total joules: attributed + even idle share over the
+        functions invoked so far (zero for never-invoked functions)."""
+        active = self.invocations > 0
+        n_active = max(int(active.sum()), 1)
+        return self.j_indiv + np.where(active, self.idle_joules / n_active, 0.0)
+
+    def report(self, latency_s, mem_gb) -> dict:
+        """Current per-invocation price table — ``price_report`` over the
+        running totals (same spectrum, live numbers)."""
+        return price_report(
+            jnp.asarray(self.j_indiv, jnp.float32),
+            jnp.asarray(self.j_total, jnp.float32),
+            jnp.asarray(self.invocations, jnp.float32),
+            jnp.asarray(latency_s, jnp.float32),
+            jnp.asarray(mem_gb, jnp.float32),
+            self.config,
+        )

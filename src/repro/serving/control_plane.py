@@ -27,8 +27,12 @@ from collections import deque
 
 import numpy as np
 
-from repro.core.capping import CappingConfig, PowerCapController
-from repro.core.pricing import PricingConfig, price_report
+from repro.core.capping import (
+    CappingConfig,
+    FleetPowerCapController,
+    PowerCapController,
+)
+from repro.core.pricing import LivePriceMeter, PricingConfig, price_report
 from repro.core.profiler import (
     FaasMeterProfiler,
     FootprintReport,
@@ -36,6 +40,11 @@ from repro.core.profiler import (
     fleet_profile,
     prepare_combined_fleet,
     segment_plan,
+)
+from repro.serving.scheduler import (
+    EnergyAwareScheduler,
+    Invocation,
+    SchedulerConfig,
 )
 from repro.telemetry.simulator import (
     FleetTelemetryTick,
@@ -145,6 +154,399 @@ class StreamingFootprintTracker:
         return np.where(active, total / np.maximum(self.invocations, 1.0), 0.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class ControlConfig:
+    """Knobs for the streaming ``ControlLoop``.
+
+    ``cap_watts`` is the per-node power cap (sensed system watts, same scale
+    as the telemetry the loop observes).  ``capping`` overrides the derived
+    ``CappingConfig`` wholesale when set.  ``placement=False`` pins every
+    invocation to its origin node (the no-migration baseline);
+    ``retrain``/``resync_every_steps`` gate the live model-maintenance side
+    (combined mode only).
+    """
+
+    cap_watts: float
+    use_footprints: bool = True
+    placement: bool = True
+    retrain: bool = True
+    retrain_window_steps: int = 2
+    resync_every_steps: int = 0
+    # End-of-segment drain packs deferred work to cap*(1 - drain_margin):
+    # footprints are estimates (and the host's power curve is sublinear in
+    # concurrency), so packing to the exact cap would park every drain
+    # window at the cap edge where estimate noise flips it over.
+    drain_margin: float = 0.1
+    pricing: PricingConfig = PricingConfig()
+    capping: CappingConfig | None = None
+
+
+class ControlLoop:
+    """Closed-loop energy control over the live streaming fleet replay.
+
+    This is the feedback layer that turns the profiler into a controller
+    (paper Fig. 1: energy as a first-class control operation).  Driven from
+    ``profile_fleet(control=...)``'s tick path, each conserved engine tick:
+
+    1. feeds every node's sensed power to a per-node
+       ``PowerCapController.observe_power`` (AIMD guard bands stay
+       node-local, ``core.capping.FleetPowerCapController``);
+    2. folds the tick's conserved attribution into a ``LivePriceMeter`` —
+       the per-function bill is always current during the segment;
+    3. submits the window's new arrivals to the ``EnergyAwareScheduler``
+       and drains it: the head of the queue is placed on the node with the
+       most cap headroom whose footprint-aware rule admits it
+       (``scheduler.energy_aware_placement``), using *live* tracker
+       footprints as J_lambda.  An invocation no node can take stays
+       queued — deferred — and re-starts at the window that finally admits
+       it, so capping visibly reshapes the trace;
+    4. at Kalman-step boundaries, runs the model-maintenance side: when the
+       session's ``retrain_needed`` fires, flagged nodes' counter models
+       are re-fit on a sliding window in one fleet-batched call and swapped
+       in without retracing (``session.refit_counter_models``); sync skew
+       is re-estimated every ``resync_every_steps`` steps
+       (``session.resync``).
+
+    The loop is causal: decisions at tick ``t`` use only telemetry and
+    footprints up to ``t``.  Telemetry was recorded from the *uncontrolled*
+    replay, so within the loop the observed power is the baseline's — one
+    control round against the live stream.  The controlled schedule's actual
+    effect is then measured by re-simulating ``controlled_traces()`` (the
+    reshaped per-node traces) through the same simulator; the paper's
+    overshoot comparison (and the conservation tests) run on that second
+    pass.  Arrivals inside the bootstrap init segment (no footprints yet)
+    and past the engine's last full Kalman step pass through uncontrolled —
+    the controller only reshapes what it could actually observe.
+    """
+
+    def __init__(self, config: ControlConfig):
+        self.config = config
+        self.session = None
+        self.fleet: FleetPowerCapController | None = None
+        self.meter: LivePriceMeter | None = None
+        self.scheduler: EnergyAwareScheduler | None = None
+        self.retrain_events: list[tuple[int, np.ndarray]] = []
+        self.resync_events: list[int] = []
+        self.drain_waits: list[float] = []
+        self.ticks_seen = 0
+        self._bound = False
+        self._finished = False
+
+    # -- wiring (called by profile_fleet) ----------------------------------
+
+    def bind(
+        self,
+        *,
+        traces: list[InvocationTrace],
+        registry: FunctionRegistry,
+        trackers: list,
+        idle_watts,
+        delta: float,
+        init_n: int,
+        n_used: int,
+    ) -> None:
+        """Attach the loop to one replay: precompute the fleet-wide arrival
+        stream, build the capped-fleet controller, the live price meter, and
+        the scheduler.  Arrivals before the init boundary are recorded into
+        the controlled schedule verbatim (the controller has no footprints
+        yet); everything from the init boundary to the engine's last tick is
+        subject to admission control."""
+        if self._bound:
+            raise ValueError("ControlLoop is single-use: already bound to a replay")
+        self._bound = True
+        cfg = self.config
+        self.registry = registry
+        self.trackers = trackers
+        self.delta = delta
+        self.init_n = init_n
+        self.n_used = n_used
+        self.b = len(traces)
+        self.num_fns = traces[0].num_fns
+        self.idle = np.asarray(idle_watts, float)
+        self.orig_duration = max(t.duration for t in traces)
+        capping = cfg.capping or CappingConfig(
+            power_cap_watts=cfg.cap_watts,
+            control_interval_s=delta,
+            use_footprints=cfg.use_footprints,
+        )
+        self.fleet = FleetPowerCapController(capping, self.b)
+        self.meter = LivePriceMeter(self.num_fns, cfg.pricing)
+        self.scheduler = EnergyAwareScheduler(
+            SchedulerConfig(capping=capping),
+            executor=lambda inv: inv.payload["dur"],
+            footprint_of=self._footprint_of,
+            mean_latency_of=lambda fn: self.registry[fn].mean_latency_s,
+        )
+        # Fleet-wide arrival stream, start-ordered (numpy, no Python loop
+        # over 1e5 invocations).
+        fns, starts, durs, nodes = [], [], [], []
+        for i, tr in enumerate(traces):
+            valid = tr.fn_id >= 0
+            fns.append(tr.fn_id[valid].astype(np.int64))
+            starts.append(tr.start[valid].astype(np.float64))
+            durs.append((tr.end - tr.start)[valid].astype(np.float64))
+            nodes.append(np.full(int(valid.sum()), i, np.int64))
+        fns = np.concatenate(fns) if fns else np.zeros(0, np.int64)
+        starts = np.concatenate(starts) if fns.size else np.zeros(0)
+        durs = np.concatenate(durs) if fns.size else np.zeros(0)
+        nodes = np.concatenate(nodes) if fns.size else np.zeros(0, np.int64)
+        order = np.argsort(starts, kind="stable")
+        self._arr_fn = fns[order]
+        self._arr_t = starts[order]
+        self._arr_dur = durs[order]
+        self._arr_node = nodes[order]
+        # Controlled schedule under construction: per node [(fn, start, dur)].
+        self._controlled: list[list[tuple[int, float, float]]] = [
+            [] for _ in range(self.b)
+        ]
+        # Power the loop itself moved into future windows: re-injected
+        # deferred (or migrated) invocations run where the observed baseline
+        # telemetry has no trace of them, so the controller must charge
+        # itself for them or it over-admits on top of its own shifted load.
+        # Entries are (node, end_t, nameplate watts).
+        self._shifted: list[tuple[int, float, float]] = []
+        self._nameplate = np.asarray(
+            [s.dyn_power_w for s in registry.specs], float
+        )
+        # Pass the init segment through verbatim.
+        init_end = init_n * delta
+        self._cursor = 0
+        while self._cursor < self._arr_t.size and self._arr_t[self._cursor] < init_end:
+            k = self._cursor
+            self._controlled[self._arr_node[k]].append(
+                (int(self._arr_fn[k]), float(self._arr_t[k]), float(self._arr_dur[k]))
+            )
+            self._cursor += 1
+
+    def attach_session(self, session) -> None:
+        """Give the loop the live ``StreamingFleetSession`` (retrain/resync
+        act on it); called by ``profile_fleet`` once the session exists."""
+        self.session = session
+
+    # -- live footprints ----------------------------------------------------
+
+    def _footprint_of(self, fn_name: str) -> float | None:
+        """Fleet-mean live per-invocation footprint J_lambda (J), or None
+        before any node has metered an invocation of this function."""
+        j = self.registry.index[fn_name]
+        vals = [
+            tr.per_invocation_indiv[j]
+            for tr in self.trackers
+            if tr is not None and tr.invocations[j] > 0
+        ]
+        return float(np.mean(vals)) if vals else None
+
+    # -- the tick hook -------------------------------------------------------
+
+    def on_tick(self, tk, trackers) -> None:
+        """One control round: observe -> bill -> admit/place -> maintain."""
+        if not self._bound:
+            raise ValueError("ControlLoop.on_tick before bind()")
+        cfg = self.config
+        self.ticks_seen += 1
+        now = tk.t * self.delta
+        live = tk.valid
+        # (1) capping observes each node's sensed power, plus the load the
+        # loop itself shifted into this window (deferred work re-injected
+        # later than the baseline ran it — invisible to the observed
+        # telemetry, so it is charged at nameplate on top).
+        self._shifted = [(n, e, p) for (n, e, p) in self._shifted if e > now]
+        shifted = np.zeros(self.b)
+        for n, _, p in self._shifted:
+            shifted[n] += p
+        self.fleet.observe_power(np.asarray(tk.w_sys, float) + shifted, valid=live)
+        # (2) pricing folds the conserved per-tick attribution in.
+        for i in range(self.b):
+            if live is None or live[i]:
+                self.meter.observe_tick(
+                    tk.tick_power[i], tk.a[i], self.delta, idle_watts=self.idle[i]
+                )
+        # (3) admission + placement for this window's arrivals.
+        wend = now + self.delta
+        names = self.registry.names
+        while self._cursor < self._arr_t.size and self._arr_t[self._cursor] < wend:
+            k = self._cursor
+            self.scheduler.submit(
+                Invocation(
+                    function=names[self._arr_fn[k]],
+                    arrival=float(self._arr_t[k]),
+                    payload={
+                        "node": int(self._arr_node[k]),
+                        "dur": float(self._arr_dur[k]),
+                        "fn": int(self._arr_fn[k]),
+                    },
+                )
+            )
+            self._cursor += 1
+        placed = self.scheduler.drain_fleet(
+            now, fleet=self.fleet, placement=cfg.placement, live=live
+        )
+        for inv, node in placed:
+            fn = inv.payload["fn"]
+            self._controlled[node].append(
+                (fn, float(inv.started_at), inv.payload["dur"])
+            )
+            # A deferred restart (or a migration) runs power the baseline
+            # telemetry never saw on this node: self-charge it.
+            if inv.started_at > inv.arrival + 1e-9 or node != inv.payload["node"]:
+                self._shifted.append(
+                    (
+                        node,
+                        float(inv.started_at) + inv.payload["dur"],
+                        float(self._nameplate[fn]),
+                    )
+                )
+        # (4) model maintenance at step boundaries.
+        if tk.step_completed and self.session is not None:
+            if cfg.retrain and bool(self.session.retrain_needed.any()):
+                flags = self.session.refit_counter_models(
+                    self.session.retrain_needed,
+                    window_steps=cfg.retrain_window_steps,
+                )
+                if flags.any():
+                    self.retrain_events.append((tk.t, flags))
+            if cfg.resync_every_steps:
+                steps = len(self.session.model_errors) or (
+                    (tk.t + 1 - self.init_n) // self.session.cfg.step_windows
+                )
+                if steps and steps % cfg.resync_every_steps == 0:
+                    self.session.resync()
+                    self.resync_events.append(tk.t)
+
+    # -- completion ----------------------------------------------------------
+
+    def finish(self) -> None:
+        """Close the loop after the replay: pass the post-engine tail
+        through verbatim, then drain the still-deferred queue past the
+        segment end with footprint-aware packing — windows are filled up to
+        the cap using each invocation's predicted power (J_lambda / tau),
+        advancing one control window at a time, so the deferred work lands
+        as a cap-respecting tail instead of one spike."""
+        if self._finished:
+            return
+        self._finished = True
+        cfg = self.config
+        # Tail arrivals the engine never saw: uncontrolled passthrough.
+        while self._cursor < self._arr_t.size:
+            k = self._cursor
+            self._controlled[self._arr_node[k]].append(
+                (int(self._arr_fn[k]), float(self._arr_t[k]), float(self._arr_dur[k]))
+            )
+            self._cursor += 1
+        # Deferred leftovers: predictive packing after the last real window.
+        last = max(
+            [self.n_used * self.delta]
+            + [s + 0.0 for node in self._controlled for (_, s, _) in node[-1:]]
+        )
+        w = int(np.ceil(max(last, self.orig_duration) / self.delta))
+        # Seed the packer with everything already scheduled that is still
+        # running at the first drain window (live-region admissions whose
+        # durations cross the segment boundary) — an empty start would let
+        # the packer stack drained work on top of them.
+        running: list[tuple[int, float, float]] = [  # (node, end_t, watts)
+            (i, s + d, float(self._nameplate[fn]))
+            for i, node in enumerate(self._controlled)
+            for (fn, s, d) in node
+            if s + d > w * self.delta
+        ]
+        specs = self.registry.specs
+        pack_cap = cfg.cap_watts * (1.0 - cfg.drain_margin)
+        while self.scheduler.queue:
+            inv = self.scheduler.queue.popleft()
+            fn = inv.payload["fn"]
+            dur = max(inv.payload["dur"], 1e-3)
+            j = self._footprint_of(inv.function)
+            # Measured footprints are *attributed* watts — at high
+            # concurrency the host's sublinear power curve compresses each
+            # invocation's share, so J_lambda / tau under-predicts what the
+            # same invocation draws in the (less concurrent) drain tail.
+            # Pack against the larger of the measured rate and the
+            # registry's nameplate dynamic power: conservative in either
+            # direction, so drain windows land under the cap.
+            watts = max(
+                (j / dur) if j is not None else 0.0, specs[fn].dyn_power_w
+            )
+            while True:
+                now = w * self.delta
+                running = [r for r in running if r[1] > now]
+                loads = self.idle.copy()
+                for node, _, p in running:
+                    loads[node] += p
+                # No-migration mode drains each leftover on its origin node.
+                order = (
+                    np.argsort(loads, kind="stable")
+                    if cfg.placement
+                    else [inv.payload["node"]]
+                )
+                placed = False
+                for i in order:
+                    i = int(i)
+                    # An idle node always admits (termination + conservation:
+                    # deferred work must run even if one invocation alone
+                    # exceeds the cap).
+                    if loads[i] + watts <= pack_cap or loads[i] <= self.idle[i] + 1e-9:
+                        self._controlled[i].append((fn, now, dur))
+                        running.append((i, now + dur, watts))
+                        self.drain_waits.append(now - inv.arrival)
+                        placed = True
+                        break
+                if placed:
+                    break
+                w += 1
+
+    def controlled_traces(self) -> list[InvocationTrace]:
+        """The reshaped per-node traces: every original invocation, same
+        durations, starts moved by admission control.  Re-simulate these to
+        measure what the control actually did to power."""
+        if not self._finished:
+            raise ValueError("controlled_traces needs finish() (profile_fleet calls it)")
+        end_max = self.orig_duration
+        for node in self._controlled:
+            for _, s, d in node:
+                end_max = max(end_max, s + d)
+        duration = float(np.ceil(end_max / self.delta) * self.delta)
+        names = self.registry.names
+        out = []
+        for node in self._controlled:
+            if node:
+                fn = np.asarray([e[0] for e in node], np.int32)
+                st = np.asarray([e[1] for e in node], np.float64)
+                du = np.asarray([e[2] for e in node], np.float64)
+            else:
+                fn = np.zeros(0, np.int32)
+                st = np.zeros(0)
+                du = np.zeros(0)
+            order = np.argsort(st, kind="stable")
+            out.append(
+                InvocationTrace(
+                    fn_id=fn[order],
+                    start=st[order].astype(np.float32),
+                    end=(st + du)[order].astype(np.float32),
+                    num_fns=self.num_fns,
+                    duration=duration,
+                    fn_names=names,
+                )
+            )
+        return out
+
+    def summary(self) -> dict:
+        """Scalar outcome metrics: capping, deferral cost, maintenance."""
+        stats = self.fleet.stats
+        waits = np.asarray(self.scheduler.stats.queue_waits + self.drain_waits)
+        return {
+            "ticks": self.ticks_seen,
+            "observed_overshoot_fraction": stats.overshoot_fraction,
+            "admitted": stats.admitted,
+            "deferred_decisions": stats.deferred,
+            "deferred_by_cap": self.scheduler.stats.deferred_by_cap,
+            "mean_queue_wait_s": float(waits.mean()) if waits.size else 0.0,
+            "max_queue_wait_s": float(waits.max()) if waits.size else 0.0,
+            "billed_joules": float(np.sum(self.meter.j_total)),
+            "retrain_events": len(self.retrain_events),
+            "resync_events": len(self.resync_events),
+        }
+
+
 class EnergyFirstControlPlane:
     """Single-node energy-first control plane over a function registry."""
 
@@ -220,6 +622,8 @@ class EnergyFirstControlPlane:
         mesh="auto",
         mode: str | None = None,
         prefetch: int = 2,
+        control: "ControlLoop | None" = None,
+        tick_transform=None,
     ) -> list[ProfiledWorkload]:
         """Profile many nodes through the *streaming* fleet engine, live.
 
@@ -268,6 +672,17 @@ class EnergyFirstControlPlane:
             (``StreamingFleetSession.ingest``), overlapping host-side
             telemetry work with the jitted ``fleet_step``; ``0`` forces
             strict sense/step alternation.
+          control: optional ``ControlLoop`` — the closed-loop controller.
+            It is bound to this replay (arrival stream, trackers, idle
+            floors), hooked into the tick path *after* trackers update and
+            *before* ``on_tick``, and finished after ``finalize`` (its
+            ``controlled_traces()`` then hold the reshaped schedule).
+            Requires the streaming path: a segment too short to stream
+            raises instead of silently skipping control.
+          tick_transform: optional ``iterator -> iterator`` over the
+            ``FleetTelemetryTick`` stream, applied before ingest — the
+            fault/drift-injection hook (``simulator.chip_drift_transform``
+            feeds the retrain-recovery tests and benchmark).
 
         Returns:
           One ``ProfiledWorkload`` per node, with ``footprint_stream``
@@ -330,6 +745,13 @@ class EnergyFirstControlPlane:
             # the common init window): no streaming state to track.  An
             # attached-but-never-fed tracker would report 0 J/invocation
             # as if it were a measurement, so footprint_stream stays None.
+            if control is not None:
+                raise ValueError(
+                    "profile_fleet(control=...) needs the streaming path: "
+                    "the segment is too short for a Kalman step (or nodes "
+                    "cannot cover a common N_init window), so there is no "
+                    "tick stream to drive the control loop"
+                )
             if combined and not init_uniform:
                 raise ValueError(
                     "profile_fleet(mode='combined') needs every node to "
@@ -347,13 +769,32 @@ class EnergyFirstControlPlane:
                 StreamingFootprintTracker(num_fns, idle_watts=tel.idle_watts)
                 for tel in tels
             ]
+            if control is not None:
+                control.bind(
+                    traces=traces, registry=self.registry, trackers=trackers,
+                    idle_watts=[tel.idle_watts for tel in tels],
+                    delta=cfg.delta, init_n=plans[0][1],
+                    n_used=plans[0][1] + s * cfg.step_windows,
+                )
+
+            # Combined mode: live trackers meter the full spectrum — the
+            # causal rest estimate plus the node's X_CPU.  X_CPU is static
+            # per segment *until* a live refit swaps counter models
+            # (ControlLoop retrain), so the numpy snapshot is re-pulled
+            # whenever the session's refit count moves.
+            _x_cpu_cache: dict = {"refits": -1, "v": None}
+
+            def _x_cpu_now():
+                n = len(session.refits)
+                if _x_cpu_cache["refits"] != n:
+                    _x_cpu_cache["v"] = np.asarray(session.x_cpu)
+                    _x_cpu_cache["refits"] = n
+                return _x_cpu_cache["v"]
 
             def _full_x(x_rest, i):
-                # Combined mode: live trackers meter the full spectrum —
-                # the causal rest estimate plus the node's (static) X_CPU.
                 if not combined:
                     return x_rest
-                return np.asarray(x_rest[:num_fns]) + x_cpu_np[i]
+                return np.asarray(x_rest[:num_fns]) + _x_cpu_now()[i]
 
             def _on_bootstrap(sess):
                 # Seed with the init segment (X_0 estimate) so functions
@@ -375,6 +816,8 @@ class EnergyFirstControlPlane:
                         tr.observe_tick(
                             _full_x(tk.x[i], i), tk.busy_seconds[i], tk.a[i], cfg.delta
                         )
+                if control is not None:
+                    control.on_tick(tk, trackers)
                 if on_tick is not None:
                     on_tick(tk, trackers)
 
@@ -388,7 +831,6 @@ class EnergyFirstControlPlane:
                 fn_counters=fn_counters, counter_model=counter_model,
                 window_features=window_feats,
             )
-            x_cpu_np = np.asarray(session.x_cpu) if combined else None
             # Stack each signal once into (N_max, B) so the tick generator
             # indexes rows instead of doing B Python-level scalar reads per
             # window; nodes shorter than the longest are zero-padded (the
@@ -422,10 +864,17 @@ class EnergyFirstControlPlane:
                         sys_frac=sf_np[t] if sf_np is not None else None,
                     )
 
+            if control is not None:
+                control.attach_session(session)
+            ticks = _ticks()
+            if tick_transform is not None:
+                ticks = tick_transform(ticks)
             # The ingest stage pulls ticks on a background thread so window
             # t + 1's host work overlaps the engine's jitted step on t.
-            session.ingest(_ticks(), prefetch=prefetch)
+            session.ingest(ticks, prefetch=prefetch)
             reports = session.finalize()
+            if control is not None:
+                control.finish()
 
         mem = jnp.asarray([sp.mem_gb for sp in self.registry.specs], jnp.float32)
         out = []

@@ -22,7 +22,9 @@ import heapq
 from collections import defaultdict, deque
 from typing import Any, Callable
 
-from repro.core.capping import CappingConfig, PowerCapController
+import numpy as np
+
+from repro.core.capping import CappingConfig, FleetPowerCapController, PowerCapController
 
 
 @dataclasses.dataclass
@@ -74,8 +76,17 @@ class KeepAliveCache:
         return e.engine
 
     def put(self, fn: str, engine: Any, nbytes: int, cold_cost_s: float) -> list[str]:
-        """Insert a warm engine; returns the list of evicted functions."""
+        """Insert a warm engine; returns the list of evicted functions.
+
+        Re-putting a resident function replaces its entry in place: its old
+        bytes are released *before* the budget check (so they are never
+        double-counted against itself) and it can never be chosen as its own
+        eviction victim; its access frequency carries over.  A budget that
+        lands exactly exhausted (used + nbytes == budget) admits without
+        evicting — the greedy-dual rule only fires strictly past the budget.
+        """
         evicted = []
+        prev = self.entries.pop(fn, None)
         used = sum(e.bytes for e in self.entries.values())
         while self.entries and used + nbytes > self.budget:
             victim = min(self.entries, key=lambda k: self.entries[k].credit)
@@ -83,14 +94,45 @@ class KeepAliveCache:
             used -= self.entries[victim].bytes
             del self.entries[victim]
             evicted.append(victim)
-        e = _WarmEntry(engine=engine, bytes=nbytes, cold_cost_s=cold_cost_s, freq=1.0)
-        e.credit = self._clock + cold_cost_s / max(nbytes, 1)
+        e = _WarmEntry(
+            engine=engine, bytes=nbytes, cold_cost_s=cold_cost_s,
+            freq=(prev.freq + 1.0) if prev is not None else 1.0,
+        )
+        e.credit = self._clock + cold_cost_s * e.freq / max(nbytes, 1)
         self.entries[fn] = e
         return evicted
 
     @property
     def resident(self) -> set[str]:
         return set(self.entries)
+
+
+def energy_aware_placement(
+    fleet: FleetPowerCapController,
+    footprint_joules: float | None,
+    duration_s: float | None = None,
+    *,
+    live=None,
+) -> int | None:
+    """GreenFaaS-style energy-aware placement over a capped fleet.
+
+    Candidate nodes are tried in descending cap headroom (the node with the
+    most watts to spare under its guarded cap first); the first node whose
+    admission rule accepts wins and is charged (``admit`` — stats plus the
+    optimistic power accounting), losers are only probed (``would_admit``,
+    no side effects).  Returns the winning node index, or None when no live
+    node can take the invocation this control interval (the caller defers
+    it).  ``live`` (B,) bool restricts candidates to still-streaming nodes.
+    """
+    order = np.argsort(-fleet.headroom_watts(), kind="stable")
+    for i in order:
+        i = int(i)
+        if live is not None and not live[i]:
+            continue
+        if fleet.would_admit(i, footprint_joules, duration_s):
+            fleet.admit(i, footprint_joules, duration_s)
+            return i
+    return None
 
 
 @dataclasses.dataclass
@@ -158,3 +200,52 @@ class EnergyAwareScheduler:
             self._lat_acc[inv.function].append(latency)
             ran += 1
         return ran
+
+    def drain_fleet(
+        self,
+        now: float,
+        *,
+        fleet: FleetPowerCapController,
+        placement: bool = True,
+        live=None,
+    ) -> list[tuple[Invocation, int]]:
+        """Admit + place queued invocations across a capped fleet.
+
+        The fleet twin of ``drain``: the head of the queue is placed via
+        ``energy_aware_placement`` (descending cap headroom, first node whose
+        footprint-aware rule admits) and *not executed here* — the caller
+        (the streaming ``ControlLoop``) re-injects placed invocations into
+        the simulator, which is where their power shows up.  Head-of-line
+        blocking is deliberate: when no node can take the head this control
+        interval, everything behind it waits too (FIFO fairness, same as the
+        single-node path).  With ``placement=False`` each invocation may
+        only run on its origin node (``inv.payload["node"]``) — the
+        no-migration baseline.  Returns ``[(invocation, node), ...]`` for
+        the invocations admitted at ``now``.
+        """
+        placed = []
+        while self.queue:
+            inv = self.queue[0]
+            j = self.footprint_of(inv.function)
+            dur = self.mean_latency_of(inv.function)
+            if placement:
+                node = energy_aware_placement(fleet, j, dur, live=live)
+            else:
+                node = inv.payload["node"] if isinstance(inv.payload, dict) else 0
+                if live is not None and not live[node]:
+                    node = None
+                elif not fleet.admit(node, j, dur):
+                    node = None
+            if node is None:
+                self.stats.deferred_by_cap += 1
+                break
+            self.queue.popleft()
+            inv.admitted_at = now
+            # An invocation admitted in the same control window it arrived
+            # keeps its arrival time (no wait); a deferred one starts at the
+            # admitting window.
+            inv.started_at = max(now, inv.arrival)
+            self.stats.completed += 1
+            self.stats.queue_waits.append(inv.queue_wait)
+            placed.append((inv, node))
+        return placed

@@ -84,6 +84,27 @@ class FleetTelemetryTick(NamedTuple):
     valid: np.ndarray | None = None  # (B,) bool node liveness; None = all live
 
 
+def chip_drift_transform(factor: float, after_t: int):
+    """Build a ``profile_fleet(tick_transform=...)`` hook that scales every
+    node's sensed chip power by ``factor`` from window ``after_t`` on.
+
+    The canonical drift injector for the §4.3 continuous-retraining loop:
+    a chip whose power model shifted mid-segment (DVFS change, thermal
+    throttle, firmware update) makes the counter model's predictions
+    diverge from observation, which is exactly what ``retrain_needed``
+    watches for.  System power is left untouched — only the chip reference
+    (and hence the combined-mode chip/rest split) drifts.
+    """
+
+    def transform(ticks):
+        for tk in ticks:
+            if tk.t >= after_t and tk.w_chip is not None:
+                tk = tk._replace(w_chip=tk.w_chip * factor)
+            yield tk
+
+    return transform
+
+
 def _activity_numpy(trace: InvocationTrace, num_bins: int, dt: float) -> np.ndarray:
     """(T, M) event-based concurrency counts (simulator-side numpy twin of
     repro.core.contribution.activity_series; cross-checked in tests).

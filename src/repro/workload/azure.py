@@ -107,6 +107,23 @@ def generate_trace(
     )
 
 
+def fleet_traces(
+    registry: FunctionRegistry, cfg: WorkloadConfig, num_nodes: int
+) -> list[InvocationTrace]:
+    """Per-node Azure-style traces for a fleet replay.
+
+    Node ``i`` draws from ``cfg`` with ``seed + i`` — independent arrival
+    processes with identical load statistics, the trace-scale input to
+    ``EnergyFirstControlPlane.profile_fleet(control=...)`` and the
+    control-loop benchmark.  Deterministic: the same (cfg, num_nodes) gives
+    bitwise-identical traces.
+    """
+    return [
+        generate_trace(registry, dataclasses.replace(cfg, seed=cfg.seed + i))
+        for i in range(num_nodes)
+    ]
+
+
 def _latency(rng, spec) -> float:
     """Log-normal latency with the spec's mean and CoV."""
     cov = max(spec.latency_cov, 1e-3)

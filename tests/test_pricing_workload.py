@@ -1,0 +1,195 @@
+"""Pricing (core.pricing) and Azure workload generation (workload.azure):
+bill conservation, live-meter accounting, rate normalization, determinism.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.pricing import (
+    JOULES_PER_KWH,
+    LivePriceMeter,
+    PricingConfig,
+    carbon_footprint_g,
+    energy_price_usd,
+    latency_price_usd,
+    price_report,
+)
+from repro.workload.azure import (
+    WorkloadConfig,
+    _fn_rates,
+    fleet_traces,
+    generate_trace,
+)
+from repro.workload.functions import paper_functions
+
+
+class TestPriceReport:
+    def _inputs(self, m=5, seed=0):
+        rng = np.random.default_rng(seed)
+        j_indiv = jnp.asarray(rng.uniform(10.0, 500.0, m), jnp.float32)
+        j_total = j_indiv + jnp.asarray(rng.uniform(5.0, 50.0, m), jnp.float32)
+        inv = jnp.asarray(rng.integers(1, 40, m), jnp.float32)
+        lat = jnp.asarray(rng.uniform(0.1, 5.0, m), jnp.float32)
+        mem = jnp.asarray(rng.uniform(0.1, 4.0, m), jnp.float32)
+        return j_indiv, j_total, inv, lat, mem
+
+    def test_bill_conservation(self):
+        """Sum of per-function bills equals the bill of the total energy:
+        linearity of energy pricing (paper §4.4 fair-pricing properties)."""
+        j_indiv, j_total, inv, lat, mem = self._inputs()
+        cfg = PricingConfig()
+        rep = price_report(j_indiv, j_total, inv, lat, mem, cfg)
+        total_billed = float(jnp.sum(rep["total_usd_per_inv"] * inv))
+        np.testing.assert_allclose(
+            total_billed,
+            float(energy_price_usd(jnp.sum(j_total), cfg.usd_per_kwh)),
+            rtol=1e-5,
+        )
+        indiv_billed = float(jnp.sum(rep["indiv_usd_per_inv"] * inv))
+        np.testing.assert_allclose(
+            indiv_billed,
+            float(energy_price_usd(jnp.sum(j_indiv), cfg.usd_per_kwh)),
+            rtol=1e-5,
+        )
+
+    def test_carbon_proportional_to_intensity(self):
+        j = jnp.asarray([3.6e6])  # 1 kWh
+        assert float(carbon_footprint_g(j, 400.0)[0]) == pytest.approx(400.0)
+        assert float(carbon_footprint_g(j, 800.0)[0]) == pytest.approx(800.0)
+
+    def test_energy_price_unit(self):
+        # 1 kWh at 0.12 $/kWh is 12 cents.
+        assert float(
+            energy_price_usd(jnp.asarray([JOULES_PER_KWH]), 0.12)[0]
+        ) == pytest.approx(0.12)
+
+    def test_latency_price_formula(self):
+        p = latency_price_usd(
+            jnp.asarray([2.0]), jnp.asarray([1.5]), 1.667e-5
+        )
+        assert float(p[0]) == pytest.approx(2.0 * 1.5 * 1.667e-5)
+
+
+class TestLivePriceMeter:
+    def test_tick_accumulation_conserves_energy(self):
+        """total bill == attributed joules + idle accrual, at every tick."""
+        m = 4
+        meter = LivePriceMeter(m)
+        rng = np.random.default_rng(1)
+        for _ in range(50):
+            tick_power = rng.uniform(0.0, 30.0, m + 2)  # +2 shared principals
+            a = (rng.uniform(0.0, 1.0, m + 2) > 0.6).astype(float)
+            meter.observe_tick(tick_power, a, 1.0, idle_watts=90.0)
+            np.testing.assert_allclose(
+                meter.j_total.sum(),
+                meter.j_indiv.sum() + meter.idle_joules,
+                rtol=1e-9,
+            )
+        assert meter.ticks_seen == 50
+        assert meter.elapsed_s == pytest.approx(50.0)
+        assert meter.idle_joules == pytest.approx(90.0 * 50.0)
+
+    def test_idle_shared_only_over_invoked_functions(self):
+        meter = LivePriceMeter(3)
+        meter.observe_tick(
+            np.asarray([10.0, 0.0, 0.0]), np.asarray([1.0, 1.0, 0.0]), 1.0,
+            idle_watts=50.0,
+        )
+        jt = meter.j_total
+        assert jt[2] == 0.0                       # never invoked: no share
+        assert jt[0] == pytest.approx(10.0 + 25.0)
+        assert jt[1] == pytest.approx(25.0)
+
+    def test_report_matches_price_report(self):
+        m = 3
+        meter = LivePriceMeter(m)
+        meter.observe_tick(
+            np.asarray([5.0, 10.0, 0.0]), np.asarray([1.0, 2.0, 0.0]), 2.0,
+            idle_watts=10.0,
+        )
+        lat = np.asarray([0.5, 1.0, 2.0])
+        mem = np.asarray([1.0, 2.0, 0.5])
+        rep = meter.report(lat, mem)
+        ref = price_report(
+            jnp.asarray(meter.j_indiv, jnp.float32),
+            jnp.asarray(meter.j_total, jnp.float32),
+            jnp.asarray(meter.invocations, jnp.float32),
+            jnp.asarray(lat, jnp.float32),
+            jnp.asarray(mem, jnp.float32),
+            meter.config,
+        )
+        for k in rep:
+            np.testing.assert_array_equal(np.asarray(rep[k]), np.asarray(ref[k]))
+
+
+class TestAzureWorkload:
+    def test_fn_rates_normalization(self):
+        """sum(rate_j * latency_j) == load * M / 2: the requested expected
+        concurrency is what the rates actually target."""
+        reg = paper_functions()
+        for load in (0.5, 1.0, 8.0):
+            cfg = WorkloadConfig(load=load, seed=3)
+            rates = _fn_rates(reg, cfg, np.random.default_rng(cfg.seed))
+            lat = np.asarray([s.mean_latency_s for s in reg.specs])
+            np.testing.assert_allclose(
+                float(np.sum(rates * lat)), load * len(reg) / 2.0, rtol=1e-9
+            )
+
+    def test_generate_trace_bitwise_deterministic(self):
+        reg = paper_functions()
+        cfg = WorkloadConfig(duration_s=120.0, load=3.0, seed=9)
+        a, b = generate_trace(reg, cfg), generate_trace(reg, cfg)
+        np.testing.assert_array_equal(a.fn_id, b.fn_id)
+        np.testing.assert_array_equal(a.start, b.start)
+        np.testing.assert_array_equal(a.end, b.end)
+
+    def test_trace_within_duration_and_sorted(self):
+        reg = paper_functions()
+        tr = generate_trace(reg, WorkloadConfig(duration_s=60.0, load=2.0, seed=1))
+        assert np.all(tr.start >= 0.0) and np.all(tr.start < 60.0)
+        assert np.all(tr.end <= 60.0) and np.all(tr.end >= tr.start)
+        assert np.all(np.diff(tr.start) >= 0)
+
+    def test_load_scales_invocation_volume(self):
+        reg = paper_functions()
+        lo = generate_trace(reg, WorkloadConfig(duration_s=120.0, load=1.0, seed=4))
+        hi = generate_trace(reg, WorkloadConfig(duration_s=120.0, load=8.0, seed=4))
+        assert hi.fn_id.size > 3 * lo.fn_id.size
+
+    def test_fleet_traces_distinct_and_deterministic(self):
+        reg = paper_functions()
+        cfg = WorkloadConfig(duration_s=90.0, load=2.0, seed=6)
+        fleet = fleet_traces(reg, cfg, 3)
+        assert len(fleet) == 3
+        # Per-node seeds differ -> traces differ; same call -> bitwise equal.
+        assert not np.array_equal(fleet[0].start, fleet[1].start)
+        again = fleet_traces(reg, cfg, 3)
+        for a, b in zip(fleet, again):
+            np.testing.assert_array_equal(a.start, b.start)
+            np.testing.assert_array_equal(a.fn_id, b.fn_id)
+        # Node i of the fleet == a solo trace at seed + i.
+        solo = generate_trace(reg, dataclasses.replace(cfg, seed=cfg.seed + 2))
+        np.testing.assert_array_equal(fleet[2].start, solo.start)
+
+    def test_closed_loop_arrivals(self):
+        reg = paper_functions()
+        tr = generate_trace(
+            reg,
+            WorkloadConfig(duration_s=60.0, load=1.0, arrival="closed", seed=2),
+        )
+        assert tr.fn_id.size > 0
+        assert np.all(tr.end <= 60.0)
+
+    def test_max_invocations_guard(self):
+        reg = paper_functions()
+        with pytest.raises(ValueError, match="trace too large"):
+            generate_trace(
+                reg,
+                WorkloadConfig(
+                    duration_s=600.0, load=50.0, seed=0, max_invocations=100
+                ),
+            )

@@ -69,6 +69,32 @@ class TestKeepAlive:
         evicted = ka.put("c", object(), 60, cold_cost_s=1.0)
         assert evicted == ["b"]  # hot 'a' survives
 
+    def test_exact_budget_admits_without_eviction(self):
+        """used + nbytes == budget must admit: the greedy-dual rule only
+        fires strictly past the budget (regression: off-by-one evicted a
+        resident entry on an exactly-exhausted budget)."""
+        ka = KeepAliveCache(budget_bytes=100)
+        assert ka.put("a", object(), 60, cold_cost_s=1.0) == []
+        assert ka.put("b", object(), 40, cold_cost_s=1.0) == []
+        assert ka.resident == {"a", "b"}
+
+    def test_reput_resident_fn_does_not_self_evict(self):
+        """Re-putting a resident function releases its old bytes before the
+        budget check: no double-count, no eviction, frequency carries over."""
+        ka = KeepAliveCache(budget_bytes=100)
+        ka.put("a", object(), 60, cold_cost_s=1.0)
+        ka.put("b", object(), 40, cold_cost_s=1.0)
+        assert ka.put("a", object(), 60, cold_cost_s=1.0) == []
+        assert ka.resident == {"a", "b"}
+        assert ka.entries["a"].freq == 2.0  # put counts as an access
+
+    def test_reput_larger_entry_evicts_others_not_itself(self):
+        ka = KeepAliveCache(budget_bytes=100)
+        ka.put("a", object(), 50, cold_cost_s=1.0)
+        ka.put("b", object(), 50, cold_cost_s=10.0)
+        evicted = ka.put("a", object(), 80, cold_cost_s=1.0)
+        assert evicted == ["b"] and ka.resident == {"a"}
+
 
 class TestScheduler:
     def _sched(self, cap=float("inf"), lat=0.1, timeout_factor=50.0):
