@@ -165,6 +165,11 @@ def _end_to_end(b: int, duration: float, profiler_cfg: ProfilerConfig) -> dict:
         "stream_traces": (
             cache_size() - traces_before if traces_before is not None else -1
         ),
+        # The snapshot above is already post-warmup, so the same delta is
+        # the run.py smoke gate's zero-retrace metric.
+        "retraces_after_warmup": (
+            cache_size() - traces_before if traces_before is not None else -1
+        ),
     }
 
 

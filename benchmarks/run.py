@@ -36,8 +36,33 @@ MODULES = [
     ("combined_fleet", "Perf: combined-mode (§4.3) chip/rest split overhead"),
     ("ingest_pipeline", "Perf: telemetry ingest — batched front-end + prefetch overlap"),
     ("control_loop", "Closed-loop control: cap overshoot, deferral cost, retrain recovery"),
+    ("slot_serving", "Serving: slot-pool churn — ticks/sec + zero-retrace gate"),
     ("kernel_bench", "Perf: kernel path"),
 ]
+
+# Engine hot paths whose jit caches are snapshotted around every module:
+# each smoke result carries a ``_jit_traces`` count (compiles the module
+# triggered on the serving/streaming paths), and the gate below turns the
+# tests' ad-hoc retrace guards into a fleet-wide CI invariant.
+_TRACKED_JITS = (
+    ("repro.core.batched_engine", "fleet_step"),
+    ("repro.core.batched_engine", "fleet_stream_reset_slots"),
+    ("repro.core.batched_engine", "_bucket_init_solve"),
+)
+
+
+def _jit_cache_total() -> int | None:
+    """Summed jit-cache size of the tracked engine entry points (None when
+    the private counter is unavailable — the gate then rides only the
+    modules' own ``retraces_after_warmup`` metrics)."""
+    total = 0
+    try:
+        for mod_name, fn_name in _TRACKED_JITS:
+            fn = getattr(importlib.import_module(mod_name), fn_name)
+            total += int(fn._cache_size())
+    except Exception:
+        return None
+    return total
 
 
 def _well_formed(metrics: dict) -> bool:
@@ -96,10 +121,27 @@ def main() -> None:
                         "--smoke (tiny shapes)"
                     )
                 kwargs["smoke"] = True
+            jit_before = _jit_cache_total()
             metrics = mod.run(**kwargs)
             if args.smoke and not _well_formed(metrics):
                 raise ValueError(f"{mod_name}.run returned malformed metrics: {metrics!r}")
             metrics["_seconds"] = round(time.time() - t0, 1)
+            jit_after = _jit_cache_total()
+            metrics["_jit_traces"] = (
+                jit_after - jit_before
+                if jit_before is not None and jit_after is not None else -1
+            )
+            # The fleet-wide retrace gate: any module that declares a
+            # post-warmup retrace count must report zero — an engine path
+            # that recompiles after its per-bucket warmup is a serving
+            # regression, not a slow benchmark.
+            retraces = metrics.get("retraces_after_warmup")
+            if args.smoke and retraces is not None and int(retraces) > 0:
+                raise ValueError(
+                    f"{mod_name} retraced after warmup "
+                    f"({retraces} extra jit traces) — the zero-retrace "
+                    "serving invariant is broken"
+                )
             results[mod_name] = metrics
             for k, v in metrics.items():
                 print(f"  {k:36s} {v:.6g}" if isinstance(v, float) else f"  {k:36s} {v}")

@@ -1,0 +1,145 @@
+"""Slot-pool serving under churn: ticks/sec and the zero-retrace invariant.
+
+The serving claim (docs/serving.md) is that a ``SlotFleetSession`` turns
+node churn into pure data: after ``warmup()`` pre-compiles the step, the
+slot reset, and every bucket's init solver, a trace of joins, leaves,
+ragged init blocks, and dropped windows runs at streaming speed with zero
+jit retraces.  This benchmark drives exactly that trace — a
+``churn_schedule`` through a ``SlotAdmissionQueue`` in front of the pool —
+and measures it.
+
+Metrics:
+
+- ``ticks_per_sec``          : sustained pool throughput under churn
+- ``tick_us_mean`` / ``tick_p99_us`` : per-tick latency (admit ticks pay a
+  reset dispatch on top of the step)
+- ``admits`` / ``releases`` / ``queue_deferred`` : churn volume served
+- ``retraces_after_warmup``  : jit cache growth across the serving run —
+  the CI gate: ``run.py --smoke`` fails when this is nonzero
+- ``pad_waste_monolithic`` / ``pad_waste_bucketed`` : padding fraction of
+  the churn trace's ragged segment lengths under the single-block pack vs
+  the length-bucketed pack (the batch-side win of bucketing)
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.batched_engine import (
+    EngineConfig,
+    pack_fleet_buckets,
+    pad_waste_frac,
+    bucketed_pad_waste,
+    synthetic_ragged_windows,
+)
+from repro.core.profiler import SlotFleetSession
+from repro.serving.scheduler import SlotAdmissionQueue
+from repro.telemetry.simulator import churn_schedule
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Drive a churn schedule through the slot pool; see module docstring."""
+    # Serving scale: a pool of controller slots metering a rolling
+    # population several times its size.  Smoke keeps the same churn
+    # *structure* (joins, leaves, ragged inits, drops) at seconds scale —
+    # the retrace gate needs the code paths exercised, not the throughput.
+    if smoke:
+        cap, m, n_w, horizon, population = 6, 8, 10, 60, 16
+    elif quick:
+        cap, m, n_w, horizon, population = 16, 32, 30, 400, 64
+    else:
+        cap, m, n_w, horizon, population = 64, 64, 60, 1200, 256
+    cfg = EngineConfig()
+    spans = churn_schedule(
+        population, horizon, capacity=cap, seed=0,
+        mean_lifetime=horizon / 6.0, mean_gap=horizon / (2.5 * population),
+    )
+    joins: dict[int, list] = {}
+    leaves: dict[int, list] = {}
+    for sp in spans:
+        joins.setdefault(sp.join, []).append(sp.node)
+        leaves.setdefault(sp.leave, []).append(sp.node)
+
+    pool = SlotFleetSession(cap, m, step_windows=n_w, config=cfg)
+    base = pool.warmup()
+    queue = SlotAdmissionQueue(pool)
+
+    rng = np.random.default_rng(1)
+    init_blocks = {
+        sp.node: (
+            rng.random((int(rng.integers(4, 3 * n_w)), m)).astype(np.float32),
+            (rng.random(int(rng.integers(4, 3 * n_w))) * 30.0).astype(np.float32),
+        )
+        for sp in spans
+    }
+    # (init_c, init_w) lengths must agree per node.
+    init_blocks = {
+        node: (c[: len(w)], w[: len(c)]) for node, (c, w) in init_blocks.items()
+    }
+
+    lat: list[float] = []
+    t_start = time.perf_counter()
+    for t in range(horizon):
+        t0 = time.perf_counter()
+        for node in leaves.get(t, ()):
+            if node in pool._node_slot:
+                pool.release(node)
+        queue.drain()
+        for node in joins.get(t, ()):
+            c, w = init_blocks[node]
+            queue.submit(node, c, w)
+        feeds = {}
+        for node in pool.live_nodes:
+            if rng.random() < 0.05:
+                continue  # dropped window
+            feeds[node] = (
+                rng.random(m).astype(np.float32),
+                np.float32(40.0 + 10.0 * rng.random()),
+                rng.integers(0, 2, m).astype(np.float32),
+                rng.random(m).astype(np.float32),
+                rng.random(m).astype(np.float32),
+            )
+        att = pool.step(feeds)
+        att.x.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+    total_s = time.perf_counter() - t_start
+    after = pool.compile_counts()
+    retraces = sum(
+        after[k] - base[k] for k in after if after[k] >= 0 and base[k] >= 0
+    )
+
+    # Batch-side bucketing win on this churn trace's tenancy lengths.
+    lengths = [max(sp.leave - sp.join, 1) for sp in spans]
+    waste_mono = pad_waste_frac(lengths, n_w) if max(lengths) >= n_w else 0.0
+    if max(lengths) >= n_w:
+        b, n = len(lengths), max(lengths)
+        arrs = synthetic_ragged_windows(b, n, 4, lengths=lengths, seed=2)
+        bks = pack_fleet_buckets(
+            *arrs, step_windows=n_w, lengths=lengths, buckets=(1, 2, 4, 8, 16, 32)
+        )
+        waste_bkt = bucketed_pad_waste(bks, n_w)
+    else:
+        waste_bkt = 0.0
+
+    lat_us = np.asarray(lat) * 1e6
+    return {
+        "pool": f"cap{cap} M{m} n_w{n_w}",
+        "horizon_ticks": horizon,
+        "population": len(spans),
+        "admits": pool.admits,
+        "releases": pool.releases,
+        "queue_deferred": queue.deferred,
+        "ticks_per_sec": horizon / total_s,
+        "tick_us_mean": float(lat_us.mean()),
+        "tick_p99_us": float(np.percentile(lat_us, 99)),
+        "retraces_after_warmup": retraces,
+        "pad_waste_monolithic": waste_mono,
+        "pad_waste_bucketed": waste_bkt,
+    }
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k:24s} {v:.4g}" if isinstance(v, float) else f"{k:24s} {v}")

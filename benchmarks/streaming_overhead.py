@@ -15,6 +15,8 @@ Metrics:
 - ``overhead_ratio``       : stream mean / segment amortized (accept <= 2)
 - ``stream_traces``        : jit cache entries used by the loop (must be 1;
   reported as -1 if the private jit cache counter is unavailable)
+- ``retraces_after_warmup``: cache growth during the measured run (must be
+  0; ``run.py --smoke`` fails otherwise — the fleet-wide retrace gate)
 """
 
 from __future__ import annotations
@@ -84,6 +86,7 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
     cache_size = getattr(fleet_step, "_cache_size", lambda: None)
     traces_before = cache_size()
     jax.block_until_ready(stream())  # compile
+    traces_warm = cache_size()
     lat: list[float] = []
     t0 = time.perf_counter()
     final = stream(record=lat)
@@ -104,6 +107,11 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
         "overhead_ratio": stream_us / seg_us,
         "stream_traces": (
             cache_size() - traces_before if traces_before is not None else -1
+        ),
+        # Growth during the *measured* run — the run.py smoke gate fails
+        # when any module reports a nonzero value here.
+        "retraces_after_warmup": (
+            cache_size() - traces_warm if traces_warm is not None else -1
         ),
     }
 

@@ -24,7 +24,7 @@ echo "== collection check (zero tolerance for import errors) =="
 python -m pytest -q --collect-only >/dev/null
 
 echo "== docs check (README/docs present, public API surfaces documented) =="
-for f in README.md docs/architecture.md docs/streaming.md; do
+for f in README.md docs/architecture.md docs/streaming.md docs/serving.md; do
   [ -f "$f" ] || { echo "missing $f"; exit 1; }
 done
 python - <<'EOF'
@@ -39,6 +39,7 @@ SURFACES = (
     "repro.core.pricing",
     "repro.telemetry.counters",
     "repro.telemetry.sources",
+    "repro.telemetry.simulator",
     "repro.serving.control_plane",
     "repro.serving.scheduler",
     "repro.distributed.sharding",
@@ -46,7 +47,11 @@ SURFACES = (
     "benchmarks.combined_fleet",
     "benchmarks.ingest_pipeline",
     "benchmarks.control_loop",
+    "benchmarks.slot_serving",
 )
+# Collect every undocumented symbol across ALL surfaces before failing, so
+# one broken module doesn't hide the rest of the report.
+problems = {}
 for mod_name in SURFACES:
     mod = importlib.import_module(mod_name)
     missing = []
@@ -58,8 +63,13 @@ for mod_name in SURFACES:
         if not inspect.getdoc(obj):
             missing.append(name)
     if missing:
-        raise SystemExit(f"public symbols without docstrings in {mod_name}: {missing}")
-    print(f"docs check OK ({mod_name}: all public symbols documented)")
+        problems[mod_name] = missing
+    else:
+        print(f"docs check OK ({mod_name}: all public symbols documented)")
+if problems:
+    for mod_name, missing in problems.items():
+        print(f"public symbols without docstrings in {mod_name}: {missing}")
+    raise SystemExit(f"docs check failed in {len(problems)} module(s): {sorted(problems)}")
 EOF
 
 echo "== benchmark smoke (tiny shapes; scripts must run + emit sane JSON) =="
@@ -84,11 +94,11 @@ if missing:
 print(f"benchmark smoke OK ({len(results)} modules, strict well-formed JSON)")
 EOF
 
-echo "== sharded + ragged + combined fleet + telemetry front-end + control-loop pins (forced 8-device host mesh, own subprocess) =="
+echo "== sharded + ragged + combined fleet + telemetry front-end + control-loop + slot-serving pins (forced 8-device host mesh, own subprocess) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m pytest -q tests/test_sharded_fleet.py tests/test_ragged_fleet.py \
   tests/test_combined_fleet.py tests/test_telemetry_frontend.py \
-  tests/test_control_loop.py -m "not slow"
+  tests/test_control_loop.py tests/test_slot_serving.py -m "not slow"
 
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"

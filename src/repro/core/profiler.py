@@ -439,6 +439,7 @@ class FaasMeterProfiler:
         on_tick=None,
         on_bootstrap=None,
         mesh=None,
+        slots: int | None = None,
         fn_counters=None,
         counter_model=None,
         window_features=None,
@@ -460,12 +461,18 @@ class FaasMeterProfiler:
         segments too short for a Kalman step, ragged nodes too short to
         bootstrap).  ``mesh`` (a ``distributed.sharding.FleetMesh``) shards
         the carried engine state and every per-tick update over the node
-        axis.
+        axis.  ``slots`` (>= B) routes the engine through a
+        ``SlotFleetSession`` slot pool of that capacity: nodes are admitted
+        at bootstrap, ragged nodes *release* their slot when their stream
+        ends (continuous retirement), spare slots stay free for later
+        tenants — the serving mode (docs/serving.md); with a mesh the slot
+        capacity, not B, must tile it.
         """
         return StreamingFleetSession(
             self, traces, num_fns=num_fns, duration=duration,
             idle_watts=idle_watts, has_chip=has_chip, has_cp=has_cp,
             on_tick=on_tick, on_bootstrap=on_bootstrap, mesh=mesh,
+            slots=slots,
             fn_counters=fn_counters, counter_model=counter_model,
             window_features=window_features, retrain_config=retrain_config,
         )
@@ -702,6 +709,7 @@ class StreamingFleetSession:
         on_tick=None,
         on_bootstrap=None,
         mesh=None,
+        slots: int | None = None,
         fn_counters=None,
         counter_model=None,
         window_features=None,
@@ -724,7 +732,12 @@ class StreamingFleetSession:
           on_bootstrap: ``callable(session)`` invoked once after X_0.
           mesh: optional ``distributed.sharding.FleetMesh``; the engine
             state lives sharded over the node axis and every ``fleet_step``
-            runs under ``shard_map`` (B must tile the mesh evenly).
+            runs under ``shard_map`` (B must tile the mesh evenly — the
+            slot capacity instead when ``slots`` is set).
+          slots: optional slot-pool capacity >= B; routes the engine
+            through a ``SlotFleetSession`` (nodes admitted at bootstrap,
+            ragged nodes released when their stream ends, spare slots free
+            — the serving mode, docs/serving.md).
           fn_counters: (B, M, F) normalized per-function counters (combined
             mode; see ``prepare_combined_fleet``).
           counter_model: fleet-batched / per-node-list / shared
@@ -766,8 +779,15 @@ class StreamingFleetSession:
         self.on_tick = on_tick
         self.on_bootstrap = on_bootstrap
         self.mesh = mesh
+        self._slots_cap = None if slots is None else int(slots)
+        if self._slots_cap is not None and self._slots_cap < self.b:
+            raise ValueError(
+                f"slots={slots} is smaller than the fleet (B={self.b})"
+            )
+        self._slot_pool: "SlotFleetSession | None" = None
+        self._slot_rows: np.ndarray | None = None  # node i -> its pool slot
         if mesh is not None:
-            mesh.validate(self.b)
+            mesh.validate(self.b if self._slots_cap is None else self._slots_cap)
 
         plans = [segment_plan(cfg, d) for d in self.durations]
         self.s_nodes = [p[2] for p in plans]
@@ -1020,9 +1040,26 @@ class StreamingFleetSession:
         init_c = self._c_aug_block(0, self.init_n)                 # (B, init_n, M_aug)
         self.x0 = eng.fleet_initial_estimate(init_c, target, self._engine_cfg)
         self.init_busy_seconds = init_c.sum(axis=1)
-        self._state = eng.fleet_stream_init(
-            self.x0, self.cfg.step_windows, self._engine_cfg, mesh=self.mesh
-        )
+        if self._slots_cap is not None:
+            # Serving mode: the engine state is a slot pool of the requested
+            # capacity.  Nodes claim slots in order (warm handoff of the
+            # batched X_0 rows — no per-node re-solve); spare slots stay
+            # free for tenants beyond this session's fleet.
+            pool = SlotFleetSession(
+                self._slots_cap, self.m_aug,
+                step_windows=self.cfg.step_windows,
+                config=self._engine_cfg, mesh=self.mesh,
+            )
+            pool.warmup()
+            x0_np = np.asarray(self.x0)
+            self._slot_rows = np.asarray(
+                [pool.admit(i, x0=x0_np[i]) for i in range(self.b)]
+            )
+            self._slot_pool = pool
+        else:
+            self._state = eng.fleet_stream_init(
+                self.x0, self.cfg.step_windows, self._engine_cfg, mesh=self.mesh
+            )
         self.booted = True
         if self.on_bootstrap is not None:
             self.on_bootstrap(self)
@@ -1066,14 +1103,17 @@ class StreamingFleetSession:
             # masked out of the engine: zero rows into the ring buffer,
             # frozen Kalman state, exactly-zero attribution.
             live = t < self._n_used_nodes
-        step = self.eng.FleetStep(
-            c=c_t, w=target,
-            a=jnp.asarray(a_t), lat_sum=jnp.asarray(ls_t), lat_sumsq=jnp.asarray(lq_t),
-            valid=None if live is None else jnp.asarray(live, jnp.float32),
-        )
-        self._state, att = self.eng.fleet_step(
-            self._state, step, config=self._engine_cfg, mesh=self.mesh
-        )
+        if self._slot_pool is not None:
+            att = self._pool_tick(t, c_t, target, a_t, ls_t, lq_t, live)
+        else:
+            step = self.eng.FleetStep(
+                c=c_t, w=target,
+                a=jnp.asarray(a_t), lat_sum=jnp.asarray(ls_t), lat_sumsq=jnp.asarray(lq_t),
+                valid=None if live is None else jnp.asarray(live, jnp.float32),
+            )
+            self._state, att = self.eng.fleet_step(
+                self._state, step, config=self._engine_cfg, mesh=self.mesh
+            )
         completed = bool(att.step_completed)
         if completed:
             self._traj.append(att.x)
@@ -1094,6 +1134,39 @@ class StreamingFleetSession:
                     valid=live,
                 )
             )
+
+    def _pool_tick(self, t, c_t, target, a_t, ls_t, lq_t, live):
+        """Drive one engine tick through the slot pool (``slots=`` mode).
+
+        Nodes whose engine span ends at ``t`` are *released* first
+        (continuous retirement: their slot returns to the pool, their
+        Kalman row freezes); the remaining live nodes feed their rows, and
+        the slot-major attribution is gathered back to node order for the
+        session's hooks and trajectory."""
+        pool = self._slot_pool
+        if self._ragged:
+            for i in np.nonzero(self._n_used_nodes == t)[0]:
+                node = int(i)
+                if node in pool._node_slot:
+                    pool.release(node)
+        c_np = np.asarray(c_t, np.float32)
+        w_np = np.asarray(target, np.float32)
+        a_np = np.asarray(a_t, np.float32)
+        ls_np = np.asarray(ls_t, np.float32)
+        lq_np = np.asarray(lq_t, np.float32)
+        live_nodes = range(self.b) if live is None else np.nonzero(live)[0]
+        feeds = {
+            int(i): (c_np[i], w_np[i], a_np[i], ls_np[i], lq_np[i])
+            for i in live_nodes
+        }
+        att = pool.step(feeds)
+        rows = jnp.asarray(self._slot_rows)
+        return self.eng.TickAttribution(
+            tick_power=att.tick_power[rows],
+            unattributed=att.unattributed[rows],
+            x=att.x[rows],
+            step_completed=att.step_completed,
+        )
 
     def _check_retrain(self, t: int) -> None:
         """Paper §4.3 continuous retraining, live: at the Kalman-step
@@ -1224,7 +1297,17 @@ class StreamingFleetSession:
         assert self._next_tick == self.n_used and len(self._traj) == self.s
         cfg = self.cfg
         traj = jnp.moveaxis(jnp.stack(self._traj), 0, 1)           # (B, S, M_aug)
-        x_final = self._state.kalman.x
+        if self._slot_pool is not None:
+            # Slot mode: gather each node's final Kalman row from its pool
+            # slot (retired nodes' rows are frozen, never reused within a
+            # profiling session — admissions all happen at bootstrap).
+            x_final = jnp.asarray(
+                np.asarray(jax.device_get(self._slot_pool.state.kalman.x))[
+                    self._slot_rows
+                ]
+            )
+        else:
+            x_final = self._state.kalman.x
         w_sys = jnp.asarray(np.stack(self._w_sync, axis=1))        # (B, n_used)
         c_aug = self._c_aug_block(0, self.n_windows)
         cp_col = (
@@ -1275,6 +1358,275 @@ class StreamingFleetSession:
                 )
             )
         return reports
+
+
+class SlotFleetSession:
+    """Slot-based live fleet serving session (docs/serving.md).
+
+    The engine-level core of continuous admission/retirement: a fixed pool
+    of ``capacity`` engine slots — one ``(capacity, M)``-shaped
+    ``FleetStreamState`` — where live nodes *claim* and *release* slots
+    while the stream keeps ticking.  Everything that changes at serving
+    time is data, never shape:
+
+    - occupancy rides ``FleetStep.valid`` (a free slot is a permanently
+      invalid node: zero rows, frozen Kalman state, exactly-zero
+      attribution);
+    - a claim runs ``fleet_stream_reset_slots`` (one-hot flags + an X_0
+      row — the rejoin fix: the new tenant's slot is scrubbed of any rows
+      the previous tenant wrote earlier in the current partial step);
+    - the admission-time init solve is length-bucketed
+      (``bucketed_initial_estimate``), so a node joining with an arbitrary
+      init-block length lands in one of the pre-warmed per-bucket compiles.
+
+    After ``warmup()`` (one dummy step + reset + every bucket solver) a
+    churn trace of joins and leaves therefore runs with **zero retraces**
+    — pinned in tests/test_slot_serving.py and gated fleet-wide by the
+    smoke benchmark (``benchmarks/slot_serving.py``).
+
+    Mesh elasticity: the pool state may live sharded over a
+    ``distributed.sharding.FleetMesh`` (``capacity`` must tile it), and
+    ``reshard`` moves the *live* state onto a different mesh mid-stream
+    (checkpoint to host → ``sharding.put`` → resume) at the cost of one
+    deliberate compile per new mesh, pinned at 1e-5 against an
+    uninterrupted run.
+
+    The telemetry-level counterpart is ``StreamingFleetSession(slots=...)``
+    / ``EnergyFirstControlPlane.profile_fleet(slots=...)``, which route a
+    whole profiling segment through a pool like this one.
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        num_fns: int,
+        *,
+        step_windows: int,
+        config=None,
+        mesh=None,
+        buckets=None,
+    ):
+        """Args:
+          capacity: number of engine slots B (the fleet's compile shape).
+          num_fns: per-slot function-axis width M (M_aug with a principal).
+          step_windows: ticks per Kalman step (ring-buffer shape).
+          config: ``batched_engine.EngineConfig`` (default config if None).
+          mesh: optional ``FleetMesh``; capacity must tile it evenly.
+          buckets: init-solve length-bucket table
+            (``batched_engine.DEFAULT_BUCKETS`` if None).
+        """
+        from repro.core import batched_engine as eng
+
+        self.eng = eng
+        self.capacity = int(capacity)
+        self.num_fns = int(num_fns)
+        self.step_windows = int(step_windows)
+        self.config = eng.EngineConfig() if config is None else config
+        self.buckets = tuple(eng.DEFAULT_BUCKETS if buckets is None else buckets)
+        self.mesh = mesh
+        if mesh is not None:
+            mesh.validate(self.capacity)
+        self._state = eng.fleet_stream_init(
+            jnp.zeros((self.capacity, self.num_fns), jnp.float32),
+            self.step_windows,
+            self.config,
+            mesh=mesh,
+        )
+        self._slot_node: list = [-1] * self.capacity   # slot -> node (-1 free)
+        self._node_slot: dict = {}                     # node -> slot
+        self.ticks = 0
+        self.admits = 0
+        self.releases = 0
+
+    # -- pool state --------------------------------------------------------
+
+    @property
+    def state(self):
+        """Live engine state (capacity-shaped ``FleetStreamState``)."""
+        return self._state
+
+    @property
+    def free_slots(self) -> int:
+        """Number of unclaimed slots."""
+        return self._slot_node.count(-1)
+
+    @property
+    def live_nodes(self) -> tuple:
+        """Nodes currently holding slots, in slot order."""
+        return tuple(n for n in self._slot_node if n != -1)
+
+    def slot_of(self, node) -> int:
+        """Slot index currently held by ``node`` (raises if none)."""
+        try:
+            return self._node_slot[node]
+        except KeyError:
+            raise ValueError(f"node {node!r} holds no slot") from None
+
+    def estimates(self) -> dict:
+        """``node -> (M,)`` current Kalman power estimate for live nodes."""
+        x = np.asarray(jax.device_get(self._state.kalman.x))
+        return {node: x[slot] for node, slot in self._node_slot.items()}
+
+    def compile_counts(self) -> dict:
+        """Jit cache sizes of the serving hot paths (retrace diagnostics).
+
+        Snapshot before and after a serving run; after ``warmup()`` the
+        deltas must be zero under any churn pattern (``-1`` when the
+        private jit cache counter is unavailable — the retracing *behavior*
+        is what the tests pin)."""
+
+        def sz(fn):
+            try:
+                return int(fn._cache_size())
+            except Exception:
+                return -1
+
+        return {
+            "fleet_step": sz(self.eng.fleet_step),
+            "slot_reset": sz(self.eng.fleet_stream_reset_slots),
+            "bucket_init": sz(self.eng._bucket_init_solve),
+        }
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def warmup(self) -> dict:
+        """Pre-compile every serving code path at the pool's shapes.
+
+        One dummy ``fleet_step`` (on a scratch state — the live state is
+        never advanced), one dummy slot reset, and every bucket's init
+        solver (``warm_bucket_solvers``).  After this, admits, releases,
+        dropped windows, and rag patterns are all pure data — zero
+        retraces for the pool's lifetime (until ``reshard``, which
+        deliberately compiles once per new mesh).  Returns the post-warmup
+        ``compile_counts`` snapshot."""
+        eng = self.eng
+        cap, m = self.capacity, self.num_fns
+        zf = lambda shape: jnp.zeros(shape, jnp.float32)  # noqa: E731
+        eng.warm_bucket_solvers(m, self.config, buckets=self.buckets)
+        scratch = eng.fleet_stream_init(
+            zf((cap, m)), self.step_windows, self.config, mesh=self.mesh
+        )
+        step = eng.FleetStep(
+            c=zf((cap, m)), w=zf((cap,)), a=zf((cap, m)),
+            lat_sum=zf((cap, m)), lat_sumsq=zf((cap, m)), valid=zf((cap,)),
+        )
+        scratch, att = eng.fleet_step(
+            scratch, step, config=self.config, mesh=self.mesh
+        )
+        scratch = eng.fleet_stream_reset_slots(
+            scratch, zf((cap,)), zf((cap, m)), mesh=self.mesh
+        )
+        jax.block_until_ready((scratch, att))
+        return self.compile_counts()
+
+    def admit(self, node, init_c=None, init_w=None, *, x0=None) -> int:
+        """Claim the lowest free slot for ``node``; returns the slot index.
+
+        Either pass the node's init block (``init_c`` (n, M) contribution
+        rows + ``init_w`` (n,) idle-adjusted power — solved to an X_0 row
+        through the pre-warmed bucketed solver) or an explicit ``x0`` (M,)
+        row (warm handoff from a previous session / another node).  The
+        slot's Kalman row is re-initialized and its ring-buffer rows and
+        partial-step accumulators are zeroed (``fleet_stream_reset_slots``)
+        so nothing a previous tenant wrote in the current partial step can
+        leak into the new tenant's first boundary update.  Raises
+        ``ValueError`` when the node already holds a slot or the pool is
+        full (queue admissions with ``serving.scheduler.SlotAdmissionQueue``).
+        """
+        if node in self._node_slot:
+            raise ValueError(
+                f"node {node!r} already holds slot {self._node_slot[node]}"
+            )
+        try:
+            slot = self._slot_node.index(-1)
+        except ValueError:
+            raise ValueError(
+                f"slot pool full (capacity {self.capacity}); release a node first"
+            ) from None
+        if x0 is None:
+            if init_c is None or init_w is None:
+                raise ValueError("admit needs either x0= or an (init_c, init_w) block")
+            x0 = self.eng.bucketed_initial_estimate(
+                init_c, init_w, self.config, buckets=self.buckets
+            )
+        x0_full = np.zeros((self.capacity, self.num_fns), np.float32)
+        x0_full[slot] = np.asarray(x0, np.float32)
+        flags = np.zeros((self.capacity,), np.float32)
+        flags[slot] = 1.0
+        self._state = self.eng.fleet_stream_reset_slots(
+            self._state, jnp.asarray(flags), jnp.asarray(x0_full), mesh=self.mesh
+        )
+        self._slot_node[slot] = node
+        self._node_slot[node] = slot
+        self.admits += 1
+        return slot
+
+    def release(self, node) -> int:
+        """Release ``node``'s slot back to the pool; returns the slot index.
+
+        Purely host-side bookkeeping: from the next tick the slot is
+        simply absent from ``feeds`` (``valid = 0``), so its Kalman row
+        freezes and its attribution is exactly zero until a new tenant
+        claims — and thereby resets — the slot."""
+        slot = self._node_slot.pop(node, None)
+        if slot is None:
+            raise ValueError(f"node {node!r} holds no slot")
+        self._slot_node[slot] = -1
+        self.releases += 1
+        return slot
+
+    def step(self, feeds: dict):
+        """Advance the pool one telemetry tick; returns ``TickAttribution``.
+
+        ``feeds`` maps ``node -> (c, w, a, lat_sum, lat_sumsq)`` per-tick
+        rows ((M,), scalar, (M,), (M,), (M,)) for the nodes that produced
+        this window.  A live node absent from ``feeds`` dropped the window
+        (``valid = 0`` for this tick only); free slots are always invalid.
+        The returned attribution arrays are slot-major (capacity rows) —
+        map them back with ``slot_of``.  Raises ``ValueError`` on a feed
+        for a node holding no slot."""
+        cap, m = self.capacity, self.num_fns
+        c = np.zeros((cap, m), np.float32)
+        w = np.zeros((cap,), np.float32)
+        a = np.zeros((cap, m), np.float32)
+        ls = np.zeros((cap, m), np.float32)
+        lq = np.zeros((cap, m), np.float32)
+        valid = np.zeros((cap,), np.float32)
+        for node, (c_i, w_i, a_i, ls_i, lq_i) in feeds.items():
+            slot = self._node_slot.get(node)
+            if slot is None:
+                raise ValueError(f"feed for node {node!r} which holds no slot")
+            c[slot] = np.asarray(c_i, np.float32)
+            w[slot] = np.float32(w_i)
+            a[slot] = np.asarray(a_i, np.float32)
+            ls[slot] = np.asarray(ls_i, np.float32)
+            lq[slot] = np.asarray(lq_i, np.float32)
+            valid[slot] = 1.0
+        step = self.eng.FleetStep(
+            c=jnp.asarray(c), w=jnp.asarray(w), a=jnp.asarray(a),
+            lat_sum=jnp.asarray(ls), lat_sumsq=jnp.asarray(lq),
+            valid=jnp.asarray(valid),
+        )
+        self._state, att = self.eng.fleet_step(
+            self._state, step, config=self.config, mesh=self.mesh
+        )
+        self.ticks += 1
+        return att
+
+    def reshard(self, mesh) -> None:
+        """Move the live pool onto a different device mesh mid-stream.
+
+        Checkpoint-to-host + ``sharding.put`` re-placement
+        (``distributed.sharding.reshard``); values are bit-identical across
+        the move, and subsequent steps compile once against the new mesh
+        (the one deliberate compile of mesh elasticity).  ``mesh=None``
+        scales down to the default device."""
+        from repro.distributed.sharding import reshard as _reshard
+
+        if mesh is not None:
+            mesh.validate(self.capacity)
+        self._state = _reshard(self._state, mesh)
+        self.mesh = mesh
 
 
 def fleet_profile_batched(

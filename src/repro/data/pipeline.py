@@ -75,8 +75,12 @@ def prefetch_iterator(
     only ever sees device-resident elements.
 
     Exceptions raised by ``it`` or ``transfer`` re-raise at the consuming
-    ``next()`` call; the thread is a daemon, so an abandoned iterator never
-    blocks interpreter exit.
+    ``next()`` call with the producer's original traceback attached.  When
+    the consumer abandons the iterator early (``close()``/GC of the
+    generator, or an exception in the consuming loop), the producer thread
+    is signalled to stop and exits promptly instead of blocking forever on
+    the full queue; it is also a daemon, so even an unsignalled producer
+    never blocks interpreter exit.
     """
     import queue
     import threading
@@ -85,24 +89,42 @@ def prefetch_iterator(
         raise ValueError(f"prefetch size must be >= 1, got {size}")
     q: "queue.Queue[tuple[Any, Any]]" = queue.Queue(maxsize=size)
     done = object()
+    stop = threading.Event()
+
+    def _put(entry: tuple[Any, Any]) -> bool:
+        # Bounded-blocking put: wake up periodically to notice an abandoned
+        # consumer (the queue is full and nobody will ever drain it).
+        while not stop.is_set():
+            try:
+                q.put(entry, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def _produce() -> None:
         try:
             for item in it:
-                q.put((item if transfer is None else transfer(item), None))
+                if not _put((item if transfer is None else transfer(item), None)):
+                    return
         except BaseException as e:  # noqa: BLE001 - re-raised on the consumer
-            q.put((done, e))
+            _put((done, e))
         else:
-            q.put((done, None))
+            _put((done, None))
 
-    threading.Thread(target=_produce, daemon=True).start()
-    while True:
-        item, err = q.get()
-        if item is done:
-            if err is not None:
-                raise err
-            return
-        yield item
+    threading.Thread(
+        target=_produce, daemon=True, name="prefetch-producer"
+    ).start()
+    try:
+        while True:
+            item, err = q.get()
+            if item is done:
+                if err is not None:
+                    raise err
+                return
+            yield item
+    finally:
+        stop.set()
 
 
 def batch_iterator(

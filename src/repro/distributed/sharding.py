@@ -351,6 +351,28 @@ def fleet_mesh_auto(num_nodes: int) -> FleetMesh | None:
     return fm if fm.num_devices > 1 else None
 
 
+def reshard(tree: Any, mesh: FleetMesh | None = None) -> Any:
+    """Re-place a live pytree onto a (new) mesh mid-stream — mesh elasticity.
+
+    The checkpoint-and-resume primitive for a device set that changes under
+    a running stream (devices added, removed, or re-fitted into a different
+    ``FleetMesh``): every leaf is pulled to host (``jax.device_get`` — the
+    checkpoint barrier; safe on donated state, which the caller rebinds
+    anyway) and re-placed with ``mesh.put`` — leading axes sharded over the
+    new node axis, scalars replicated.  ``mesh=None`` re-places the state
+    unsharded on the default device (scaling *down* to a single device).
+
+    Values are bit-identical across the move; only the next ``fleet_step``
+    trace changes (the mesh is a static jit arg), so a resharded stream is
+    pinned at 1e-5 against an uninterrupted run — one deliberate compile
+    per new mesh, never a per-tick retrace (tests/test_slot_serving.py).
+    """
+    host = jax.device_get(tree)
+    if mesh is None:
+        return jax.tree.map(jnp.asarray, host)
+    return mesh.put(host)
+
+
 class FleetTotals(NamedTuple):
     """Fleet-wide conserved-attribution totals (one controller-level view).
 

@@ -620,6 +620,7 @@ class EnergyFirstControlPlane:
         seeds: list[int] | None = None,
         on_tick=None,
         mesh="auto",
+        slots: int | None = None,
         mode: str | None = None,
         prefetch: int = 2,
         control: "ControlLoop | None" = None,
@@ -660,6 +661,13 @@ class EnergyFirstControlPlane:
             multi-device controller shards transparently; pass an explicit
             ``FleetMesh`` to pin the layout or ``None`` to force the
             single-device path.
+          slots: optional slot-pool capacity — when set, the session runs
+            on a ``core.profiler.SlotFleetSession`` of this many slots
+            (must be >= the fleet size).  Nodes claim slots at bootstrap
+            and release them as their streams end, spare slots stay masked
+            invalid, and the ``"auto"`` mesh is built over the *capacity*
+            so elastic fleets shard without retracing.  Numerics match the
+            plain session at 1e-5.
           mode: ``"pure"`` | ``"combined"`` (§4.3) — defaults to the
             profiler config's mode.  Combined needs chip telemetry on
             every node; per-node counter models are fit on the N_init
@@ -695,7 +703,7 @@ class EnergyFirstControlPlane:
                 raise ValueError(f"mesh must be 'auto', None, or a FleetMesh; got {mesh!r}")
             from repro.distributed.sharding import fleet_mesh_auto
 
-            mesh = fleet_mesh_auto(len(traces))
+            mesh = fleet_mesh_auto(len(traces) if slots is None else slots)
         cfg = self.profiler.config
         mode = cfg.mode if mode is None else mode
         if mode not in ("pure", "combined"):
@@ -827,7 +835,7 @@ class EnergyFirstControlPlane:
                 has_chip=tels[0].chip_power is not None,
                 has_cp=has_cp_flags[0],
                 on_tick=_on_tick, on_bootstrap=_on_bootstrap,
-                mesh=mesh,
+                mesh=mesh, slots=slots,
                 fn_counters=fn_counters, counter_model=counter_model,
                 window_features=window_feats,
             )

@@ -143,6 +143,15 @@ def _fleet_activity(
 
 
 class NodeSimulator:
+    """Ground-truth node simulator: invocation traces -> power telemetry.
+
+    Synthesizes the paper's measurement substrate — per-function activity,
+    a platform power model, and imperfect sensors (noise, lag, resampling)
+    — so every profiling path can be validated against known per-function
+    truth.  ``simulate`` covers one node, ``simulate_fleet`` a batch, and
+    ``stream_fleet`` yields the same fleet telemetry tick-by-tick (bitwise
+    identical under matched seeds) for the streaming/serving paths."""
+
     def __init__(self, registry: FunctionRegistry, config: SimulatorConfig = SimulatorConfig()):
         self.registry = registry
         self.config = config
@@ -489,3 +498,66 @@ class NodeSimulator:
         without = self.simulate(drop_function(trace, fn), seed=seed)
         n_inv = trace.invocations_of(fn)
         return (full.measured_energy_j - without.measured_energy_j) / max(n_inv, 1)
+
+
+class NodeSpan(NamedTuple):
+    """One node's tenancy in a churn schedule: ``[join, leave)`` in ticks."""
+
+    node: int
+    join: int
+    leave: int
+
+
+def churn_schedule(
+    num_nodes: int,
+    horizon: int,
+    *,
+    capacity: int,
+    seed: int = 0,
+    mean_lifetime: float = 40.0,
+    mean_gap: float = 4.0,
+    min_lifetime: int = 4,
+) -> list[NodeSpan]:
+    """Generate a join/leave schedule for slot-pool serving benchmarks.
+
+    Nodes arrive as a Poisson-ish process (exponential inter-arrival gaps of
+    mean ``mean_gap`` ticks), live for an exponential lifetime of mean
+    ``mean_lifetime`` ticks (floored at ``min_lifetime``), and leave.  The
+    generator is a tiny host-side event simulation that never lets more than
+    ``capacity`` nodes be live at once: an arrival that would exceed the
+    pool waits for the earliest scheduled departure, which is exactly what a
+    ``SlotAdmissionQueue`` in front of a full ``SlotFleetSession`` does.
+
+    Spans are clipped to ``[0, horizon)``; nodes whose join would land at or
+    past the horizon are dropped.  Returns spans sorted by join tick — ragged
+    by construction, the stress case for length-bucketed packing.
+    """
+    if num_nodes <= 0:
+        raise ValueError(f"num_nodes must be positive; got {num_nodes}")
+    if capacity <= 0:
+        raise ValueError(f"capacity must be positive; got {capacity}")
+    if horizon <= 0:
+        raise ValueError(f"horizon must be positive; got {horizon}")
+    rng = np.random.default_rng(seed)
+    # Min-heap of scheduled departure ticks for currently-live nodes.
+    import heapq
+
+    departures: list[int] = []
+    spans: list[NodeSpan] = []
+    t = 0.0
+    for node in range(num_nodes):
+        t += rng.exponential(mean_gap)
+        join = int(t)
+        while departures and departures[0] <= join:
+            heapq.heappop(departures)
+        if len(departures) >= capacity:
+            # Pool full: this join queues until the earliest leave.
+            join = max(join, heapq.heappop(departures))
+        if join >= horizon:
+            break
+        life = max(int(rng.exponential(mean_lifetime)), min_lifetime)
+        leave = min(join + life, horizon)
+        heapq.heappush(departures, leave)
+        spans.append(NodeSpan(node, join, leave))
+        t = max(t, float(join))
+    return spans
