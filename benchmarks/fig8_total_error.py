@@ -1,5 +1,9 @@
 """Fig. 8: Total-Error (measured vs predicted total power) stays small on
-bursty and dynamic-active-set workloads, and across a 35-workload sweep."""
+bursty and dynamic-active-set workloads, and across a 35-workload sweep.
+
+The sweep runs as ONE mixed desktop/server/edge fleet batch (per-node
+power-model parameters stacked as data) and pins itself at 1e-5 against
+the per-platform batches it replaced."""
 
 from __future__ import annotations
 
@@ -32,29 +36,56 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
     dynamic = concat_traces(first, second)
     e_dynamic = _total_error(cp, dynamic)
 
-    # (c) sweep: n workloads x 3 platforms, each platform's workloads
-    # profiled as one fleet batch through the batched engine (one vectorized
-    # simulation pass + one batched disaggregation per platform).
+    # (c) sweep: n workloads x 3 platforms — ONE mixed heterogeneous fleet
+    # batch (per-node power-model parameters stacked as data, see
+    # docs/architecture.md "Heterogeneous fleets"): one vectorized
+    # simulation pass and one batched disaggregation for the whole sweep,
+    # pinned at 1e-5 against the one-batch-per-platform path it replaced.
     n_sweep = 3 if smoke else (6 if quick else 35)
-    errs = []
-    for platform in ("desktop", "server", "edge"):
-        cpp = control_plane(platform)
-        ts = [
-            generate_trace(
-                reg,
-                WorkloadConfig(
-                    duration_s=duration, load=0.5 + 0.5 * (seed % 3), seed=10 + seed,
-                    arrival="poisson" if seed % 2 else "bursty",
-                ),
+    per_platform = n_sweep // 3 + 1
+    plats, ts, seeds = [], [], []
+    for p_i, platform in enumerate(("desktop", "server", "edge")):
+        for k in range(per_platform):
+            ts.append(
+                generate_trace(
+                    reg,
+                    WorkloadConfig(
+                        duration_s=duration, load=0.5 + 0.5 * (k % 3), seed=10 + k,
+                        arrival="poisson" if k % 2 else "bursty",
+                    ),
+                )
             )
-            for seed in range(n_sweep // 3 + 1)
-        ]
-        errs.extend(p.report.total_error for p in cpp.profile_fleet(ts))
-    errs = np.asarray(errs)
+            plats.append(platform)
+            seeds.append(100 + 10 * p_i + k)
+    mixed = cp.profile_fleet(ts, seeds=seeds, platforms=plats)
+    errs = np.asarray([p.report.total_error for p in mixed])
+
+    # The hetero pin: per-platform batches (same traces, same sensor
+    # seeds) must agree with the mixed batch's rows.
+    pin = 0.0
+    for platform in ("desktop", "server", "edge"):
+        idx = [i for i, q in enumerate(plats) if q == platform]
+        refs = control_plane(platform).profile_fleet(
+            [ts[i] for i in idx], seeds=[seeds[i] for i in idx]
+        )
+        for i, ref in zip(idx, refs):
+            a = np.asarray(mixed[i].report.spectrum.j_indiv)
+            b = np.asarray(ref.report.spectrum.j_indiv)
+            pin = max(
+                pin,
+                float(np.max(np.abs(a - b) / (np.abs(b) + 1e-6))),
+                abs(errs[i] - ref.report.total_error),
+            )
+    if pin > 1e-5:
+        raise ValueError(
+            f"mixed-fleet sweep diverged from per-platform batches: {pin:.3g}"
+        )
     return {
         "bursty_total_error": e_bursty,
         "dynamic_set_total_error": e_dynamic,
         "sweep_median": float(np.median(errs)),
         "sweep_p90": float(np.quantile(errs, 0.9)),
         "frac_below_10pct": float(np.mean(errs < 0.10)),
+        "sweep_nodes": len(ts),
+        "hetero_pin_maxdiff": pin,
     }

@@ -1,0 +1,96 @@
+"""Heterogeneous mixed-platform fleet: one batch, platform mix as data.
+
+A mixed server/desktop/edge fleet runs through the live streaming path
+(``profile_fleet``) in combined mode — per-node power-model parameters
+stacked as (B,) arrays, per-node sensor presets grouped by config, and
+the chipless edge nodes riding the same combined batch (their chip series
+is identically zero, degenerating their target to pure mode as data).
+
+Metrics:
+
+- ``mixed_seconds``        : wall clock of the measured mixed-fleet run
+- ``windows_per_sec``      : fleet windows ingested per second (B * N / s)
+- ``pin_maxdiff``          : max divergence vs the per-platform batches
+                             (must stay <= 1e-5; raises otherwise)
+- ``retraces_after_warmup``: ``fleet_step`` jit-cache growth across the
+                             measured run — the run.py smoke gate fails
+                             on any nonzero value (a heterogeneous fleet
+                             must not cost extra traces: the platform mix
+                             is data, not shapes)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, control_plane
+from repro.workload.azure import WorkloadConfig, generate_trace
+from repro.workload.functions import paper_functions
+
+PLATFORMS = ("server", "desktop", "edge")
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Time the mixed-platform streaming fleet and pin it against the
+    per-platform batches (``smoke``: tiny shapes for the CI rot gate)."""
+    reg = paper_functions()
+    duration = 120.0 if smoke else (300.0 if quick else 900.0)
+    b = 6 if smoke else (9 if quick else 12)
+    cp = control_plane("server")
+    plats = [PLATFORMS[i % len(PLATFORMS)] for i in range(b)]
+    ts = [
+        generate_trace(
+            reg,
+            WorkloadConfig(
+                duration_s=duration, load=0.5 + 0.25 * (i % 3), seed=20 + i,
+                arrival="poisson" if i % 2 else "bursty",
+            ),
+        )
+        for i in range(b)
+    ]
+    seeds = [50 + i for i in range(b)]
+
+    from repro.core.batched_engine import fleet_step
+
+    cache_size = getattr(fleet_step, "_cache_size", lambda: None)
+    # Warmup: compiles the streaming step for this fleet shape.
+    cp.profile_fleet(ts, seeds=seeds, platforms=plats, mode="combined")
+    traces_warm = cache_size()
+    with Timer() as t:
+        mixed = cp.profile_fleet(ts, seeds=seeds, platforms=plats, mode="combined")
+    retraces = cache_size() - traces_warm if traces_warm is not None else -1
+
+    # Pin: each node against its own single-platform batch (chipless edge
+    # nodes against the pure path they must degenerate to).
+    pin = 0.0
+    for platform in PLATFORMS:
+        idx = [i for i, q in enumerate(plats) if q == platform]
+        mode = "combined" if platform != "edge" else "pure"
+        refs = control_plane(platform).profile_fleet(
+            [ts[i] for i in idx], seeds=[seeds[i] for i in idx], mode=mode
+        )
+        for i, ref in zip(idx, refs):
+            a = np.asarray(mixed[i].report.spectrum.j_indiv)
+            r = np.asarray(ref.report.spectrum.j_indiv)
+            pin = max(
+                pin,
+                float(np.max(np.abs(a - r) / (np.abs(r) + 1e-6))),
+                abs(mixed[i].report.total_error - ref.report.total_error),
+            )
+    if pin > 1e-5:
+        raise ValueError(
+            f"mixed fleet diverged from per-platform batches: {pin:.3g}"
+        )
+
+    return {
+        "fleet_shape": f"B{b} N{int(duration)} ({'/'.join(PLATFORMS)})",
+        "mixed_seconds": t.seconds,
+        "windows_per_sec": b * duration / t.seconds,
+        "pin_maxdiff": pin,
+        "retraces_after_warmup": retraces,
+    }
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k:24s} {v:.4g}" if isinstance(v, float) else f"{k:24s} {v}")

@@ -36,6 +36,7 @@ MODULES = [
     ("combined_fleet", "Perf: combined-mode (§4.3) chip/rest split overhead"),
     ("ingest_pipeline", "Perf: telemetry ingest — batched front-end + prefetch overlap"),
     ("control_loop", "Closed-loop control: cap overshoot, deferral cost, retrain recovery"),
+    ("hetero_fleet", "Serving: mixed-platform fleet — one batch, 1e-5 pin + zero-retrace gate"),
     ("slot_serving", "Serving: slot-pool churn — ticks/sec + zero-retrace gate"),
     ("kernel_bench", "Perf: kernel path"),
 ]

@@ -48,6 +48,7 @@ SURFACES = (
     "benchmarks.ingest_pipeline",
     "benchmarks.control_loop",
     "benchmarks.slot_serving",
+    "benchmarks.hetero_fleet",
 )
 # Collect every undocumented symbol across ALL surfaces before failing, so
 # one broken module doesn't hide the rest of the report.
@@ -94,11 +95,12 @@ if missing:
 print(f"benchmark smoke OK ({len(results)} modules, strict well-formed JSON)")
 EOF
 
-echo "== sharded + ragged + combined fleet + telemetry front-end + control-loop + slot-serving pins (forced 8-device host mesh, own subprocess) =="
+echo "== sharded + ragged + combined + hetero fleet + telemetry front-end + control-loop + slot-serving pins (forced 8-device host mesh, own subprocess) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m pytest -q tests/test_sharded_fleet.py tests/test_ragged_fleet.py \
   tests/test_combined_fleet.py tests/test_telemetry_frontend.py \
-  tests/test_control_loop.py tests/test_slot_serving.py -m "not slow"
+  tests/test_control_loop.py tests/test_slot_serving.py \
+  tests/test_hetero_fleet.py -m "not slow"
 
 echo "== tier-1 suite =="
 python -m pytest -x -q "$@"

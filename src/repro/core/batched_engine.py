@@ -113,6 +113,15 @@ class FleetInputs(NamedTuple):
     contribute exactly zero energy and masked-out steps freeze the Kalman
     state (see ``pack_fleet_inputs`` and docs/architecture.md,
     "Ragged fleets").
+
+    ``fn_mask`` makes the *function* axis ragged too: a ``(B, M)`` per-node
+    validity mask over the padded function axis (heterogeneous fleets whose
+    nodes host different ``num_fns`` pad M to the fleet max).  Masked
+    functions are folded to zero contributions/invocations before any
+    engine stage and their rows of every estimate/attribution output are
+    forced to exactly zero — a padded function can never absorb energy.
+    Like ``mask`` it is data, not shape: mixes with different per-node
+    function counts share one trace.
     """
 
     c: Array          # (B, S, n_w, M) contribution seconds per tick
@@ -121,6 +130,7 @@ class FleetInputs(NamedTuple):
     lat_sum: Array    # (B, S, M) summed latency per step
     lat_sumsq: Array  # (B, S, M) summed squared latency per step
     mask: Array | None = None  # (B, S, n_w) tick validity; None = all real
+    fn_mask: Array | None = None  # (B, M) fn validity; None = all fns real
 
 
 class FleetResult(NamedTuple):
@@ -254,18 +264,59 @@ def _apply_mask(inputs: FleetInputs) -> FleetInputs:
     through here, so the three paths cannot disagree on what a masked tick
     means.  Because masking is a data-dependent multiply, not a shape
     change, differing rag patterns reuse one compiled trace.
+
+    The fn-axis mask folds here too: masked functions get zeroed
+    contribution columns and invocation/latency statistics, so they feed no
+    gram column and no latency moment — to the update rule they are
+    functions that never run.  (Their output rows are additionally forced
+    to zero by ``_mask_fn_axis`` on the way out of every engine.)
     """
-    if inputs.mask is None:
+    if inputs.mask is None and inputs.fn_mask is None:
         return inputs
-    m = inputs.mask.astype(inputs.c.dtype)
-    step_live = (jnp.sum(m, axis=-1) > 0).astype(inputs.a.dtype)[..., None]
+    c, w = inputs.c, inputs.w
+    a, ls, lq = inputs.a, inputs.lat_sum, inputs.lat_sumsq
+    if inputs.fn_mask is not None:
+        fm = inputs.fn_mask.astype(c.dtype)
+        c = c * fm[:, None, None, :]
+        a = a * fm[:, None, :]
+        ls = ls * fm[:, None, :]
+        lq = lq * fm[:, None, :]
+    if inputs.mask is not None:
+        m = inputs.mask.astype(c.dtype)
+        step_live = (jnp.sum(m, axis=-1) > 0).astype(a.dtype)[..., None]
+        c = c * m[..., None]
+        w = w * m
+        a = a * step_live
+        ls = ls * step_live
+        lq = lq * step_live
     return FleetInputs(
-        c=inputs.c * m[..., None],
-        w=inputs.w * m,
-        a=inputs.a * step_live,
-        lat_sum=inputs.lat_sum * step_live,
-        lat_sumsq=inputs.lat_sumsq * step_live,
-        mask=inputs.mask,
+        c=c, w=w, a=a, lat_sum=ls, lat_sumsq=lq,
+        mask=inputs.mask, fn_mask=inputs.fn_mask,
+    )
+
+
+def _mask_fn_axis(result: FleetResult, fn_mask: Array | None) -> FleetResult:
+    """Force masked functions' output rows to exactly zero (identity if dense).
+
+    ``_apply_mask`` already removes masked functions from every input
+    statistic, so their estimates sit at the NNLS/Kalman zero fixed point
+    and their attribution is a product with a zero contribution column —
+    this fold turns that argument into a guarantee: x0, trajectory, final
+    estimate, and tick attribution are *exactly* 0.0 on masked rows
+    regardless of solver iteration counts.  The Kalman ``state`` is left
+    untouched (it is internal filter state; its masked rows never reach an
+    output unmasked).
+    """
+    if fn_mask is None:
+        return result
+    fm = fn_mask.astype(result.x_final.dtype)
+    return result._replace(
+        x_final=result.x_final * fm,
+        x_trajectory=result.x_trajectory * fm[:, None, :],
+        x0=result.x0 * fm,
+        tick_power=None
+        if result.tick_power is None
+        else result.tick_power * fm[:, None, :],
     )
 
 
@@ -392,9 +443,12 @@ def run_fleet(
         tick_power, unattributed = tick_attribution(
             inputs.c, inputs.w, traj, delta=config.delta
         )
-    return FleetResult(
-        x_final=final.x, x_trajectory=traj, x0=x0,
-        tick_power=tick_power, unattributed=unattributed, state=final,
+    return _mask_fn_axis(
+        FleetResult(
+            x_final=final.x, x_trajectory=traj, x0=x0,
+            tick_power=tick_power, unattributed=unattributed, state=final,
+        ),
+        inputs.fn_mask,
     )
 
 
@@ -445,9 +499,12 @@ def run_fleet_gram(
         tick_power, unattributed = tick_attribution(
             inputs.c, inputs.w, traj, delta=config.delta
         )
-    return FleetResult(
-        x_final=final.x, x_trajectory=traj, x0=x0,
-        tick_power=tick_power, unattributed=unattributed, state=final,
+    return _mask_fn_axis(
+        FleetResult(
+            x_final=final.x, x_trajectory=traj, x0=x0,
+            tick_power=tick_power, unattributed=unattributed, state=final,
+        ),
+        inputs.fn_mask,
     )
 
 
@@ -503,9 +560,12 @@ def run_fleet_sequential(
         tick_power, unattributed = tick_attribution(
             inputs.c, inputs.w, traj, delta=config.delta
         )
-    return FleetResult(
-        x_final=state.x, x_trajectory=traj, x0=x0,
-        tick_power=tick_power, unattributed=unattributed, state=state,
+    return _mask_fn_axis(
+        FleetResult(
+            x_final=state.x, x_trajectory=traj, x0=x0,
+            tick_power=tick_power, unattributed=unattributed, state=state,
+        ),
+        inputs.fn_mask,
     )
 
 
@@ -1013,9 +1073,12 @@ def run_fleet_stream(
         tick_power, unattributed = tick_attribution(
             inputs.c, inputs.w, traj, delta=config.delta
         )
-    return FleetResult(
-        x_final=final.kalman.x, x_trajectory=traj, x0=x0,
-        tick_power=tick_power, unattributed=unattributed, state=final.kalman,
+    return _mask_fn_axis(
+        FleetResult(
+            x_final=final.kalman.x, x_trajectory=traj, x0=x0,
+            tick_power=tick_power, unattributed=unattributed, state=final.kalman,
+        ),
+        inputs.fn_mask,
     )
 
 
@@ -1072,6 +1135,7 @@ def pack_fleet_inputs(
     *,
     step_windows: int,
     lengths: Sequence[int] | Array | None = None,
+    fn_lengths: Sequence[int] | Array | None = None,
     strict: bool = False,
 ) -> FleetInputs:
     """Group per-window arrays into (B, S, n_w, ...) Kalman-step blocks,
@@ -1097,6 +1161,11 @@ def pack_fleet_inputs(
       step_windows: n_w, ticks per Kalman step.
       lengths: per-node real window counts; ``None`` means every node has
         all N windows.
+      fn_lengths: per-node real *function* counts over the padded M axis
+        (heterogeneous fleets whose nodes host different function sets pad
+        M to the fleet max); ``None`` means every node hosts all M
+        functions.  Sets ``FleetInputs.fn_mask`` so the engines zero the
+        padded functions' statistics and output rows exactly.
       strict: require the old equal-length contract — every node must have
         exactly N windows and N must divide ``step_windows`` evenly;
         anything ragged raises ``ValueError`` instead of being masked.
@@ -1151,6 +1220,24 @@ def pack_fleet_inputs(
     )                                                # (B, n_used) bool
     mask = tick_valid.reshape(b, s, step_windows).astype(jnp.float32)
     mv = mask[..., None]
+    fn_mask = None
+    if fn_lengths is not None:
+        import numpy as np
+
+        fn_lens = np.asarray(fn_lengths, np.int64)
+        if fn_lens.shape != (b,):
+            raise ValueError(
+                f"fn_lengths must have shape ({b},), got {fn_lens.shape}"
+            )
+        if np.any(fn_lens < 0) or np.any(fn_lens > m):
+            raise ValueError(
+                f"fn_lengths must lie in [0, {m}] (the padded function "
+                f"axis); got {fn_lens.tolist()}"
+            )
+        if np.any(fn_lens != m):
+            fn_mask = jnp.asarray(
+                np.arange(m)[None, :] < fn_lens[:, None], jnp.float32
+            )
     grp = lambda x: x[:, :n_used].reshape(b, s, step_windows, m)
     inputs = FleetInputs(
         c=grp(c_windows) * mv,
@@ -1159,6 +1246,7 @@ def pack_fleet_inputs(
         lat_sum=(grp(lat_sum_w) * mv).sum(axis=2),
         lat_sumsq=(grp(lat_sumsq_w) * mv).sum(axis=2),
         mask=None if bool(jnp.all(tick_valid)) else mask,
+        fn_mask=fn_mask,
     )
     return inputs
 
@@ -1357,6 +1445,7 @@ def _pad_steps(inputs: FleetInputs, s_to: int) -> FleetInputs:
         lat_sum=jnp.concatenate([inputs.lat_sum, zf((b, d, m))], axis=1),
         lat_sumsq=jnp.concatenate([inputs.lat_sumsq, zf((b, d, m))], axis=1),
         mask=jnp.concatenate([mask, zf((b, d, n_w))], axis=1),
+        fn_mask=inputs.fn_mask,
     )
 
 

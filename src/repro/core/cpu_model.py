@@ -159,20 +159,7 @@ def merge_models(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("iters",))
-def fit_linear_svr(
-    features: Array,
-    power: Array,
-    lam: float = 1e-4,
-    epsilon: float = 0.5,
-    lr: float = 3e-2,
-    *,
-    iters: int = 20_000,
-) -> LinearPowerModel:
-    """Linear epsilon-SVR via subgradient descent on the primal.
-
-    loss = mean(max(|Xw + b - y| - eps, 0)) + lam/2 ||w||^2
-    """
+def _fit_svr_one(features: Array, power: Array, lam, epsilon, lr, iters) -> LinearPowerModel:
     n, f = features.shape
     x_mean = jnp.mean(features, axis=0)
     x_std = jnp.maximum(jnp.std(features, axis=0), 1e-8)
@@ -198,6 +185,35 @@ def fit_linear_svr(
     w_raw = w / x_std
     b_raw = b - jnp.sum(w * x_mean / x_std)
     return LinearPowerModel(weights=w_raw, bias=b_raw)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def fit_linear_svr(
+    features: Array,
+    power: Array,
+    lam: float = 1e-4,
+    epsilon: float = 0.5,
+    lr: float = 3e-2,
+    *,
+    iters: int = 20_000,
+) -> LinearPowerModel:
+    """Linear epsilon-SVR via subgradient descent on the primal.
+
+    loss = mean(max(|Xw + b - y| - eps, 0)) + lam/2 ||w||^2
+
+    Like ``fit_ridge``, the trainer is fleet-batched: ``(B, N, F)`` features
+    with ``(B, N)`` power fit one independent model per node by vmapping the
+    whole subgradient loop — a heterogeneous fleet trains every node's SVR
+    in one jitted call, and each row matches the sequential per-node fit.
+
+    Returns:
+      ``LinearPowerModel`` with (F,)/() leaves, or (B, F)/(B,) when batched.
+    """
+    if features.ndim == 3:
+        return jax.vmap(_fit_svr_one, in_axes=(0, 0, None, None, None, None))(
+            features, power, lam, epsilon, lr, iters
+        )
+    return _fit_svr_one(features, power, lam, epsilon, lr, iters)
 
 
 def _dynamic_power(model: LinearPowerModel, features: Array) -> Array:

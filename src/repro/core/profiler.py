@@ -294,7 +294,11 @@ def prepare_combined_fleet(
     Args:
       config: profiler configuration (delta + segment plan come from here).
       traces: per-node (fn_id, start, end) invocation arrays.
-      telemetries: per-node ``Telemetry`` — every node needs chip power.
+      telemetries: per-node ``Telemetry`` — at least one node needs chip
+        power.  Chipless nodes (``chip_power is None``, e.g. the edge
+        platform in a mixed fleet) contribute zero feature/observation rows
+        and come out with the zero counter model — their chip-side split is
+        exactly zero, the combined engines' pure-mode fallback.
       num_fns: number of unique functions M.
       duration: segment seconds — one float or a per-node sequence.
       gflops/hbm_gb/mean_latency: (M,) per-function step-counter specs.
@@ -321,10 +325,11 @@ def prepare_combined_fleet(
     gf = jnp.asarray(np.asarray(gflops, np.float32))
     hb = jnp.asarray(np.asarray(hbm_gb, np.float32))
     lat = jnp.asarray(np.asarray(mean_latency, np.float32))
+    has_chip = [tel.chip_power is not None for tel in telemetries]
+    if not any(has_chip):
+        raise ValueError("combined mode needs chip_power on at least one node")
     fn_list, wf_list, feats_init, chip_init = [], [], [], []
     for (fn_id, start, end), tel, (n_i, _, _, _) in zip(traces, telemetries, plans):
-        if tel.chip_power is None:
-            raise ValueError("combined mode needs chip_power on every node")
         c = contrib.contribution_matrix(
             fn_id, start, end, num_fns=num_fns, num_windows=n_i, delta=config.delta
         )
@@ -335,9 +340,22 @@ def prepare_combined_fleet(
                 [wf, jnp.zeros((n_max - n_i, cntr.NUM_FEATURES), wf.dtype)]
             )
         wf_list.append(wf)
-        feats_init.append(wf[:init_n])
-        chip_init.append(tel.chip_power[:init_n])
-    models = cpumod.fit_ridge(jnp.stack(feats_init), jnp.stack(chip_init))
+        if tel.chip_power is None:
+            # Chipless: all-masked fit rows -> the zero counter model.
+            feats_init.append(jnp.zeros((init_n, cntr.NUM_FEATURES), wf.dtype))
+            chip_init.append(jnp.zeros((init_n,), jnp.float32))
+        else:
+            feats_init.append(wf[:init_n])
+            chip_init.append(tel.chip_power[:init_n])
+    if all(has_chip):
+        models = cpumod.fit_ridge(jnp.stack(feats_init), jnp.stack(chip_init))
+    else:
+        fit_mask = jnp.asarray(
+            np.repeat(np.asarray(has_chip, np.float32)[:, None], init_n, axis=1)
+        )
+        models = cpumod.fit_ridge(
+            jnp.stack(feats_init), jnp.stack(chip_init), mask=fit_mask
+        )
     return jnp.stack(fn_list), jnp.stack(wf_list), models
 
 
@@ -399,10 +417,16 @@ class FaasMeterProfiler:
             x_final = x0
 
         # --- 5. Combined mode: X = X_CPU + X_Rest (§4.3), shared helper.
+        # A chipless node (telemetry.chip_power is None — e.g. the edge
+        # platform) degenerates to pure mode: no chip reference means no
+        # counter split and a pure-mode target (``_target_signal`` already
+        # fell back), so a mixed fleet can run combined without per-node
+        # Python branching upstream.
+        combined = cfg.mode == "combined" and telemetry.chip_power is not None
         idle_extra = 0.0
-        if cfg.mode == "combined":
-            if fn_counters is None or counter_model is None or telemetry.chip_power is None:
-                raise ValueError("combined mode needs fn_counters, counter_model, chip_power")
+        if combined:
+            if fn_counters is None or counter_model is None:
+                raise ValueError("combined mode needs fn_counters, counter_model")
             x_cpu, x_cpu_resid = combined_chip_power(
                 counter_model, fn_counters, jnp.sum(c, axis=0), duration
             )
@@ -415,7 +439,7 @@ class FaasMeterProfiler:
         counts, mean_lat, _, _ = _per_fn_latency_stats(fn_id, start, end, num_fns)
         x_cp = x_final[num_fns] if cp_col is not None else jnp.asarray(0.0)
         offset = telemetry.idle_watts
-        if cfg.mode == "combined":
+        if combined:
             offset = telemetry.chip_power[:n_windows] + self._rest_idle(telemetry, init_n)
         return _finalize_report(
             x_fns=x_fns, x_cp=x_cp, x0=x0, traj=traj,
@@ -434,7 +458,7 @@ class FaasMeterProfiler:
         num_fns: int,
         duration: float | Sequence[float],
         idle_watts,
-        has_chip: bool,
+        has_chip,
         has_cp: bool,
         on_tick=None,
         on_bootstrap=None,
@@ -452,8 +476,13 @@ class FaasMeterProfiler:
         via ``push_window``; ``finalize`` yields the same per-node
         ``FootprintReport`` list.  ``duration`` may be a per-node sequence
         (ragged fleet: nodes whose streams end mid-segment are masked out
-        of the engine while the rest keep ticking).  Combined mode (§4.3)
-        needs ``has_chip=True`` plus per-node ``fn_counters`` and
+        of the engine while the rest keep ticking).  ``has_chip`` may be a
+        per-node bool sequence for a heterogeneous fleet — chipless nodes'
+        chip rows are forced to zero on ingest, which makes their combined
+        targets degenerate to pure mode and their skew/counter machinery
+        inert (the chipless-as-data convention).  Combined mode (§4.3)
+        needs a chip reference on at least one node plus per-node
+        ``fn_counters`` and
         ``counter_model`` (see ``prepare_combined_fleet``); pass
         ``window_features`` as well to get retrain checks at every Kalman
         step boundary.  Raises ``ValueError`` for configurations the
@@ -507,9 +536,14 @@ class FaasMeterProfiler:
         return w_sys, skew, c, c_aug, cp_col
 
     def _target_signal(self, w_sys: Array, telemetry: Telemetry, init_n: int) -> Array:
-        """Disaggregation target per mode (always idle-subtracted: X_No_Idle)."""
+        """Disaggregation target per mode (always idle-subtracted: X_No_Idle).
+
+        A chipless node under combined mode falls back to the pure target —
+        equivalently, its chip series is identically zero, under which
+        ``combined_rest_target(w, 0, rest_idle=idle)`` IS the pure target.
+        """
         cfg = self.config
-        if cfg.mode == "combined":
+        if cfg.mode == "combined" and telemetry.chip_power is not None:
             # 'rest' power: system minus chip; chip side is modeled separately
             # (the shared engine helper — all fleet paths use the same one).
             return combined_rest_target(
@@ -704,7 +738,7 @@ class StreamingFleetSession:
         num_fns: int,
         duration: float | Sequence[float],
         idle_watts,
-        has_chip: bool,
+        has_chip,
         has_cp: bool,
         on_tick=None,
         on_bootstrap=None,
@@ -725,7 +759,10 @@ class StreamingFleetSession:
             entries for already-ended nodes are ignored).
           idle_watts: (B,) static idle power per node.
           has_chip: whether ``push_window`` will carry a chip reference
-            (enables skew estimation).
+            (enables skew estimation) — one bool, or a per-node sequence
+            for a heterogeneous fleet (chipless nodes' chip rows are
+            zeroed on ingest; their skew is 0 and their combined target
+            degenerates to pure mode).
           has_cp: whether ``push_window`` will carry control-plane/system
             CPU fractions (appends the shared principal column, §4.1).
           on_tick: ``callable(StreamTick)`` invoked per engine tick.
@@ -756,17 +793,6 @@ class StreamingFleetSession:
                 "StreamingFleetSession supports the default NNLS/no_idle "
                 "disaggregation config only"
             )
-        self.combined = cfg.mode == "combined"
-        if self.combined:
-            if not has_chip:
-                raise ValueError(
-                    "combined mode needs a chip reference (has_chip=True)"
-                )
-            if fn_counters is None or counter_model is None:
-                raise ValueError(
-                    "combined mode needs fn_counters and counter_model "
-                    "(see prepare_combined_fleet)"
-                )
         self.profiler = profiler
         self.cfg = cfg
         self.eng = eng
@@ -774,7 +800,31 @@ class StreamingFleetSession:
         self.b = len(traces)
         self.durations, self._ragged = _node_durations(duration, self.b)
         self.duration = max(self.durations)
-        self.has_chip = has_chip
+        if np.ndim(has_chip) == 0:
+            self._chip_mask = np.full(self.b, bool(has_chip))
+        else:
+            self._chip_mask = np.asarray(has_chip, bool).reshape(-1)
+            if self._chip_mask.shape[0] != self.b:
+                raise ValueError(
+                    f"has_chip sequence has {self._chip_mask.shape[0]} "
+                    f"entries for {self.b} node(s)"
+                )
+        # Chipless rows are forced to exactly 0.0 on ingest: combined
+        # targets then degenerate to pure mode per node, with no branch.
+        self._chip_zero = self._chip_mask.astype(np.float32)
+        self.has_chip = bool(self._chip_mask.any())
+        self.combined = cfg.mode == "combined"
+        if self.combined:
+            if not self.has_chip:
+                raise ValueError(
+                    "combined mode needs a chip reference on at least one "
+                    "node (has_chip)"
+                )
+            if fn_counters is None or counter_model is None:
+                raise ValueError(
+                    "combined mode needs fn_counters and counter_model "
+                    "(see prepare_combined_fleet)"
+                )
         self.has_cp = has_cp
         self.on_tick = on_tick
         self.on_bootstrap = on_bootstrap
@@ -887,6 +937,7 @@ class StreamingFleetSession:
                 self._models, self._fnc, self._busy,
                 jnp.asarray(self.durations, jnp.float32),
             )
+            self._force_chipless_zero()
             if window_features is not None:
                 self._win_feats = np.asarray(window_features, np.float32)
         self._rest_idle_nodes: np.ndarray | None = None    # (B,) set at bootstrap
@@ -931,7 +982,12 @@ class StreamingFleetSession:
         self._raw_w[self._n_raw] = np.asarray(w_sys, np.float32).reshape(self.b)
         self._n_raw += 1
         if self.has_chip:
-            self._raw_chip.append(np.asarray(w_chip, np.float32).reshape(self.b))
+            # Chipless rows zeroed: whatever the caller filled them with,
+            # downstream (skew, rest-idle, combined targets, retraining)
+            # sees the chip series identically 0.
+            self._raw_chip.append(
+                np.asarray(w_chip, np.float32).reshape(self.b) * self._chip_zero
+            )
         if self.has_cp:
             col = contrib.shared_principal_contribution(
                 jnp.asarray(np.asarray(cp_frac, np.float32)),
@@ -963,6 +1019,16 @@ class StreamingFleetSession:
 
     # -- internals ---------------------------------------------------------
 
+    def _force_chipless_zero(self) -> None:
+        """Pin chipless nodes' chip-side split at exactly 0.0.
+
+        Their counter models come out zero from ``prepare_combined_fleet``
+        already; this makes the guarantee independent of the caller's
+        model (a shared model broadcast over a mixed fleet, say)."""
+        cm = jnp.asarray(self._chip_zero)
+        self.x_cpu = self.x_cpu * cm[:, None]
+        self._x_cpu_resid = self._x_cpu_resid * cm
+
     def _synced_window(self, t: int) -> np.ndarray:
         """(B,) synchronized system power for window ``t`` (``apply_shift``
         semantics: per-node linear interpolation of ``t + skew``, edges
@@ -989,6 +1055,8 @@ class StreamingFleetSession:
             if self.has_chip:
                 w_arr = self._raw_w[: self.init_n]               # (init_n, B)
                 r_arr = np.stack(self._raw_chip[: self.init_n])
+                # Chipless nodes have no reference to sync against: skew 0,
+                # the same as the batch path's _prep_node fallback.
                 self.skews = np.asarray(
                     [
                         float(
@@ -997,6 +1065,8 @@ class StreamingFleetSession:
                                 max_shift=cfg.sync_max_shift,
                             )
                         )
+                        if self._chip_mask[i]
+                        else 0.0
                         for i in range(self.b)
                     ]
                 )
@@ -1184,10 +1254,14 @@ class StreamingFleetSession:
         )
         err = cpumod.model_error(self._models, feats, chip, mask=live)
         self.model_errors.append(np.asarray(err))
-        self.retrain_needed = np.asarray(
-            cpumod.retrain_flags(
-                self._models, feats, chip, self._retrain_cfg, mask=live
+        # Chipless nodes have no counter model to retrain: never flagged.
+        self.retrain_needed = (
+            np.asarray(
+                cpumod.retrain_flags(
+                    self._models, feats, chip, self._retrain_cfg, mask=live
+                )
             )
+            & self._chip_mask
         )
 
     # -- live model maintenance --------------------------------------------
@@ -1216,7 +1290,7 @@ class StreamingFleetSession:
                 "refit_counter_models needs combined mode with "
                 "window_features (see prepare_combined_fleet)"
             )
-        flags = np.asarray(flags, bool).reshape(self.b)
+        flags = np.asarray(flags, bool).reshape(self.b) & self._chip_mask
         hi = min(self._next_tick, self._n_raw, self._win_feats.shape[1])
         lo = max(hi - window_steps * self.cfg.step_windows, 0)
         live = np.arange(lo, hi)[None, :] < self._n_nodes[:, None]
@@ -1233,6 +1307,7 @@ class StreamingFleetSession:
             self._models, self._fnc, self._busy,
             jnp.asarray(self.durations, jnp.float32),
         )
+        self._force_chipless_zero()
         self.retrain_needed = self.retrain_needed & ~flags
         self.refits.append((hi, flags))
         return flags
@@ -1268,6 +1343,8 @@ class StreamingFleetSession:
                         max_shift=self.cfg.sync_max_shift,
                     )
                 )
+                if self._chip_mask[i]
+                else 0.0
                 for i in range(self.b)
             ]
         )
@@ -1652,7 +1729,12 @@ def fleet_profile_batched(
     counter model's per-function X_CPU — pass ``fn_counters`` ((B, M, F)
     or a per-node list) and ``counter_model`` (fleet-batched, a list, or
     one shared model; see ``prepare_combined_fleet``), with chip power on
-    every node's telemetry.  The *online* counterpart (live per-tick state
+    at least one node's telemetry.  Chipless nodes (e.g. the edge platform
+    in a mixed fleet) fall back to pure mode inside the same batch: their
+    target is the pure idle-adjusted signal, their counter split is zero,
+    and their report finalizes with the pure-mode offset — no per-node
+    engine branch, the platform mix is data.  The *online* counterpart
+    (live per-tick state
     instead of a finished segment) is ``StreamingFleetSession``.  ``mesh``
     (a ``distributed.sharding.FleetMesh``) shards the engine's node axis
     over the mesh devices (B must tile it evenly).
@@ -1687,8 +1769,8 @@ def fleet_profile_batched(
                 "combined mode needs fn_counters and counter_model "
                 "(see prepare_combined_fleet)"
             )
-        if any(tel.chip_power is None for tel in telemetries):
-            raise ValueError("combined mode needs chip_power on every node")
+        if all(tel.chip_power is None for tel in telemetries):
+            raise ValueError("combined mode needs chip_power on at least one node")
     durations, ragged = _node_durations(duration, b)
     plans = [segment_plan(cfg, d) for d in durations]
     s_nodes = [p[2] for p in plans]
@@ -1735,9 +1817,16 @@ def fleet_profile_batched(
         w_sys_nodes.append(w_sys)
         cp_cols.append(cp_col)
         c_nodes.append(c_aug)
+        # A chipless node's target falls back to pure mode inside
+        # ``_target_signal`` — its slice of the fleet batch is exactly the
+        # pure-mode batch's, so a mixed combined fleet stays one engine call.
         target_nodes.append(profiler._target_signal(w_sys, tel, init_n))
         if combined:
-            rest_idles.append(profiler._rest_idle(tel, init_n))
+            rest_idles.append(
+                profiler._rest_idle(tel, init_n)
+                if tel.chip_power is not None
+                else None
+            )
         a_s, ls, lq = profiler._per_step_stats(
             fn_id, start, end, num_fns, c_aug.shape[1], init_n, s_i, cp_col
         )
@@ -1827,13 +1916,15 @@ def fleet_profile_batched(
     reports = []
     for i in range(b):
         s_i = s_nodes[i]
-        if combined:
+        if combined and telemetries[i].chip_power is not None:
             x_fns_i = result.x_final[i, :num_fns] + x_cpu[i]
             offset_i = (
                 telemetries[i].chip_power[: plans[i][0]] + rest_idles[i]
             )
             idle_extra_i = float(x_cpu_resid[i])
         else:
+            # Pure mode, or a chipless node in a combined fleet (its engine
+            # slice already ran on the pure target; no chip split to add).
             x_fns_i = result.x_final[i, :num_fns]
             offset_i = telemetries[i].idle_watts
             idle_extra_i = 0.0

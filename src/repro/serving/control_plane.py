@@ -308,15 +308,27 @@ class ControlLoop:
         self._nameplate = np.asarray(
             [s.dyn_power_w for s in registry.specs], float
         )
-        # Pass the init segment through verbatim.
+        # Pass the init segment through verbatim (bulk slice: the stream is
+        # start-sorted, so the init prefix is one searchsorted).
         init_end = init_n * delta
         self._cursor = 0
-        while self._cursor < self._arr_t.size and self._arr_t[self._cursor] < init_end:
-            k = self._cursor
-            self._controlled[self._arr_node[k]].append(
-                (int(self._arr_fn[k]), float(self._arr_t[k]), float(self._arr_dur[k]))
-            )
-            self._cursor += 1
+        self._passthrough(int(np.searchsorted(self._arr_t, init_end, side="left")))
+
+    def _passthrough(self, k1: int) -> None:
+        """Record arrivals [cursor, k1) into the controlled schedule
+        verbatim (no admission control) and advance the cursor."""
+        k0 = self._cursor
+        if k1 <= k0:
+            return
+        rows = zip(
+            self._arr_node[k0:k1].tolist(),
+            self._arr_fn[k0:k1].tolist(),
+            self._arr_t[k0:k1].tolist(),
+            self._arr_dur[k0:k1].tolist(),
+        )
+        for node, fn, t, dur in rows:
+            self._controlled[node].append((fn, t, dur))
+        self._cursor = k1
 
     def attach_session(self, session) -> None:
         """Give the loop the live ``StreamingFleetSession`` (retrain/resync
@@ -361,23 +373,30 @@ class ControlLoop:
                 self.meter.observe_tick(
                     tk.tick_power[i], tk.a[i], self.delta, idle_watts=self.idle[i]
                 )
-        # (3) admission + placement for this window's arrivals.
+        # (3) admission + placement for this window's arrivals.  The stream
+        # is start-sorted, so this window's slice is one searchsorted — the
+        # per-arrival Python scan over the cursor scaled as O(ticks + N)
+        # comparisons *inside the tick hook*; the bulk build keeps the hot
+        # path a few numpy calls.  Submission order (arrival order) is
+        # preserved, so admission decisions are exactly the loop's.
         wend = now + self.delta
         names = self.registry.names
-        while self._cursor < self._arr_t.size and self._arr_t[self._cursor] < wend:
-            k = self._cursor
-            self.scheduler.submit(
-                Invocation(
-                    function=names[self._arr_fn[k]],
-                    arrival=float(self._arr_t[k]),
-                    payload={
-                        "node": int(self._arr_node[k]),
-                        "dur": float(self._arr_dur[k]),
-                        "fn": int(self._arr_fn[k]),
-                    },
+        k0 = self._cursor
+        k1 = int(np.searchsorted(self._arr_t, wend, side="left"))
+        if k1 > k0:
+            arr_fn = self._arr_fn[k0:k1].tolist()
+            arr_t = self._arr_t[k0:k1].tolist()
+            arr_dur = self._arr_dur[k0:k1].tolist()
+            arr_node = self._arr_node[k0:k1].tolist()
+            for fn, t, dur, node in zip(arr_fn, arr_t, arr_dur, arr_node):
+                self.scheduler.submit(
+                    Invocation(
+                        function=names[fn],
+                        arrival=t,
+                        payload={"node": node, "dur": dur, "fn": fn},
+                    )
                 )
-            )
-            self._cursor += 1
+            self._cursor = k1
         placed = self.scheduler.drain_fleet(
             now, fleet=self.fleet, placement=cfg.placement, live=live
         )
@@ -427,12 +446,7 @@ class ControlLoop:
         self._finished = True
         cfg = self.config
         # Tail arrivals the engine never saw: uncontrolled passthrough.
-        while self._cursor < self._arr_t.size:
-            k = self._cursor
-            self._controlled[self._arr_node[k]].append(
-                (int(self._arr_fn[k]), float(self._arr_t[k]), float(self._arr_dur[k]))
-            )
-            self._cursor += 1
+        self._passthrough(self._arr_t.size)
         # Deferred leftovers: predictive packing after the last real window.
         last = max(
             [self.n_used * self.delta]
@@ -618,6 +632,7 @@ class EnergyFirstControlPlane:
         traces: list[InvocationTrace],
         *,
         seeds: list[int] | None = None,
+        platforms: list[str] | None = None,
         on_tick=None,
         mesh="auto",
         slots: int | None = None,
@@ -653,6 +668,11 @@ class EnergyFirstControlPlane:
           traces: per-node invocation traces (equal num_fns; durations may
             differ).
           seeds: optional per-node simulator seeds.
+          platforms: optional per-node platform names
+            (``"server"``/``"desktop"``/``"edge"``) — a heterogeneous fleet
+            runs as ONE batch, the per-node power-model parameters stacked
+            as data through the simulator and the engines.  ``None`` uses
+            the simulator's own configuration for every node.
           on_tick: optional hook ``(core.profiler.StreamTick,
             list[StreamingFootprintTracker]) -> None`` run per engine tick.
           mesh: ``"auto"`` (default) builds a ``FleetMesh`` over the node
@@ -669,12 +689,16 @@ class EnergyFirstControlPlane:
             so elastic fleets shard without retracing.  Numerics match the
             plain session at 1e-5.
           mode: ``"pure"`` | ``"combined"`` (§4.3) — defaults to the
-            profiler config's mode.  Combined needs chip telemetry on
-            every node; per-node counter models are fit on the N_init
+            profiler config's mode.  Combined needs chip telemetry on at
+            least one node; per-node counter models are fit on the N_init
             block (``combined_counter_inputs``), the engines disaggregate
             the chip-subtracted 'rest' power, live trackers are fed the
             full X = X_CPU + X_Rest, and retrain flags are checked at
-            every Kalman step (``session.retrain_needed``).
+            every Kalman step (``session.retrain_needed``).  Chipless
+            nodes (the edge platform) ride the same batch as data: their
+            chip series is identically zero and their counter model is
+            the zero model, which makes the combined target degenerate to
+            the pure one on those rows exactly — no per-node branches.
           prefetch: ingest lookahead — ticks are pulled on a background
             thread this many windows ahead of the engine
             (``StreamingFleetSession.ingest``), overlapping host-side
@@ -715,7 +739,7 @@ class EnergyFirstControlPlane:
         )
         cfg = profiler.config
         combined = mode == "combined"
-        sims = self.simulator.simulate_fleet(traces, seeds)
+        sims = self.simulator.simulate_fleet(traces, seeds, platforms=platforms)
         durations = [t.duration for t in traces]
         ragged = len(set(durations)) > 1
         duration = durations if ragged else durations[0]
@@ -725,10 +749,12 @@ class EnergyFirstControlPlane:
             for t in traces
         ]
         tels = [s.telemetry for s in sims]
-        if combined and any(tel.chip_power is None for tel in tels):
+        has_chip = [tel.chip_power is not None for tel in tels]
+        if combined and not any(has_chip):
             raise ValueError(
                 "profile_fleet(mode='combined') needs a chip power source "
-                "on every node (the edge platform has none — use pure mode)"
+                "on at least one node (no platform here has one — use pure "
+                "mode)"
             )
         plans = [segment_plan(cfg, d) for d in durations]
         n_max = max(p[0] for p in plans)
@@ -832,7 +858,7 @@ class EnergyFirstControlPlane:
             session = profiler.start_fleet_stream(
                 trace_arrays, num_fns=num_fns, duration=duration,
                 idle_watts=[tel.idle_watts for tel in tels],
-                has_chip=tels[0].chip_power is not None,
+                has_chip=has_chip,
                 has_cp=has_cp_flags[0],
                 on_tick=_on_tick, on_bootstrap=_on_bootstrap,
                 mesh=mesh, slots=slots,
@@ -846,15 +872,15 @@ class EnergyFirstControlPlane:
             def _stack(get):
                 arr = np.zeros((n_max, len(tels)), np.float32)
                 for i, tel in enumerate(tels):
-                    col = np.asarray(get(tel))
+                    col = get(tel)
+                    if col is None:
+                        continue  # chipless node: zero column, as data
+                    col = np.asarray(col)
                     arr[: col.shape[0], i] = col
                 return arr
 
             sys_np = _stack(lambda tel: tel.system_power)
-            chip_np = (
-                _stack(lambda tel: tel.chip_power)
-                if tels[0].chip_power is not None else None
-            )
+            chip_np = _stack(lambda tel: tel.chip_power) if any(has_chip) else None
             cp_np = (
                 _stack(lambda tel: tel.cp_cpu_frac) if has_cp_flags[0] else None
             )

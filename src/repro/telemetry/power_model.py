@@ -91,7 +91,123 @@ class NodePowerModel:
         return np.clip(dyn / self.config.cp_cpu_capacity_w, 0.0, 1.0)
 
     def sys_cpu_fraction(self, activity: np.ndarray, cp_power: np.ndarray) -> np.ndarray:
-        """System-wide CPU utilization proxy used to normalize Eq. 2."""
+        """System-wide CPU utilization proxy used to normalize Eq. 2.
+
+        The capacity is the control-plane capacity plus the observed busy
+        peak; a zero-length activity series yields an empty fraction series
+        (``np.max`` on it would crash), and a degenerate non-positive
+        capacity falls back to 1 W so the division stays defined.
+        """
         busy = activity @ (self.dyn_power_w * self.cpu_frac) + cp_power
-        cap = self.config.cp_cpu_capacity_w + float(np.max(busy)) or 1.0
+        peak = float(np.max(busy)) if busy.size else 0.0
+        cap = self.config.cp_cpu_capacity_w + peak
+        if cap <= 0.0:
+            cap = 1.0
         return np.clip(busy / cap, 1e-3, 1.0)
+
+
+class FleetPowerModel:
+    """Heterogeneous-fleet twin of ``NodePowerModel``: every per-node
+    ``PowerModelConfig`` field is stacked as a ``(B,)`` array, so a mixed
+    server/desktop/edge fleet runs through ONE vectorized truth pass — the
+    platform mix is data, not a Python loop over per-node models.
+
+    All methods take/return ``(B, T)`` fine-grid series.  Each row is
+    bitwise what the corresponding ``NodePowerModel`` would produce (the
+    elementwise kernels are identical; reductions stay per-row), which is
+    what lets a mixed fleet pin against per-platform batches exactly.
+    """
+
+    _FIELDS = (
+        "idle_w", "chip_idle_w", "sublinearity", "sublinear_ref_w",
+        "cp_base_w", "cp_per_inv_j", "cp_handling_s", "cp_cpu_capacity_w",
+    )
+
+    def __init__(
+        self,
+        configs: "list[PowerModelConfig]",
+        dyn_power_w: np.ndarray,
+        cpu_frac: np.ndarray,
+    ):
+        if not configs:
+            raise ValueError("FleetPowerModel needs at least one node config")
+        self.configs = tuple(configs)
+        self.b = len(configs)
+        for name in self._FIELDS:
+            setattr(
+                self, name,
+                np.asarray([getattr(c, name) for c in configs], np.float64),
+            )
+        self.dyn_power_w = np.asarray(dyn_power_w, np.float64)   # (M,) shared
+        self.cpu_frac = np.asarray(cpu_frac, np.float64)         # (M,) shared
+
+    def node(self, i: int) -> NodePowerModel:
+        """Per-node view (the scalar model this row is pinned against)."""
+        return NodePowerModel(self.configs[i], self.dyn_power_w, self.cpu_frac)
+
+    def _compress(self, p_dyn: np.ndarray) -> np.ndarray:
+        """(B, T) sublinear compression with per-node ``sublinearity``;
+        linear rows (s >= 1) pass through untouched, as data."""
+        s = self.sublinearity[:, None]
+        ref = self.sublinear_ref_w[:, None]
+        curved = np.where(
+            p_dyn > 0, p_dyn * (np.maximum(p_dyn, 1e-9) / ref) ** (s - 1.0), 0.0
+        )
+        return np.where(s >= 1.0, p_dyn, curved)
+
+    def control_plane_power(
+        self, starts: "list[np.ndarray]", num_bins: int, dt: float
+    ) -> np.ndarray:
+        """(B, T) control-plane draw: per-node base + per-invocation handling
+        work, all nodes' events scattered in one ``np.add.at`` pass per
+        handling bin.  ``starts[i]`` are node i's valid invocation starts."""
+        cp = np.empty((self.b, num_bins), np.float64)
+        cp[:] = self.cp_base_w[:, None]
+        sizes = [np.asarray(s).shape[0] for s in starts]
+        if not any(sizes):
+            return cp
+        bidx = np.concatenate(
+            [np.full(n, i, np.int64) for i, n in enumerate(sizes)]
+        )
+        st = np.concatenate([np.asarray(s) for s in starts])
+        width = np.maximum(self.cp_handling_s, dt)               # (B,)
+        w_power = (self.cp_per_inv_j / width)[bidx]              # per event
+        nbins = np.maximum(np.ceil(width / dt).astype(np.int64), 1)[bidx]
+        idx0 = np.floor(st / dt).astype(np.int64)
+        for k in range(int(nbins.max())):
+            idx = idx0 + k
+            ok = (k < nbins) & (idx >= 0) & (idx < num_bins)
+            np.add.at(cp, (bidx[ok], idx[ok]), w_power[ok])
+        return cp
+
+    def system_power(self, p_dyn: np.ndarray, cp_power: np.ndarray) -> np.ndarray:
+        """(B, T) true full-system power from the batched dynamic-power
+        contraction (``einsum('btm,m->bt', act, dyn_power_w)``)."""
+        return self.idle_w[:, None] + self._compress(p_dyn) + cp_power
+
+    def chip_power(self, p_cpu: np.ndarray, cp_power: np.ndarray) -> np.ndarray:
+        """(B, T) true chip power (RAPL-like view) from the batched CPU-share
+        contraction.  Rows of chipless nodes are still physical truth — the
+        simulator simply never *senses* them."""
+        return self.chip_idle_w[:, None] + self._compress(p_cpu) + cp_power
+
+    def cp_cpu_fraction(self, cp_power: np.ndarray) -> np.ndarray:
+        """(B, T) control-plane CPU utilization fraction (Eq. 2)."""
+        dyn = np.maximum(cp_power - 0.0, 0.0)
+        return np.clip(dyn / self.cp_cpu_capacity_w[:, None], 0.0, 1.0)
+
+    def sys_cpu_fraction(
+        self, p_cpu: np.ndarray, cp_power: np.ndarray, lengths: np.ndarray
+    ) -> np.ndarray:
+        """(B, T) system-wide CPU utilization proxy.  The per-node busy peak
+        is taken over each node's own ``lengths[i]`` valid bins (rows are
+        zero-padded to the fleet max), mirroring the per-node fix: empty
+        rows peak at 0 and a non-positive capacity falls back to 1 W."""
+        busy = p_cpu + cp_power                                   # (B, T)
+        lens = np.asarray(lengths, np.int64)
+        col = np.arange(busy.shape[1])[None, :]
+        masked = np.where(col < lens[:, None], busy, -np.inf)
+        peak = np.where(lens > 0, np.max(masked, axis=1), 0.0)
+        cap = self.cp_cpu_capacity_w + peak
+        cap = np.where(cap <= 0.0, 1.0, cap)
+        return np.clip(busy / cap[:, None], 1e-3, 1.0)

@@ -22,7 +22,11 @@ import numpy as np
 
 from repro.core.profiler import Telemetry
 from repro.telemetry import sources as src
-from repro.telemetry.power_model import NodePowerModel, PowerModelConfig
+from repro.telemetry.power_model import (
+    FleetPowerModel,
+    NodePowerModel,
+    PowerModelConfig,
+)
 from repro.workload.functions import FunctionRegistry
 from repro.workload.trace import InvocationTrace
 
@@ -142,6 +146,21 @@ def _fleet_activity(
     return np.cumsum(events[:, :num_bins], axis=1)
 
 
+def _config_groups(configs) -> list:
+    """Group node indices by identical sensor config, insertion-ordered.
+
+    ``None`` entries (sensorless nodes — e.g. chipless edge platforms) are
+    skipped.  The batched sensor chain is row-independent given per-node
+    RNGs, so running it once per group and scattering rows back is bitwise
+    what a homogeneous per-platform batch produces for the same nodes.
+    """
+    groups: dict = {}
+    for i, c in enumerate(configs):
+        if c is not None:
+            groups.setdefault(c, []).append(i)
+    return [(c, np.asarray(ix, np.int64)) for c, ix in groups.items()]
+
+
 class NodeSimulator:
     """Ground-truth node simulator: invocation traces -> power telemetry.
 
@@ -150,7 +169,14 @@ class NodeSimulator:
     — so every profiling path can be validated against known per-function
     truth.  ``simulate`` covers one node, ``simulate_fleet`` a batch, and
     ``stream_fleet`` yields the same fleet telemetry tick-by-tick (bitwise
-    identical under matched seeds) for the streaming/serving paths."""
+    identical under matched seeds) for the streaming/serving paths.
+
+    Both fleet paths accept ``platforms=`` — one preset name per node — to
+    simulate a *mixed* server/desktop/edge fleet in the same vectorized
+    pass: per-node power-model parameters run stacked as ``(B,)`` arrays
+    (``FleetPowerModel``), sensing groups nodes by identical sensor config,
+    and chipless platforms simply get no chip signal (their telemetry rows
+    fall back to pure mode downstream)."""
 
     def __init__(self, registry: FunctionRegistry, config: SimulatorConfig = SimulatorConfig()):
         self.registry = registry
@@ -175,20 +201,31 @@ class NodeSimulator:
         return self._finish(trace, act, seed=seed)
 
     def simulate_fleet(
-        self, traces: list[InvocationTrace], seeds: list[int] | None = None
+        self,
+        traces: list[InvocationTrace],
+        seeds: list[int] | None = None,
+        platforms: "list[str] | None" = None,
     ) -> list[SimResult]:
         """Simulate a fleet of nodes with one vectorized measurement pass.
 
-        Activity scatter, the dynamic-power contractions, *and* the sensor
-        front-ends run batched over all B nodes: one ``sense_fleet`` call
-        per sensor kind (one noise block draw per node, from its spawned
-        child RNG) and one ``resample_fleet`` call per kind — node ``i``'s
+        Activity scatter, the dynamic-power contractions, the physical
+        truth, *and* the sensor front-ends run batched over all B nodes:
+        one ``FleetPowerModel`` truth pass (per-node power-model parameters
+        stacked as ``(B,)`` arrays), one ``sense_fleet`` call per sensor
+        *config group* (one noise block draw per node, from its spawned
+        child RNG) and one ``resample_fleet`` call per group — node ``i``'s
         telemetry is bitwise what a per-node ``simulate`` with the same seed
         produces.  Traces must share ``num_fns``; durations may differ (a
         *ragged* fleet — nodes joining/leaving at different times): the
         batched passes run padded to the longest node and each node's
         results cover exactly its own ``duration``, so every ``SimResult``
-        has that node's own window count."""
+        has that node's own window count.
+
+        ``platforms`` (one preset name per node) makes the fleet *mixed*:
+        each node gets its platform's power config and system sensor, and
+        chipless platforms (edge) produce no chip signal — their telemetry
+        rows are bitwise what a homogeneous fleet of that platform yields
+        under the same seeds."""
         if not traces:
             return []
         m0 = traces[0].num_fns
@@ -206,55 +243,129 @@ class NodeSimulator:
             # correlating fleet-wide error statistics.
             seeds = [cfg.seed + i for i in range(b)]
 
-        # Per-node physical truth, stacked zero-padded for the batched
-        # sensors (the chain is causal and `sense_fleet` clamps decimation at
-        # each node's own length, so padding never reaches a valid sample).
+        pcfgs, sys_cfgs, chip_cfgs = self._node_setups(platforms, b)
+        fm = FleetPowerModel(pcfgs, self.model.dyn_power_w, self.model.cpu_frac)
         bins = np.array([int(round(t.duration / cfg.dt)) for t in traces])
         n_wins = [int(round(t.duration / cfg.delta)) for t in traces]
-        truths = []
-        true_sys_pad = np.zeros((b, num_bins))
-        true_chip_pad = np.zeros((b, num_bins))
-        for i, t in enumerate(traces):
-            truth = self._node_truth(
-                t, act[i, : bins[i]], p_dyn[i, : bins[i]], p_cpu[i, : bins[i]]
-            )
-            truths.append(truth)
-            true_sys_pad[i, : bins[i]] = truth[2]
-            true_chip_pad[i, : bins[i]] = truth[3]
+        cp_pow, true_sys, true_chip = self._fleet_truth(traces, p_dyn, p_cpu, num_bins, fm)
+        cp_fracs, sys_fracs = self._fleet_fracs(fm, cp_pow, p_cpu, bins, n_wins)
 
         children = [np.random.default_rng(s).spawn(2) for s in seeds]
-        sys_fs = src.sense_fleet(
-            true_sys_pad, cfg.dt, self.system_sensor,
-            rngs=[c[0] for c in children], lengths=bins,
+        sys_sigs, w_sys_rows = self._sense_groups(
+            true_sys, sys_cfgs, [c[0] for c in children], bins, n_wins
         )
-        chip_fs = (
-            src.sense_fleet(
-                true_chip_pad, cfg.dt, self.chip_sensor,
-                rngs=[c[1] for c in children], lengths=bins,
-            )
-            if self.chip_sensor
-            else None
-        )
-        w_sys_all = src.resample_fleet(sys_fs, max(n_wins), cfg.delta)
-        w_chip_all = (
-            src.resample_fleet(chip_fs, max(n_wins), cfg.delta)
-            if chip_fs is not None
-            else None
+        chip_sigs, w_chip_rows = self._sense_groups(
+            true_chip, chip_cfgs, [c[1] for c in children], bins, n_wins
         )
 
         out = []
         for i, t in enumerate(traces):
-            chip_sig = chip_fs.node(i) if chip_fs is not None else None
-            w_chip = w_chip_all[i, : n_wins[i]] if w_chip_all is not None else None
             out.append(
                 self._finish(
                     t, act[i, : bins[i]], seed=seeds[i],
-                    truth=truths[i],
-                    sensed=(sys_fs.node(i), chip_sig),
-                    windows=(w_sys_all[i, : n_wins[i]], w_chip),
+                    truth=(
+                        cp_pow[i, : bins[i]], p_dyn[i, : bins[i]],
+                        true_sys[i, : bins[i]], true_chip[i, : bins[i]],
+                    ),
+                    sensed=(sys_sigs[i], chip_sigs[i]),
+                    windows=(w_sys_rows[i], w_chip_rows[i]),
+                    model=fm.node(i),
+                    fracs=(cp_fracs[i], sys_fracs[i]),
                 )
             )
         return out
+
+    def _node_setups(
+        self, platforms: "list[str] | None", b: int
+    ) -> tuple[list, list, list]:
+        """Per-node ``(power config, system sensor, chip sensor | None)``.
+
+        ``platforms=None`` is the homogeneous fleet: every node inherits
+        this simulator's own platform.  Otherwise each node resolves its
+        own preset, with the ``SimulatorConfig`` overrides (``power``,
+        ``system_sensor``, ``chip_sensor``) still applying fleet-wide."""
+        cfg = self.config
+        if platforms is None:
+            return [self.power_cfg] * b, [self.system_sensor] * b, [self.chip_sensor] * b
+        if len(platforms) != b:
+            raise ValueError(
+                f"platforms must name one preset per trace; got {len(platforms)} for {b} traces"
+            )
+        pcfgs, sys_cfgs, chip_cfgs = [], [], []
+        for name in platforms:
+            if name not in _PLATFORMS:
+                raise ValueError(f"unknown platform {name!r}; have {sorted(_PLATFORMS)}")
+            plat = _PLATFORMS[name]
+            pcfgs.append(
+                cfg.power
+                or PowerModelConfig(idle_w=plat["idle_w"], chip_idle_w=plat["chip_idle_w"])
+            )
+            sys_cfgs.append(cfg.system_sensor or plat["sensor"])
+            chip_cfgs.append(cfg.chip_sensor if plat["has_chip"] else None)
+        return pcfgs, sys_cfgs, chip_cfgs
+
+    def _fleet_truth(
+        self,
+        traces: list[InvocationTrace],
+        p_dyn: np.ndarray,
+        p_cpu: np.ndarray,
+        num_bins: int,
+        fm: FleetPowerModel,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(B, T) physical truth for the whole fleet in one stacked pass —
+        the fleet twin of ``_node_truth`` (each row bitwise equal on the
+        node's own bins; padding bins carry idle physics that the causal,
+        length-clamped sensor chain never reads)."""
+        starts = [t.start[t.fn_id >= 0] for t in traces]
+        cp = fm.control_plane_power(starts, num_bins, self.config.dt)
+        return cp, fm.system_power(p_dyn, cp), fm.chip_power(p_cpu, cp)
+
+    def _fleet_fracs(
+        self,
+        fm: FleetPowerModel,
+        cp_pow: np.ndarray,
+        p_cpu: np.ndarray,
+        bins: np.ndarray,
+        n_wins: list,
+    ) -> tuple[list, list]:
+        """Per-node window-mean CPU fractions from the stacked fleet series
+        (the ``_frac_windows`` twin; per-node busy peaks stay per-row)."""
+        bpw = int(round(self.config.delta / self.config.dt))
+        cp_f = fm.cp_cpu_fraction(cp_pow)
+        sys_f = fm.sys_cpu_fraction(p_cpu, cp_pow, bins)
+        cp_out, sys_out = [], []
+        for i, n in enumerate(n_wins):
+            n_full = n * bpw
+            cp_out.append(cp_f[i, :n_full].reshape(n, -1).mean(1))
+            sys_out.append(sys_f[i, :n_full].reshape(n, -1).mean(1))
+        return cp_out, sys_out
+
+    def _sense_groups(
+        self,
+        true_pad: np.ndarray,
+        sensor_cfgs: list,
+        rngs: list,
+        bins: np.ndarray,
+        n_wins: list,
+    ) -> tuple[list, list]:
+        """Sense + window-resample the fleet, one batched pass per group of
+        nodes sharing a sensor config.  Returns per-node ``(signal, window
+        series)`` lists; nodes with ``None`` config (no sensor) get ``None``
+        in both."""
+        b = true_pad.shape[0]
+        sigs: list = [None] * b
+        wins: list = [None] * b
+        for cfg_g, idx in _config_groups(sensor_cfgs):
+            fs = src.sense_fleet(
+                true_pad[idx], self.config.dt, cfg_g,
+                rngs=[rngs[i] for i in idx], lengths=bins[idx],
+            )
+            n_g = max(n_wins[i] for i in idx)
+            w_g = src.resample_fleet(fs, n_g, self.config.delta)
+            for j, i in enumerate(idx):
+                sigs[i] = fs.node(j)
+                wins[i] = w_g[j, : n_wins[i]]
+        return sigs, wins
 
     def _node_truth(
         self,
@@ -281,13 +392,18 @@ class NodeSimulator:
         return cp_power, p_dyn, true_sys, true_chip
 
     def _frac_windows(
-        self, act: np.ndarray, cp_power: np.ndarray, n_windows: int
+        self,
+        act: np.ndarray,
+        cp_power: np.ndarray,
+        n_windows: int,
+        model: NodePowerModel | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """(N,) control-plane and system-wide CPU fractions as window means."""
         cfg = self.config
+        model = self.model if model is None else model
         n_full = n_windows * int(round(cfg.delta / cfg.dt))
-        cp_f = self.model.cp_cpu_fraction(cp_power)
-        sys_f = self.model.sys_cpu_fraction(act, cp_power)
+        cp_f = model.cp_cpu_fraction(cp_power)
+        sys_f = model.sys_cpu_fraction(act, cp_power)
         return (
             cp_f[:n_full].reshape(n_windows, -1).mean(1),
             sys_f[:n_full].reshape(n_windows, -1).mean(1),
@@ -304,9 +420,12 @@ class NodeSimulator:
         truth: tuple | None = None,
         sensed: tuple | None = None,
         windows: tuple | None = None,
+        model: NodePowerModel | None = None,
+        fracs: tuple | None = None,
     ) -> SimResult:
         cfg = self.config
         dt = cfg.dt
+        model = self.model if model is None else model
         n_windows = int(round(trace.duration / cfg.delta))
 
         if truth is None:
@@ -337,14 +456,17 @@ class NodeSimulator:
         else:
             w_sys, w_chip = windows
 
-        cp_frac, sys_frac = self._frac_windows(act, cp_power, n_windows)
+        if fracs is None:
+            cp_frac, sys_frac = self._frac_windows(act, cp_power, n_windows, model=model)
+        else:
+            cp_frac, sys_frac = fracs
 
         # Oracle per-function dynamic energy: linear share of the compressed
         # dynamic power (attribution of the compression is proportional).
         p_lin = p_dyn                                              # (T,)
-        p_cmp = self.model._compress(p_lin)
+        p_cmp = model._compress(p_lin)
         scale = np.where(p_lin > 0, p_cmp / np.maximum(p_lin, 1e-9), 1.0)
-        fn_energy = (act * self.model.dyn_power_w[None, :] * scale[:, None]).sum(0) * dt
+        fn_energy = (act * model.dyn_power_w[None, :] * scale[:, None]).sum(0) * dt
         busy_s = act.sum(0) * dt
         fn_power = np.where(busy_s > 0, fn_energy / np.maximum(busy_s, 1e-9), 0.0)
 
@@ -353,7 +475,7 @@ class NodeSimulator:
         telemetry = Telemetry(
             system_power=jnp.asarray(w_sys, jnp.float32),
             chip_power=jnp.asarray(w_chip, jnp.float32) if w_chip is not None else None,
-            idle_watts=float(self.power_cfg.idle_w),
+            idle_watts=float(model.config.idle_w),
             cp_cpu_frac=jnp.asarray(cp_frac, jnp.float32),
             sys_cpu_frac=jnp.asarray(sys_frac, jnp.float32),
         )
@@ -372,7 +494,10 @@ class NodeSimulator:
         )
 
     def stream_fleet(
-        self, traces: list[InvocationTrace], seeds: list[int] | None = None
+        self,
+        traces: list[InvocationTrace],
+        seeds: list[int] | None = None,
+        platforms: "list[str] | None" = None,
     ) -> "Iterator[FleetTelemetryTick]":
         """Drive the sensor front-ends *live*: yield telemetry window by window.
 
@@ -395,6 +520,12 @@ class NodeSimulator:
         land strictly after its own last window edge, and once a node has
         ended the yielded ticks carry ``valid[i] = False`` with zeros in its
         value slots while the live nodes keep streaming.
+
+        On a mixed fleet (``platforms=``), each sensor-config group streams
+        through its own ``FleetStreamingSensor``/``FleetWindowResampler``
+        pair and a window is yielded once *every* group has closed it;
+        chipless nodes carry zeros in ``w_chip`` (their chip reference is
+        identically absent — downstream treats them as pure-mode rows).
 
         Yields:
           ``FleetTelemetryTick`` with (B,) arrays per window, for every
@@ -420,48 +551,54 @@ class NodeSimulator:
         if seeds is None:
             seeds = [cfg.seed + i for i in range(b)]
 
-        true_sys = np.zeros((b, num_bins))
-        true_chip = np.zeros((b, num_bins))
-        cp_fracs, sys_fracs = [], []
-        for i, trace in enumerate(traces):
-            bins_i = int(round(trace.duration / cfg.dt))
-            cp_power, _, t_sys, t_chip = self._node_truth(
-                trace, act[i, :bins_i], p_dyn[i, :bins_i], p_cpu[i, :bins_i]
-            )
-            true_sys[i, :bins_i] = t_sys
-            true_chip[i, :bins_i] = t_chip
-            cp_f, sys_f = self._frac_windows(act[i, :bins_i], cp_power, n_list[i])
-            cp_fracs.append(cp_f)
-            sys_fracs.append(sys_f)
+        pcfgs, sys_cfgs, chip_cfgs = self._node_setups(platforms, b)
+        fm = FleetPowerModel(pcfgs, self.model.dyn_power_w, self.model.cpu_frac)
+        bins = np.array([int(round(t.duration / cfg.dt)) for t in traces])
+        cp_pow, true_sys, true_chip = self._fleet_truth(traces, p_dyn, p_cpu, num_bins, fm)
+        cp_fracs, sys_fracs = self._fleet_fracs(fm, cp_pow, p_cpu, bins, n_list)
 
-        has_chip = self.chip_sensor is not None
         children = [np.random.default_rng(s).spawn(2) for s in seeds]
-        sys_sensor = FleetStreamingSensor(
-            self.system_sensor, cfg.dt, [c[0] for c in children]
-        )
-        chip_sensor = (
-            FleetStreamingSensor(self.chip_sensor, cfg.dt, [c[1] for c in children])
-            if has_chip
-            else None
-        )
-        sys_rs = FleetWindowResampler(cfg.delta, b)
-        chip_rs = FleetWindowResampler(cfg.delta, b) if has_chip else None
+        # One streaming sensor + resampler per sensor-config group; each
+        # group keeps its own queue of closed (B_g,) window columns.
+        def _streams(cfgs, truth, rng_col):
+            return [
+                (
+                    idx,
+                    truth,
+                    FleetStreamingSensor(cfg_g, cfg.dt, [children[i][rng_col] for i in idx]),
+                    FleetWindowResampler(cfg.delta, len(idx)),
+                    [],
+                )
+                for cfg_g, idx in _config_groups(cfgs)
+            ]
 
-        # Closed windows arrive fleet-synchronized (one shared sample clock),
-        # so pending work is a queue of (B,) columns per signal.
-        pending_sys: list[np.ndarray] = []
-        pending_chip: list[np.ndarray] = []
+        sys_streams = _streams(sys_cfgs, true_sys, 0)
+        chip_streams = _streams(chip_cfgs, true_chip, 1)
+        has_chip = bool(chip_streams)
         emitted = 0
 
         def _drain() -> Iterator[FleetTelemetryTick]:
             nonlocal emitted
-            while emitted < n_max and pending_sys and (not has_chip or pending_chip):
+            while (
+                emitted < n_max
+                and all(q for *_, q in sys_streams)
+                and all(q for *_, q in chip_streams)
+            ):
                 t = emitted
                 live = t < n_arr
+                w_sys = np.zeros(b)
+                for idx, *_, q in sys_streams:
+                    w_sys[idx] = q.pop(0)
+                w_chip = None
+                if has_chip:
+                    w_chip = np.zeros(b)
+                    for idx, *_, q in chip_streams:
+                        w_chip[idx] = q.pop(0)
+                    w_chip = np.where(live, w_chip, 0.0)
                 yield FleetTelemetryTick(
                     t=t,
-                    w_sys=np.where(live, pending_sys.pop(0), 0.0),
-                    w_chip=np.where(live, pending_chip.pop(0), 0.0) if has_chip else None,
+                    w_sys=np.where(live, w_sys, 0.0),
+                    w_chip=w_chip,
                     cp_frac=np.asarray(
                         [cp_fracs[i][t] if live[i] else 0.0 for i in range(b)]
                     ),
@@ -474,17 +611,14 @@ class NodeSimulator:
 
         for w in range(n_max):
             lo, hi = w * bins_per_win, (w + 1) * bins_per_win
-            sig = sys_sensor.push(true_sys[:, lo:hi])
-            pending_sys.extend(sys_rs.push(sig.times, sig.watts).T)
-            if has_chip:
-                sig = chip_sensor.push(true_chip[:, lo:hi])
-                pending_chip.extend(chip_rs.push(sig.times, sig.watts).T)
+            for idx, truth, sensor, rs, q in sys_streams + chip_streams:
+                sig = sensor.push(truth[idx, lo:hi])
+                q.extend(rs.push(sig.times, sig.watts).T)
             yield from _drain()
         # End of the fleet stream: close every window still open (lag and
         # slow sensors leave a tail that no future sample will close).
-        pending_sys.extend(sys_rs.flush(n_max).T)
-        if has_chip:
-            pending_chip.extend(chip_rs.flush(n_max).T)
+        for idx, truth, sensor, rs, q in sys_streams + chip_streams:
+            q.extend(rs.flush(n_max).T)
         yield from _drain()
 
     def marginal_energy(
