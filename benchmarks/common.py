@@ -18,6 +18,7 @@ PROFILER_CONFIG = ProfilerConfig(init_windows=60, step_windows=30)
 
 
 def control_plane(platform: str = "desktop", seed: int = 0) -> EnergyFirstControlPlane:
+    """Control plane over the paper's standard function set (benchmark default)."""
     return EnergyFirstControlPlane(
         paper_functions(), SimulatorConfig(platform=platform, seed=seed), PROFILER_CONFIG
     )
@@ -26,6 +27,7 @@ def control_plane(platform: str = "desktop", seed: int = 0) -> EnergyFirstContro
 def control_plane_for(
     registry: FunctionRegistry, platform: str = "desktop", seed: int = 0
 ) -> EnergyFirstControlPlane:
+    """Control plane over an explicit registry (hetero / custom fleets)."""
     return EnergyFirstControlPlane(
         registry, SimulatorConfig(platform=platform, seed=seed), PROFILER_CONFIG
     )
@@ -47,6 +49,7 @@ def four_function_trace(duration=300.0, load=1.0, seed=0, arrival="poisson"):
 
 
 class Timer:
+    """Context manager measuring wall-clock ``seconds`` for one block."""
     def __enter__(self):
         self.t0 = time.perf_counter()
         return self
@@ -56,6 +59,7 @@ class Timer:
 
 
 def fmt_row(name: str, metrics: dict) -> str:
+    """One aligned ``name  k=v, ...`` line for benchmark stdout tables."""
     parts = ", ".join(
         f"{k}={v:.4g}" if isinstance(v, (int, float, np.floating)) else f"{k}={v}"
         for k, v in metrics.items()

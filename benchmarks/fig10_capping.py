@@ -10,6 +10,7 @@ from repro.workload.functions import paper_functions
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Power-capping controller metrics; ``smoke`` shrinks to CI scale."""
     reg = paper_functions()
     duration = 100.0 if smoke else (180.0 if quick else 1800.0)
     trace = generate_trace(

@@ -12,6 +12,7 @@ from repro.workload.trace import drop_function
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Noisy-neighbor attribution metrics; ``smoke`` shrinks to CI scale."""
     reg = paper_functions()
     duration = 120.0 if smoke else (240.0 if quick else 1800.0)
     base = generate_trace(reg, WorkloadConfig(duration_s=duration, load=0.9, seed=7))

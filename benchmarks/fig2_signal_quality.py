@@ -26,6 +26,7 @@ def _lag_xcorr(a, b, max_lag):
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Sensor degradation-chain quality metrics; ``smoke`` shrinks to CI scale."""
     reg = paper_functions()
     ml = FunctionRegistry([reg["ml_train"]])
     duration = 30.0 if smoke else (120.0 if quick else 600.0)

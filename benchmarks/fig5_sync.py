@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Telemetry skew-sync accuracy metrics; ``smoke`` shrinks to CI scale."""
     reg = paper_functions()
     ml = FunctionRegistry([reg["ml_train"]])
     duration = 40.0 if smoke else (180.0 if quick else 900.0)

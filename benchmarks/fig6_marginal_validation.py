@@ -74,6 +74,7 @@ def _scaphandre(cp, trace, sim, platform: str):
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Marginal-energy validation metrics; ``smoke`` shrinks to CI scale."""
     duration = 120.0 if smoke else (240.0 if quick else 1800.0)
     out = {}
     platforms = (

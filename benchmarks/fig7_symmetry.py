@@ -21,6 +21,7 @@ from repro.workload.functions import FunctionRegistry, paper_functions
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Attribution symmetry metrics; ``smoke`` shrinks to CI scale."""
     reg = paper_functions()
     classes = ["image", "json", "ml_train", "video"]
     clones = []

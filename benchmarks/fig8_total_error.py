@@ -20,6 +20,7 @@ def _total_error(cp, trace):
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Total power-error metrics; ``smoke`` shrinks to CI scale."""
     reg = paper_functions()
     duration = 120.0 if smoke else (240.0 if quick else 1800.0)
     cp = control_plane("desktop")

@@ -11,6 +11,7 @@ from repro.workload.functions import paper_functions
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Energy-pricing variance metrics; ``smoke`` shrinks to CI scale."""
     reg = paper_functions()
     n_traces = 6 if smoke else (8 if quick else 50)
     duration = 120.0 if smoke else (200.0 if quick else 1800.0)

@@ -20,8 +20,11 @@ ingest stage that feeds the streaming engine.  Two questions:
    ``StreamingFleetSession``, with the tick stream pulled on a background
    thread (``session.ingest(prefetch=4)``: sensing of window t + 1 overlaps
    the jitted ``fleet_step`` on window t) vs strict alternation
-   (``prefetch=0``).  Acceptance: overlapped > alternating, no retrace
-   across ticks.
+   (``prefetch=0``), plus the fully drained pipeline
+   (``ingest(prefetch=4, drain=True)``: tick emission moves to a third
+   background thread, so sensing, the jitted step, and attribution
+   materialization all overlap).  Acceptance: overlapped > alternating,
+   drained >= overlapped, no retrace across ticks.
 
 Metrics:
 
@@ -30,9 +33,12 @@ Metrics:
 - ``frontend_speedup``    : loop / fleet (accept >= 3 at B = 64)
 - ``frontend_batch_loop_ms`` / ``frontend_batch_fleet_ms`` /
   ``frontend_batch_speedup`` : segment-form counterparts
-- ``ticks_per_s_alternating`` / ``ticks_per_s_overlapped`` : end-to-end
-  (front-end + engine) tick throughput of the streaming session
+- ``ticks_per_s_alternating`` / ``ticks_per_s_overlapped`` /
+  ``ticks_per_s_drained`` : end-to-end (front-end + engine) tick
+  throughput of the streaming session
 - ``overlap_speedup``     : overlapped / alternating (accept > 1)
+- ``drain_speedup``       : drained / overlapped (accept >= ~1: the emit
+  stage leaves the dispatching thread)
 - ``stream_traces``       : jit cache growth across the measured runs (must
   be 0; -1 if the private jit cache counter is unavailable)
 """
@@ -145,10 +151,12 @@ def _end_to_end(b: int, duration: float, profiler_cfg: ProfilerConfig) -> dict:
             idle_watts=idle, has_chip=True, has_cp=True,
         )
 
-    def run_once(prefetch: int) -> float:
+    def run_once(prefetch: int, drain: bool = False) -> float:
         s = session()
         t0 = time.perf_counter()
-        s.ingest(sim.stream_fleet(traces, seeds=seeds), prefetch=prefetch)
+        s.ingest(
+            sim.stream_fleet(traces, seeds=seeds), prefetch=prefetch, drain=drain
+        )
         s.finalize()
         return time.perf_counter() - t0
 
@@ -157,11 +165,14 @@ def _end_to_end(b: int, duration: float, profiler_cfg: ProfilerConfig) -> dict:
     traces_before = cache_size()
     alt_s = run_once(0)
     ovl_s = run_once(4)
+    drn_s = run_once(4, drain=True)
     return {
         "e2e_shape": f"B{b} ticks{n_ticks}",
         "ticks_per_s_alternating": n_ticks / alt_s,
         "ticks_per_s_overlapped": n_ticks / ovl_s,
+        "ticks_per_s_drained": n_ticks / drn_s,
         "overlap_speedup": alt_s / ovl_s,
+        "drain_speedup": ovl_s / drn_s,
         "stream_traces": (
             cache_size() - traces_before if traces_before is not None else -1
         ),

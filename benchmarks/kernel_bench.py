@@ -78,6 +78,7 @@ def run_disagg(quick: bool = True, smoke: bool = False) -> dict:
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Pallas kernel vs reference-op timings; ``smoke`` shrinks to CI scale."""
     rng = np.random.default_rng(0)
     if smoke:
         b, s, h, hkv, d = 1, 256, 2, 2, 32

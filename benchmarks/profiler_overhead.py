@@ -54,6 +54,7 @@ def _time(f, *args, reps=3):
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Profiler overhead metrics; ``smoke`` shrinks to CI scale."""
     rng = np.random.default_rng(0)
     if smoke:
         nodes, n, m = 8, 60, 16

@@ -89,6 +89,7 @@ def _well_formed(metrics: dict) -> bool:
 
 
 def main() -> None:
+    """CLI: run registered benchmarks and write the strict-JSON artifact."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale durations")
     ap.add_argument(

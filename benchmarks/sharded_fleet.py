@@ -51,6 +51,7 @@ def _best_of(f, reps: int):
 
 
 def run(quick: bool = True, smoke: bool = False) -> dict:
+    """Mesh-sharded fleet engine scaling metrics; ``smoke`` shrinks to CI scale."""
     import numpy as np
 
     from repro.core.batched_engine import (

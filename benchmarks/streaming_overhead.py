@@ -44,6 +44,7 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
     # not on a toy shape where dispatch dwarfs the math.  (Smoke mode trades
     # that realism for seconds-scale execution: the rot gate only needs the
     # loop to run.)
+    """Streaming-session per-tick overhead metrics; ``smoke`` shrinks to CI scale."""
     if smoke:
         b, s, n_w, m = 8, 2, 20, 16
     else:

@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 CI gate: the full test suite must COLLECT cleanly and pass, the
-# tree must stay free of committed bytecode, every public API surface must
-# stay documented, benchmark scripts must still execute (smoke mode), and
-# the mesh-sharded engine must hold its 1e-5 pin on a real multi-device
-# mesh (forced 8-device host platform, its own subprocess).
+# tree must stay free of committed bytecode, the layered-engine import
+# contract must hold (no back-edges), every public API surface must stay
+# documented (auto-discovered — every src/repro + benchmarks module), the
+# benchmark scripts must still execute (smoke mode), and the mesh-sharded
+# engine must hold its 1e-5 pin on a real multi-device mesh (forced
+# 8-device host platform, its own subprocess).
 #
 # pytest exits 2 on collection errors and 1 on failures; both are failures
 # here — a module that stops importing is exactly the regression this gate
@@ -23,6 +25,9 @@ echo "hygiene OK (no __pycache__/*.pyc tracked)"
 echo "== collection check (zero tolerance for import errors) =="
 python -m pytest -q --collect-only >/dev/null
 
+echo "== import-layering contract (kernels -> engine -> sessions -> serving) =="
+python scripts/check_layering.py
+
 echo "== docs check (README/docs present, public API surfaces documented) =="
 for f in README.md docs/architecture.md docs/streaming.md docs/serving.md; do
   [ -f "$f" ] || { echo "missing $f"; exit 1; }
@@ -30,30 +35,25 @@ done
 python - <<'EOF'
 import importlib
 import inspect
+import pathlib
+import pkgutil
 
-SURFACES = (
-    "repro.core.batched_engine",
-    "repro.core.profiler",
-    "repro.core.cpu_model",
-    "repro.core.capping",
-    "repro.core.pricing",
-    "repro.telemetry.counters",
-    "repro.telemetry.sources",
-    "repro.telemetry.simulator",
-    "repro.serving.control_plane",
-    "repro.serving.scheduler",
-    "repro.distributed.sharding",
-    "benchmarks.ragged_fleet",
-    "benchmarks.combined_fleet",
-    "benchmarks.ingest_pipeline",
-    "benchmarks.control_loop",
-    "benchmarks.slot_serving",
-    "benchmarks.hetero_fleet",
+# Auto-discovered surface list: EVERY module under src/repro plus every
+# benchmark script.  A hand-maintained tuple here rotted silently — new
+# modules shipped undocumented because nobody added them to the list.
+import repro
+
+surfaces = ["repro"]
+surfaces += [m.name for m in pkgutil.walk_packages(repro.__path__, prefix="repro.")]
+surfaces += sorted(
+    f"benchmarks.{p.stem}"
+    for p in pathlib.Path("benchmarks").glob("*.py")
+    if p.stem != "__init__"
 )
 # Collect every undocumented symbol across ALL surfaces before failing, so
 # one broken module doesn't hide the rest of the report.
 problems = {}
-for mod_name in SURFACES:
+for mod_name in sorted(surfaces):
     mod = importlib.import_module(mod_name)
     missing = []
     for name, obj in vars(mod).items():
@@ -65,12 +65,11 @@ for mod_name in SURFACES:
             missing.append(name)
     if missing:
         problems[mod_name] = missing
-    else:
-        print(f"docs check OK ({mod_name}: all public symbols documented)")
 if problems:
     for mod_name, missing in problems.items():
         print(f"public symbols without docstrings in {mod_name}: {missing}")
     raise SystemExit(f"docs check failed in {len(problems)} module(s): {sorted(problems)}")
+print(f"docs check OK ({len(surfaces)} modules, all public symbols documented)")
 EOF
 
 echo "== benchmark smoke (tiny shapes; scripts must run + emit sane JSON) =="

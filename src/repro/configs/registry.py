@@ -24,6 +24,7 @@ ARCH_NAMES = list(_MODULES)
 
 
 def get_config(name: str, *, reduced: bool = False) -> ArchConfig:
+    """Architecture config by name (``reduced`` selects the small variant)."""
     if name not in _MODULES:
         raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
     mod = importlib.import_module(_MODULES[name])
@@ -31,6 +32,7 @@ def get_config(name: str, *, reduced: bool = False) -> ArchConfig:
 
 
 def all_configs(*, reduced: bool = False) -> dict[str, ArchConfig]:
+    """Every registered architecture config, keyed by name."""
     return {n: get_config(n, reduced=reduced) for n in ARCH_NAMES}
 
 
@@ -45,10 +47,12 @@ def all_cells() -> list[tuple[str, str, bool]]:
 
 
 def runnable_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) cells not skipped on this container."""
     return [(a, s) for a, s, skip in all_cells() if not skip]
 
 
 def get_shape(name: str) -> ShapeConfig:
+    """Shape config by name."""
     return SHAPES[name]
 
 

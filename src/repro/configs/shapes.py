@@ -40,4 +40,5 @@ def shapes_for(family: str) -> list[ShapeConfig]:
 
 
 def is_skipped(family: str, shape_name: str) -> bool:
+    """True when the (family, shape) cell is excluded (quadratic families at 500k)."""
     return shape_name == "long_500k" and family not in SUBQUADRATIC_FAMILIES

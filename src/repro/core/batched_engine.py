@@ -1,65 +1,76 @@
-"""Fleet-batched energy disaggregation engine.
+"""Deprecated alias for :mod:`repro.core.engine` (the layered package).
 
-The paper's pipeline (disaggregate -> Kalman -> Shapley footprints) is
-defined per node and per Kalman step; the seed drove it with Python loops
-(``fleet_profile`` over nodes, one ``kalman_step`` dispatch per step in the
-reference path).  This module is the compiled fleet-scale hot path: a whole
-fleet of B nodes x M functions x T telemetry ticks (grouped into S Kalman
-steps of ``n_w`` windows) filters in **one** jitted call —
-
-    ``run_fleet``            vmap over nodes + ``lax.scan`` over steps on the
-                             raw (B, S, n_w, M) window blocks; numerically
-                             identical to the sequential reference.
-    ``run_fleet_gram``       the O(M^2)-per-step variant: window statistics
-                             are hoisted into one batched gram pass first
-                             (Pallas kernel on TPU, XLA einsum elsewhere),
-                             so the scan never touches the window dimension.
-    ``run_fleet_sequential`` the seed-semantics oracle: Python loops over
-                             nodes and steps calling ``kalman_step``.  Tests
-                             pin the batched paths against it; benchmarks
-                             time the batched paths against it.
-    ``fleet_step``           the *streaming* engine: one jitted
-                             ``(FleetStreamState, FleetStep) ->
-                             (FleetStreamState, TickAttribution)`` update per
-                             telemetry tick.  Gram/rhs/innovation statistics
-                             accumulate inside the carried state and the
-                             Kalman update fires at step boundaries via
-                             ``lax.cond``, so the control plane can meter,
-                             price, and cap *live* instead of replaying a
-                             finished segment (docs/streaming.md).
-    ``run_fleet_stream``     the segment path re-expressed as ``lax.scan``
-                             over the same step function — one code path for
-                             online and offline, pinned against ``run_fleet``
-                             and the sequential oracle.
-
-Per-tick attribution (``FleetResult.tick_power``) redistributes each tick's
-measured active power over the functions running in it, proportional to
-their estimated draw — the Shapley efficiency property enforced per tick,
-so per-function footprints sum to the measured total by construction.
-
-The engines are target-agnostic: combined mode (§4.3) feeds them the
-chip-subtracted 'rest' power instead of the idle-adjusted system signal,
-built by every profiling path through the shared ``combined_rest_target``
-/ ``fleet_rest_idle`` helpers below (the chip side is attributed by
-``core.cpu_model``'s fleet-batched counter model).
-
-Fleets may be *ragged* — per-node window counts, nodes joining or leaving
-mid-stream: ``pack_fleet_inputs(lengths=)`` pads to the longest node and
-every engine carries the resulting validity mask (``FleetInputs.mask`` /
-``FleetStep.valid``) so padded ticks contribute exactly zero energy and
-masked-out steps freeze the Kalman state (docs/architecture.md, "Ragged
-fleets"; pinned in tests/test_ragged_fleet.py).
+The fleet-batched engine monolith that used to live here was split into
+the composable stage pipeline under ``repro.core.engine`` — see that
+package's docstring for the module DAG and ``docs/architecture.md`` for
+the layering.  This shim re-exports **the same objects** (not copies):
+jit caches, ``lru_cache``'d sharded runners, and ``isinstance`` checks are
+shared between both import paths, so existing code and pickled references
+keep working unchanged.  New code should import from ``repro.core.engine``
+directly; ``tests/test_api_surface.py`` pins this module's surface so
+nothing silently drops out of it.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Callable, NamedTuple, Sequence
+from repro.core.engine import (
+    DEFAULT_BUCKETS,
+    Array,
+    EngineConfig,
+    FleetBucket,
+    FleetInputs,
+    FleetPlan,
+    FleetResult,
+    FleetStep,
+    FleetStreamState,
+    TickAttribution,
+    _apply_mask,
+    _bucket_init_solve,
+    _conserved_split,
+    _fleet_step_impl,
+    _fleet_ticks_masked,
+    _gram_fn,
+    _init_states,
+    _mask_fn_axis,
+    _node_init_gram,
+    _pad_steps,
+    _reset_slots_impl,
+    _reset_slots_local,
+    _run_sharded,
+    _scan_stream,
+    _sharded_reset_runner,
+    _sharded_segment_runner,
+    _sharded_step_runner,
+    bucket_for,
+    bucketed_initial_estimate,
+    bucketed_pad_waste,
+    combined_rest_target,
+    finish_result,
+    fleet_initial_estimate,
+    fleet_rest_idle,
+    fleet_spectrum,
+    fleet_step,
+    fleet_stream_init,
+    fleet_stream_reset_slots,
+    fleet_ticks,
+    pack_fleet_buckets,
+    pack_fleet_inputs,
+    pad_waste_frac,
+    resolve_plan,
+    run_fleet,
+    run_fleet_bucketed,
+    run_fleet_gram,
+    run_fleet_sequential,
+    run_fleet_stream,
+    segment_plan,
+    synthetic_fleet,
+    synthetic_ragged_windows,
+    tick_attribution,
+    warm_bucket_solvers,
+)
 
-import jax
-import jax.numpy as jnp
-
+# The monolith's module namespace also exposed its own imports; keep them
+# resolvable so `from repro.core.batched_engine import X` never regresses.
 from repro.core.footprints import FootprintSpectrum, assemble_spectrum
 from repro.core.kalman import (
     KalmanConfig,
@@ -74,1486 +85,49 @@ from repro.core.kalman import (
     run_kalman_gram,
 )
 
-Array = jax.Array
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    """Engine-wide configuration (hashable: doubles as a static jit arg).
-
-    The same config drives all engine paths — segment, gram-hoisted, and
-    streaming — so a pinned comparison never mixes hyperparameters.
-    """
-
-    kalman: KalmanConfig = KalmanConfig()
-    delta: float = 1.0          # tick (window) length in seconds
-    backend: str = "auto"       # auto | xla | pallas: gram-assembly backend
-    init_iters: int = 400       # NNLS iterations for the whole-trace X_0
-    init_ridge_lambda: float | None = None  # X_0 ridge; None -> kalman's
-
-    @property
-    def init_lam(self) -> float:
-        """Ridge used for the initial X_0 solve (defaults to the Kalman's)."""
-        return (
-            self.kalman.ridge_lambda
-            if self.init_ridge_lambda is None
-            else self.init_ridge_lambda
-        )
-
-
-class FleetInputs(NamedTuple):
-    """One fleet profiling batch: B nodes, S steps of n_w ticks, M functions.
-
-    ``mask`` makes the fleet *ragged*: a ``(B, S, n_w)`` per-tick validity
-    mask (1.0 = real telemetry tick, 0.0 = padding) whose flattened view is
-    the ``(B, T)`` tick mask with ``T = S * n_w``.  ``mask=None`` means
-    every tick is real (the dense fleet — the engines take the exact
-    pre-ragged code path).  The mask is *data*, not a static shape: fleets
-    with different rag patterns share one jit trace.  Masked ticks
-    contribute exactly zero energy and masked-out steps freeze the Kalman
-    state (see ``pack_fleet_inputs`` and docs/architecture.md,
-    "Ragged fleets").
-
-    ``fn_mask`` makes the *function* axis ragged too: a ``(B, M)`` per-node
-    validity mask over the padded function axis (heterogeneous fleets whose
-    nodes host different ``num_fns`` pad M to the fleet max).  Masked
-    functions are folded to zero contributions/invocations before any
-    engine stage and their rows of every estimate/attribution output are
-    forced to exactly zero — a padded function can never absorb energy.
-    Like ``mask`` it is data, not shape: mixes with different per-node
-    function counts share one trace.
-    """
-
-    c: Array          # (B, S, n_w, M) contribution seconds per tick
-    w: Array          # (B, S, n_w) idle-adjusted active power per tick (W)
-    a: Array          # (B, S, M) invocation counts per step
-    lat_sum: Array    # (B, S, M) summed latency per step
-    lat_sumsq: Array  # (B, S, M) summed squared latency per step
-    mask: Array | None = None  # (B, S, n_w) tick validity; None = all real
-    fn_mask: Array | None = None  # (B, M) fn validity; None = all fns real
-
-
-class FleetResult(NamedTuple):
-    """Output of one fleet disaggregation (any engine path).
-
-    ``tick_power``/``unattributed`` are None when computed with
-    ``with_ticks=False``; otherwise ``tick_power.sum(-1) + unattributed``
-    reproduces the measured per-tick power exactly (efficiency per tick).
-    """
-
-    x_final: Array        # (B, M) final per-function power estimate (W)
-    x_trajectory: Array   # (B, S, M) per-step estimates
-    x0: Array             # (B, M) whole-trace initial estimate
-    tick_power: Array | None    # (B, T, M) conserved per-tick power (W)
-    unattributed: Array | None  # (B, T) power in ticks with no activity
-    state: KalmanState    # batched final filter state
-
-
-def _gram_fn(backend: str) -> Callable | None:
-    if backend == "auto":
-        from repro.kernels.disagg_solve import default_backend
-
-        backend = default_backend()
-    if backend == "pallas":
-        from repro.kernels.disagg_solve import disagg_gram
-
-        # Off-TPU the kernel only runs in interpret mode (Python-speed;
-        # for correctness work, which is why explicit backend="pallas"
-        # still honors it rather than failing at compile time).
-        return functools.partial(
-            disagg_gram, interpret=jax.default_backend() != "tpu"
-        )
-    if backend == "xla":
-        return None
-    raise ValueError(f"unknown gram backend: {backend!r}")
-
-
-def _node_init_gram(c_node: Array, w_node: Array) -> tuple[Array, Array]:
-    """Whole-trace gram/rhs for one node via flat matmuls.
-
-    The flat (S*n_w, M) contraction is used (rather than a stepwise einsum)
-    because XLA keeps its reduction order identical under vmap — the batched
-    engine and the sequential oracle see bitwise-equal grams.
-    """
-    cf = c_node.reshape(-1, c_node.shape[-1])
-    return cf.T @ cf, cf.T @ w_node.reshape(-1)
-
-
-def fleet_initial_estimate(
-    c: Array, w: Array, config: EngineConfig = EngineConfig(), *, gram_fn=None
-) -> Array:
-    """(B, M) statistical disaggregation X_0 per node (§4.2).
-
-    Accepts (B, N, M)/(B, N) window blocks or (B, S, n_w, M)/(B, S, n_w)
-    step blocks — grams are additive over windows either way — and runs one
-    batched gram-domain NNLS, no per-node loop.
-    """
-    from repro.core.disaggregation import solve_nnls_gram
-
-    m = c.shape[-1]
-    eye = config.init_lam * jnp.eye(m, dtype=c.dtype)
-    if gram_fn is None:
-        if c.shape[0] == 1:
-            # XLA lowers batch-1 contractions differently from both the
-            # plain and batch-N forms; route through the plain form so a
-            # one-node fleet still matches the sequential oracle bitwise.
-            g1, r1 = _node_init_gram(c[0], w[0])
-            return solve_nnls_gram(g1 + eye, r1, iters=config.init_iters)[None]
-        gram, rhs = jax.vmap(_node_init_gram)(c, w)
-    else:
-        gram, rhs = gram_fn(c.reshape(c.shape[0], -1, m), w.reshape(w.shape[0], -1))
-    return solve_nnls_gram(gram + eye, rhs, iters=config.init_iters)
-
-
-def _init_states(x0: Array) -> KalmanState:
-    return jax.vmap(lambda x: kalman_init(x.shape[-1], x0=x))(x0)
-
-
-@jax.jit
-def fleet_rest_idle(chip_init: Array, idle_watts) -> Array:
-    """Idle power of the non-chip components, per node (§4.3).
-
-    Approximated as total idle minus the chip's observed floor over the
-    N_init initial-estimate block:  ``max(idle - min(chip_init), 0)``.
-    Using the init block (rather than the full segment) keeps the estimate
-    identical across the per-node, batched, and *streaming* paths — the
-    stream knows only the init windows when it must start producing
-    combined targets — and never reads past the accounting segment.
-
-    Args:
-      chip_init: (..., N_init) chip power over the init block (one node or
-        a (B, N_init) fleet).
-      idle_watts: scalar or (...,) per-node total idle power.
-
-    Returns:
-      (...,) rest-side idle watts, traceable (no host sync).
-    """
-    return jnp.maximum(
-        jnp.asarray(idle_watts, jnp.float32) - jnp.min(chip_init, axis=-1), 0.0
-    )
-
-
-@jax.jit
-def combined_rest_target(w_sys: Array, chip: Array, rest_idle) -> Array:
-    """Combined-mode (§4.3) disaggregation target: the 'rest' power.
-
-    ``max(W_sys - W_chip - rest_idle, 0)`` — the chip side is modeled by
-    the linear counter model, so the Kalman/NNLS engines disaggregate only
-    what is left of the system signal.  Pure broadcasting: callers align
-    ``rest_idle`` themselves (scalar, or ``(B, 1)`` against ``(B, N)``
-    windows, or ``(B,)`` against per-tick ``(B,)`` power).  All three fleet
-    engines and the per-node profiler build their combined targets through
-    this single helper, so the mode cannot drift between paths.  Masked
-    (padded) ticks arrive with ``w_sys = chip = 0`` after the engines'
-    mask fold and therefore produce a zero target (``rest_idle >= 0``).
-    """
-    return jnp.maximum(w_sys - chip - rest_idle, 0.0)
-
-
-def _apply_mask(inputs: FleetInputs) -> FleetInputs:
-    """Fold a ragged fleet's validity mask into its data (identity if dense).
-
-    Masked ticks get ``c = 0`` and ``w = 0`` — to the update rule they are
-    indistinguishable from silent windows, so their gram/rhs/innovation
-    contributions vanish *exactly* (adding a float zero is exact) — and
-    steps with no valid tick additionally get zeroed invocation/latency
-    statistics, which freezes the Kalman state on them: ``_apply_update``
-    keeps ``x``/``p``/``seen`` and the latency moments wherever
-    ``a_step == 0``.  This is the single place mask semantics are defined;
-    every segment engine (and the sequential oracle) routes its inputs
-    through here, so the three paths cannot disagree on what a masked tick
-    means.  Because masking is a data-dependent multiply, not a shape
-    change, differing rag patterns reuse one compiled trace.
-
-    The fn-axis mask folds here too: masked functions get zeroed
-    contribution columns and invocation/latency statistics, so they feed no
-    gram column and no latency moment — to the update rule they are
-    functions that never run.  (Their output rows are additionally forced
-    to zero by ``_mask_fn_axis`` on the way out of every engine.)
-    """
-    if inputs.mask is None and inputs.fn_mask is None:
-        return inputs
-    c, w = inputs.c, inputs.w
-    a, ls, lq = inputs.a, inputs.lat_sum, inputs.lat_sumsq
-    if inputs.fn_mask is not None:
-        fm = inputs.fn_mask.astype(c.dtype)
-        c = c * fm[:, None, None, :]
-        a = a * fm[:, None, :]
-        ls = ls * fm[:, None, :]
-        lq = lq * fm[:, None, :]
-    if inputs.mask is not None:
-        m = inputs.mask.astype(c.dtype)
-        step_live = (jnp.sum(m, axis=-1) > 0).astype(a.dtype)[..., None]
-        c = c * m[..., None]
-        w = w * m
-        a = a * step_live
-        ls = ls * step_live
-        lq = lq * step_live
-    return FleetInputs(
-        c=c, w=w, a=a, lat_sum=ls, lat_sumsq=lq,
-        mask=inputs.mask, fn_mask=inputs.fn_mask,
-    )
-
-
-def _mask_fn_axis(result: FleetResult, fn_mask: Array | None) -> FleetResult:
-    """Force masked functions' output rows to exactly zero (identity if dense).
-
-    ``_apply_mask`` already removes masked functions from every input
-    statistic, so their estimates sit at the NNLS/Kalman zero fixed point
-    and their attribution is a product with a zero contribution column —
-    this fold turns that argument into a guarantee: x0, trajectory, final
-    estimate, and tick attribution are *exactly* 0.0 on masked rows
-    regardless of solver iteration counts.  The Kalman ``state`` is left
-    untouched (it is internal filter state; its masked rows never reach an
-    output unmasked).
-    """
-    if fn_mask is None:
-        return result
-    fm = fn_mask.astype(result.x_final.dtype)
-    return result._replace(
-        x_final=result.x_final * fm,
-        x_trajectory=result.x_trajectory * fm[:, None, :],
-        x0=result.x0 * fm,
-        tick_power=None
-        if result.tick_power is None
-        else result.tick_power * fm[:, None, :],
-    )
-
-
-# ---------------------------------------------------------------------------
-# Mesh-sharded execution: the B-node axis over a FleetMesh via shard_map.
-# ---------------------------------------------------------------------------
-
-
-@functools.lru_cache(maxsize=None)
-def _sharded_segment_runner(fn, config: EngineConfig, with_ticks: bool, mesh, default_init: bool):
-    """Compiled shard_map wrapper for a segment engine (``run_fleet``,
-    ``run_fleet_gram``, or ``run_fleet_stream``).
-
-    Each device traces the *unsharded* engine on its local ``B/n`` node
-    block — per-node Kalman/disaggregation math is node-independent, so the
-    sharded program contains no collectives at all; fleet-level reductions
-    live in ``distributed.sharding.fleet_attribution_totals``.  Cached per
-    (engine, config, with_ticks, mesh, default_init) so repeated calls
-    (benchmarks, the control plane's per-segment loop) reuse one
-    executable.  ``default_init`` selects the no-init-block variant, which
-    lets the engine derive X_0 from its (mask-folded) local inputs on
-    device instead of the host pre-computing masked defaults.
-    """
-    from jax.sharding import PartitionSpec as P
-
-    from repro.distributed.compat import shard_map
-
-    node = P(mesh.axis)
-
-    if default_init:
-        def local(inputs):
-            return fn(inputs, config, with_ticks=with_ticks)
-
-        in_specs = (node,)
-    else:
-        def local(inputs, init_c, init_w):
-            return fn(inputs, config, init_c=init_c, init_w=init_w, with_ticks=with_ticks)
-
-        in_specs = (node, node, node)
-
-    return jax.jit(
-        shard_map(
-            local,
-            mesh=mesh.mesh,
-            in_specs=in_specs,
-            out_specs=node,
-            check_vma=False,
-        )
-    )
-
-
-def _run_sharded(fn, inputs, config, init_c, init_w, with_ticks, mesh) -> FleetResult:
-    """Dispatch a segment engine over a ``FleetMesh`` (see docs/architecture.md)."""
-    mesh.validate(inputs.c.shape[0])
-    default_init = init_c is None and init_w is None
-    runner = _sharded_segment_runner(fn, config, with_ticks, mesh, default_init)
-    if default_init:
-        # The engine folds the mask and derives X_0 per local shard.
-        return runner(inputs)
-    if init_c is None or init_w is None:
-        # Mixed case: the missing default must be the MASKED inputs, or a
-        # ragged fleet's padding would leak into the init gram.
-        masked = _apply_mask(inputs)
-        init_c = masked.c if init_c is None else init_c
-        init_w = masked.w if init_w is None else init_w
-    return runner(inputs, init_c, init_w)
-
-
-def run_fleet(
-    inputs: FleetInputs,
-    config: EngineConfig = EngineConfig(),
-    *,
-    init_c: Array | None = None,
-    init_w: Array | None = None,
-    with_ticks: bool = True,
-    mesh=None,
-) -> FleetResult:
-    """The batched engine: three fleet-wide jitted stages, no Python loops.
-
-    Stage 1 solves every node's whole-trace X_0 in one batched NNLS (over
-    ``init_c``/``init_w`` — a dedicated N_init window block, profiler-style
-    — when given, else over all steps); stage 2 — the hot loop — filters
-    all B nodes x S steps x n_w ticks in a single jitted ``vmap``+``scan``
-    call; stage 3 computes conserved per-tick attribution.  The stages are
-    separate jit boundaries (rather than one fused program) so each
-    compiles identically to the sequential oracle's building blocks — which
-    is what lets tests pin batched == sequential to float-reassociation
-    noise.
-
-    With ``mesh`` (a ``distributed.sharding.FleetMesh``) the node axis is
-    sharded over the mesh devices via ``shard_map``: each device runs these
-    same stages on its local node block, collective-free, pinned to the
-    unsharded result at 1e-5 (tests/test_sharded_fleet.py).
-
-    Ragged fleets: with ``inputs.mask`` set, masked ticks are folded to
-    zero telemetry (``_apply_mask``) before any stage runs — they feed no
-    gram/innovation statistics, attribute exactly 0 W in ``tick_power``,
-    and fully-masked steps leave the per-node Kalman state untouched (the
-    trajectory repeats the frozen estimate)."""
-    if mesh is not None:
-        return _run_sharded(run_fleet, inputs, config, init_c, init_w, with_ticks, mesh)
-    inputs = _apply_mask(inputs)
-    x0 = fleet_initial_estimate(
-        inputs.c if init_c is None else init_c,
-        inputs.w if init_w is None else init_w,
-        config,
-    )
-    if inputs.c.shape[0] == 1:
-        # Batch-1 vmap lowers contractions differently; keep the one-node
-        # fleet on the plain scan so it matches the oracle bitwise.
-        final1, traj1 = run_kalman(
-            kalman_init(inputs.c.shape[-1], x0=x0[0]), inputs.c[0], inputs.w[0],
-            inputs.a[0], inputs.lat_sum[0], inputs.lat_sumsq[0], config.kalman,
-        )
-        final = jax.tree.map(lambda l: l[None], final1)
-        traj = traj1[None]
-    else:
-        final, traj = run_kalman_fleet(
-            _init_states(x0), inputs.c, inputs.w, inputs.a,
-            inputs.lat_sum, inputs.lat_sumsq, config.kalman,
-        )
-    tick_power = unattributed = None
-    if with_ticks:
-        tick_power, unattributed = tick_attribution(
-            inputs.c, inputs.w, traj, delta=config.delta
-        )
-    return _mask_fn_axis(
-        FleetResult(
-            x_final=final.x, x_trajectory=traj, x0=x0,
-            tick_power=tick_power, unattributed=unattributed, state=final,
-        ),
-        inputs.fn_mask,
-    )
-
-
-def run_fleet_gram(
-    inputs: FleetInputs,
-    config: EngineConfig = EngineConfig(),
-    *,
-    init_c: Array | None = None,
-    init_w: Array | None = None,
-    with_ticks: bool = True,
-    mesh=None,
-) -> FleetResult:
-    """Gram-hoisted engine: window statistics reduced once (Pallas kernel on
-    TPU, XLA einsum elsewhere), then an O(M^2)-per-step fleet scan that
-    never touches the window dimension.  Same update rule as ``run_fleet``;
-    equal up to float reassociation of the hoisted contractions.  ``mesh``
-    shards the node axis exactly as in ``run_fleet``; ``inputs.mask``
-    makes the fleet ragged exactly as in ``run_fleet`` (masked ticks are
-    zeroed *before* the gram hoist, so they drop out of the hoisted
-    statistics too)."""
-    if mesh is not None:
-        return _run_sharded(
-            run_fleet_gram, inputs, config, init_c, init_w, with_ticks, mesh
-        )
-    inputs = _apply_mask(inputs)
-    gram_fn = _gram_fn(config.backend)
-    x0 = fleet_initial_estimate(
-        inputs.c if init_c is None else init_c,
-        inputs.w if init_w is None else init_w,
-        config, gram_fn=gram_fn,
-    )
-    step_inputs = precompute_step_inputs(
-        inputs.c, inputs.w, inputs.a, inputs.lat_sum, inputs.lat_sumsq,
-        config.kalman, gram_fn=gram_fn,
-    )
-    if inputs.c.shape[0] == 1:
-        final1, traj1 = run_kalman_gram(
-            kalman_init(inputs.c.shape[-1], x0=x0[0]),
-            jax.tree.map(lambda l: l[0], step_inputs),
-            config.kalman,
-        )
-        final = jax.tree.map(lambda l: l[None], final1)
-        traj = traj1[None]
-    else:
-        final, traj = run_kalman_fleet_gram(_init_states(x0), step_inputs, config.kalman)
-    tick_power = unattributed = None
-    if with_ticks:
-        tick_power, unattributed = tick_attribution(
-            inputs.c, inputs.w, traj, delta=config.delta
-        )
-    return _mask_fn_axis(
-        FleetResult(
-            x_final=final.x, x_trajectory=traj, x0=x0,
-            tick_power=tick_power, unattributed=unattributed, state=final,
-        ),
-        inputs.fn_mask,
-    )
-
-
-def run_fleet_sequential(
-    inputs: FleetInputs,
-    config: EngineConfig = EngineConfig(),
-    *,
-    init_c: Array | None = None,
-    init_w: Array | None = None,
-    with_ticks: bool = True,
-) -> FleetResult:
-    """Sequential-reference oracle (seed semantics, Python loops).
-
-    Loops nodes x steps calling the per-step ``kalman_step`` exactly as the
-    seed's per-node profiler did; used by tests as the ground truth the
-    batched paths must reproduce and by benchmarks as the baseline.
-    Ragged fleets go through the same ``_apply_mask`` fold as the batched
-    engines, so the oracle defines masked semantics too."""
-    from repro.core.disaggregation import solve_nnls_gram
-
-    inputs = _apply_mask(inputs)
-
-    b, s, n_w, m = inputs.c.shape
-    ic = inputs.c if init_c is None else init_c
-    iw = inputs.w if init_w is None else init_w
-    eye = config.init_lam * jnp.eye(m, dtype=jnp.float32)
-    x0s = []
-    for i in range(b):
-        gram, rhs = _node_init_gram(ic[i], iw[i])
-        x0s.append(solve_nnls_gram(gram + eye, rhs, iters=config.init_iters))
-    x0 = jnp.stack(x0s)
-    finals, trajs = [], []
-    for i in range(b):
-        state = kalman_init(m, x0=x0[i])
-        xs = []
-        for j in range(s):
-            state, x = kalman_step(
-                state,
-                inputs.c[i, j],
-                inputs.w[i, j],
-                inputs.a[i, j],
-                inputs.lat_sum[i, j],
-                inputs.lat_sumsq[i, j],
-                config.kalman,
-            )
-            xs.append(x)
-        finals.append(state)
-        trajs.append(jnp.stack(xs))
-    traj = jnp.stack(trajs)
-    state = jax.tree.map(lambda *leaves: jnp.stack(leaves), *finals)
-    tick_power = unattributed = None
-    if with_ticks:
-        tick_power, unattributed = tick_attribution(
-            inputs.c, inputs.w, traj, delta=config.delta
-        )
-    return _mask_fn_axis(
-        FleetResult(
-            x_final=state.x, x_trajectory=traj, x0=x0,
-            tick_power=tick_power, unattributed=unattributed, state=state,
-        ),
-        inputs.fn_mask,
-    )
-
-
-def _conserved_split(raw: Array, w: Array, delta: float) -> tuple[Array, Array]:
-    """Split measured power ``w`` proportional to estimated draw ``raw``.
-
-    ``raw`` is (..., M) estimated joules per tick, ``w`` the matching (...)
-    measured watts.  Returns (tick_power, unattributed) with
-    ``tick_power.sum(-1) + unattributed == w`` by construction — the single
-    source of the conservation invariant, shared by the segment engine's
-    ``tick_attribution`` and the streaming step's live attribution so the
-    two cannot drift.  Ticks with vanishing predicted draw go to the
-    unattributed channel: dividing by them would destroy the conservation
-    invariant instead of enforcing it.
-    """
-    pred = jnp.sum(raw, axis=-1) / delta                # (...) watts
-    has = pred > 1e-9
-    scale = jnp.where(has, w / jnp.where(has, pred, 1.0), 0.0)
-    return (raw / delta) * scale[..., None], jnp.where(has, 0.0, w)
-
-
-@functools.partial(jax.jit, static_argnames=("delta",))
-def tick_attribution(
-    c: Array,      # (B, S, n_w, M)
-    w: Array,      # (B, S, n_w) measured active power per tick
-    traj: Array,   # (B, S, M) per-step estimates
-    *,
-    delta: float = 1.0,
-) -> tuple[Array, Array]:
-    """Conserved per-tick power attribution (efficiency enforced per tick).
-
-    Each tick's measured active power is split over the functions running in
-    it, proportional to estimated draw ``C[t, j] * X[j]``.  By construction
-    ``tick_power.sum(-1) + unattributed == w`` tick-by-tick, which is the
-    Shapley efficiency property at tick granularity; ``unattributed`` is
-    power measured in ticks where no function ran (sensor noise/lag).
-    """
-    b, s, n_w, m = c.shape
-    raw = c * traj[:, :, None, :]                       # (B, S, n_w, M) joules
-    tick_power, unattributed = _conserved_split(raw, w, delta)
-    return tick_power.reshape(b, s * n_w, m), unattributed.reshape(b, s * n_w)
-
-
-# ---------------------------------------------------------------------------
-# Streaming incremental engine: one jitted update per telemetry tick.
-# ---------------------------------------------------------------------------
-
-
-class FleetStep(NamedTuple):
-    """Inputs for ONE telemetry tick (delta window) across the fleet.
-
-    Shapes: B nodes x M functions.  ``a``/``lat_sum``/``lat_sumsq`` carry the
-    invocations *starting* in this tick; the engine only reads their running
-    sums at Kalman-step boundaries, so any within-step placement that sums to
-    the per-step statistics is equivalent (``fleet_ticks`` puts each step's
-    totals on its first valid tick when replaying segment inputs).
-
-    ``valid`` makes the tick *ragged*: a per-node liveness flag (1.0 = this
-    node really produced this tick; 0.0 = the node's stream has ended, has
-    not joined yet, or dropped the window).  Invalid node-ticks are folded
-    to zero telemetry before they touch the ring buffer or the attribution
-    split, so a dead node contributes nothing mid-step and its Kalman state
-    freezes once a whole step passes without valid ticks — global stream
-    time keeps advancing for the live nodes.  ``valid=None`` means every
-    node is live (the dense fleet; identical trace to the pre-ragged step).
-    """
-
-    c: Array          # (B, M) contribution seconds within this tick
-    w: Array          # (B,)   idle-adjusted active power this tick (W)
-    a: Array          # (B, M) invocations starting in this tick
-    lat_sum: Array    # (B, M) summed latency of those invocations (s)
-    lat_sumsq: Array  # (B, M) summed squared latency (s^2)
-    valid: Array | None = None  # (B,) node liveness this tick; None = all live
-
-
-class FleetStreamState(NamedTuple):
-    """Carried state of the streaming engine (the state-carry contract).
-
-    Everything the per-tick update needs lives here — the batched Kalman
-    filter state, a ring buffer of the current partial step's ticks, and the
-    running invocation/latency statistics.  The jitted ``fleet_step``
-    donates this state, so in steady streaming every buffer is updated in
-    place and a tick is O(B M): two in-place row writes plus element-wise
-    accumulation.  The O(B M^2) gram assembly and the NNLS/Kalman update run
-    only at step boundaries (inside ``lax.cond``), contracting the full
-    buffer with the *same* einsum as the segment gram engine — which is what
-    keeps the streaming trajectory pinned to the segment paths.
-
-    Invariants (see docs/streaming.md):
-      - ``tick_in_step`` in [0, n_w); rows [0, tick_in_step) of
-        ``c_buf``/``w_buf`` hold the current partial step (rows beyond it
-        are stale — fully overwritten before the next boundary reads them);
-      - ``a``/``lat_sum``/``lat_sumsq`` accumulate the partial step and are
-        zeroed at each boundary;
-      - ``step_idx`` counts completed Kalman steps.
-    """
-
-    kalman: KalmanState  # batched filter state, leading node axis B
-    c_buf: Array         # (B, n_w, M) contribution rows of the partial step
-    w_buf: Array         # (B, n_w)    power ticks of the partial step
-    a: Array             # (B, M)      invocations so far in partial step
-    lat_sum: Array       # (B, M)
-    lat_sumsq: Array     # (B, M)
-    tick_in_step: Array  # ()          int32 ticks in the partial step
-    step_idx: Array      # ()          int32 completed Kalman steps
-
-
-class TickAttribution(NamedTuple):
-    """Live per-tick output of the streaming engine.
-
-    ``tick_power`` is the *causal* conserved attribution: this tick's
-    measured power split over the functions running in it, proportional to
-    ``c * x`` under the latest available estimate (post-update on boundary
-    ticks, the carried estimate mid-step).  It satisfies
-    ``tick_power.sum(-1) + unattributed == w`` by construction — the same
-    efficiency property as the segment engine's ``tick_attribution``, which
-    differs only in using the step's final estimate for *all* its ticks
-    (smoothed-within-step; see docs/streaming.md).
-    """
-
-    tick_power: Array     # (B, M) conserved per-tick power (W)
-    unattributed: Array   # (B,)   power in ticks with no activity (W)
-    x: Array              # (B, M) estimate after processing this tick (W)
-    step_completed: Array  # ()    bool: did this tick close a Kalman step
-
-
-def fleet_stream_init(
-    x0: Array, n_w: int, config: EngineConfig = EngineConfig(), *, mesh=None
-) -> FleetStreamState:
-    """Initial streaming state from a (B, M) whole-trace estimate X_0.
-
-    Args:
-      x0: (B, M) initial estimate — from ``fleet_initial_estimate`` over the
-        init segment (§4.2), a previous session's final state, or another
-        node's estimate (warm handoff *at a step boundary*; a handoff into
-        a slot whose previous tenant wrote ticks earlier in the current
-        partial step must go through ``fleet_stream_reset_slots``, which
-        also clears the slot's ring-buffer rows).
-      n_w: ticks per Kalman step (sizes the partial-step ring buffer; must
-        match the ``n_w`` later passed to ``fleet_step``).
-      config: engine configuration.
-      mesh: optional ``distributed.sharding.FleetMesh``; the state is placed
-        sharded over the node axis (scalar counters replicated), so the
-        donated buffers live distributed for the whole stream — pass the
-        same mesh to every subsequent ``fleet_step``.
-
-    Returns:
-      ``FleetStreamState`` with an empty partial step.
-    """
-    b, m = x0.shape
-    zf = functools.partial(jnp.zeros, dtype=jnp.float32)
-    # Copy x0: the returned state is donated by ``fleet_step``, and the
-    # filter's initial x would otherwise alias the caller's buffer.
-    x0 = jnp.array(x0, jnp.float32, copy=True)
-    state = FleetStreamState(
-        kalman=_init_states(x0),
-        c_buf=zf((b, n_w, m)),
-        w_buf=zf((b, n_w)),
-        a=zf((b, m)),
-        lat_sum=zf((b, m)),
-        lat_sumsq=zf((b, m)),
-        tick_in_step=jnp.zeros((), jnp.int32),
-        step_idx=jnp.zeros((), jnp.int32),
-    )
-    if mesh is not None:
-        mesh.validate(b)
-        state = mesh.put(state)
-    return state
-
-
-@functools.lru_cache(maxsize=None)
-def _sharded_step_runner(config: EngineConfig, mesh, has_valid: bool):
-    """shard_map of the streaming step over a ``FleetMesh`` (cached per
-    (config, mesh, has_valid) — together with the jit cache this keeps the
-    sharded stream at exactly one trace for its whole lifetime).
-
-    Array state/step/attribution leaves shard over the node axis — the
-    ragged-fleet ``valid`` flag included, so each device only ever sees its
-    own node block's liveness; the scalar
-    ``tick_in_step``/``step_idx``/``step_completed`` counters are
-    replicated (every device advances them identically).
-    """
-    from jax.sharding import PartitionSpec as P
-
-    from repro.distributed.compat import shard_map
-
-    node, rep = P(mesh.axis), P()
-    state_specs = FleetStreamState(
-        kalman=node, c_buf=node, w_buf=node, a=node,
-        lat_sum=node, lat_sumsq=node, tick_in_step=rep, step_idx=rep,
-    )
-    step_specs = FleetStep(
-        c=node, w=node, a=node, lat_sum=node, lat_sumsq=node,
-        valid=node if has_valid else None,
-    )
-    att_specs = TickAttribution(
-        tick_power=node, unattributed=node, x=node, step_completed=rep
-    )
-    return shard_map(
-        functools.partial(_fleet_step_impl, config=config),
-        mesh=mesh.mesh,
-        in_specs=(state_specs, step_specs),
-        out_specs=(state_specs, att_specs),
-        check_vma=False,
-    )
-
-
-def _fleet_step_impl(
-    state: FleetStreamState,
-    step: FleetStep,
-    config: EngineConfig,
-    mesh=None,
-) -> tuple[FleetStreamState, TickAttribution]:
-    """One streaming tick: buffer the tick, update at step boundaries.
-
-    The step length n_w is the ring buffer's static shape
-    (``state.c_buf.shape[1]``, fixed by ``fleet_stream_init``).  Mid-step
-    ticks are O(B M): the tick's contribution/power rows are written in
-    place into the carried ring buffer (the donated state makes these true
-    in-place updates) and the invocation/latency sums accumulate.  Every
-    ``n_w``-th tick closes the step behind ``lax.cond`` — only the taken
-    branch executes — reducing the full buffer through the segment gram
-    engine's own ``precompute_step_inputs`` and running the batched
-    gram-domain Kalman update: the same update rule as ``run_fleet_gram``.
-
-    With ``mesh`` the whole update runs under ``shard_map`` over the node
-    axis: the carried state stays sharded on-device (each device owns its
-    node block's ring buffer and filter state), the per-tick math is
-    collective-free, and the replicated ``tick_in_step``/``step_idx``
-    counters drive the *same* boundary ``lax.cond`` on every device.
-
-    Ragged fleets (``step.valid``): invalid node-ticks write zero rows
-    into the ring buffer and add nothing to the invocation sums, so the
-    boundary update reduces each node's step over exactly its valid ticks
-    — the same semantics as the segment engines' ``_apply_mask`` — and
-    their attribution is exactly zero.  ``valid`` is data: a stream keeps
-    its single trace as nodes come and go.
-    """
-    if mesh is not None:
-        step_fn = _sharded_step_runner(config, mesh, step.valid is not None)
-        return step_fn(state, step)
-    if step.valid is not None:
-        v = step.valid.astype(step.c.dtype)
-        step = FleetStep(
-            c=step.c * v[:, None], w=step.w * v,
-            a=step.a * v[:, None], lat_sum=step.lat_sum * v[:, None],
-            lat_sumsq=step.lat_sumsq * v[:, None],
-        )
-    kcfg = config.kalman
-    n_w = state.c_buf.shape[1]
-    c_buf = jax.lax.dynamic_update_index_in_dim(
-        state.c_buf, step.c, state.tick_in_step, axis=1
-    )
-    w_buf = jax.lax.dynamic_update_index_in_dim(
-        state.w_buf, step.w, state.tick_in_step, axis=1
-    )
-    a = state.a + step.a
-    lat_sum = state.lat_sum + step.lat_sum
-    lat_sumsq = state.lat_sumsq + step.lat_sumsq
-    tick = state.tick_in_step + 1
-    boundary = tick >= n_w
-
-    acc = (a, lat_sum, lat_sumsq)
-
-    def do_update(operand):
-        kal, (a, ls, lq) = operand
-        inp = precompute_step_inputs(c_buf, w_buf, a, ls, lq, kcfg)
-        kal, _ = jax.vmap(lambda st, i: kalman_step_gram(st, i, kcfg))(kal, inp)
-        return kal, jax.tree.map(jnp.zeros_like, (a, ls, lq))
-
-    def no_update(operand):
-        return operand
-
-    kal, acc = jax.lax.cond(boundary, do_update, no_update, (state.kalman, acc))
-    a, lat_sum, lat_sumsq = acc
-
-    # Causal conserved attribution under the freshest estimate.
-    tick_power, unattributed = _conserved_split(step.c * kal.x, step.w, config.delta)
-    att = TickAttribution(
-        tick_power=tick_power,
-        unattributed=unattributed,
-        x=kal.x,
-        step_completed=boundary,
-    )
-    new_state = FleetStreamState(
-        kalman=kal, c_buf=c_buf, w_buf=w_buf,
-        a=a, lat_sum=lat_sum, lat_sumsq=lat_sumsq,
-        tick_in_step=jnp.where(boundary, 0, tick),
-        step_idx=state.step_idx + boundary.astype(jnp.int32),
-    )
-    return new_state, att
-
-
-fleet_step = functools.partial(
-    jax.jit, static_argnames=("config", "mesh"), donate_argnums=(0,)
-)(_fleet_step_impl)
-fleet_step.__doc__ = """Jitted streaming tick update (donates ``state``).
-
-``fleet_step(state, step, config=..., mesh=...)`` — the live metering hot
-path.  ``config`` and ``mesh`` are static and the step length n_w comes
-from the state's ring buffer shape (set by ``fleet_stream_init``), so
-there is one trace per (fleet shape, config, mesh, has-valid) tuple,
-reused for every subsequent tick — ``step.valid``'s *values* are data, so
-ragged fleets with changing liveness never retrace; the retracing guards
-in tests/test_streaming_engine.py, tests/test_sharded_fleet.py, and
-tests/test_ragged_fleet.py pin this.
-The input ``state`` is donated — its buffers are reused for the output
-state (in place, and still sharded when a ``FleetMesh`` is active), so the
-caller must rebind (``state, att = fleet_step(state, step, ...)``) and must
-not touch the old state afterwards.
-"""
-
-
-def _reset_slots_local(
-    state: FleetStreamState, reset: Array, x0: Array
-) -> FleetStreamState:
-    """Unsharded slot-reset body (see ``fleet_stream_reset_slots``)."""
-    r = reset.astype(jnp.float32)                       # (B,) 1 = reset
-    rb = r[:, None] > 0                                 # (B, 1)
-    fresh = _init_states(x0.astype(jnp.float32))
-    kal = KalmanState(
-        x=jnp.where(rb, fresh.x, state.kalman.x),
-        p=jnp.where(rb, fresh.p, state.kalman.p),
-        seen=jnp.where(rb, fresh.seen, state.kalman.seen),
-        lat_mean=jnp.where(rb, fresh.lat_mean, state.kalman.lat_mean),
-        lat_m2=jnp.where(rb, fresh.lat_m2, state.kalman.lat_m2),
-        lat_count=jnp.where(rb, fresh.lat_count, state.kalman.lat_count),
-    )
-    keep = 1.0 - r
-    return FleetStreamState(
-        kalman=kal,
-        c_buf=state.c_buf * keep[:, None, None],
-        w_buf=state.w_buf * keep[:, None],
-        a=state.a * keep[:, None],
-        lat_sum=state.lat_sum * keep[:, None],
-        lat_sumsq=state.lat_sumsq * keep[:, None],
-        tick_in_step=state.tick_in_step,
-        step_idx=state.step_idx,
-    )
-
-
-@functools.lru_cache(maxsize=None)
-def _sharded_reset_runner(mesh):
-    """shard_map of the slot reset over a ``FleetMesh`` (cached per mesh).
-
-    The reset flags and replacement X_0 rows shard with the node axis —
-    each device rewrites only its own slot block; the replicated step
-    counters pass through untouched, so the reset composes with a live
-    sharded stream without any collective."""
-    from jax.sharding import PartitionSpec as P
-
-    from repro.distributed.compat import shard_map
-
-    node, rep = P(mesh.axis), P()
-    state_specs = FleetStreamState(
-        kalman=node, c_buf=node, w_buf=node, a=node,
-        lat_sum=node, lat_sumsq=node, tick_in_step=rep, step_idx=rep,
-    )
-    return shard_map(
-        _reset_slots_local,
-        mesh=mesh.mesh,
-        in_specs=(state_specs, node, node),
-        out_specs=state_specs,
-        check_vma=False,
-    )
-
-
-def _reset_slots_impl(
-    state: FleetStreamState, reset: Array, x0: Array, mesh=None
-) -> FleetStreamState:
-    if mesh is not None:
-        return _sharded_reset_runner(mesh)(state, reset, x0)
-    return _reset_slots_local(state, reset, x0)
-
-
-fleet_stream_reset_slots = functools.partial(
-    jax.jit, static_argnames=("mesh",), donate_argnums=(0,)
-)(_reset_slots_impl)
-fleet_stream_reset_slots.__doc__ = """Jitted slot reset on a live stream (donates ``state``).
-
-``fleet_stream_reset_slots(state, reset, x0, mesh=...)`` rewrites the rows
-of every slot flagged in ``reset`` ((B,) 1.0/0.0, *data* — any combination
-of slots reuses one trace) to a fresh tenant: the Kalman row becomes
-``kalman_init`` of that slot's row of ``x0`` ((B, M); ignored where
-``reset`` is 0), and the slot's ring-buffer rows and partial-step
-invocation/latency accumulators are zeroed.  The global
-``tick_in_step``/``step_idx`` counters are untouched — the new tenant
-joins the fleet's step clock mid-step.
-
-This is the claim primitive of the slot pool
-(``core.profiler.SlotFleetSession.admit``) and the fix for the
-die-and-rejoin leak: ``FleetStep.valid`` only zeroes ticks from the moment
-a node goes invalid, so rows its slot wrote *earlier in the current
-partial step* (a dead tenant's last ticks, or a previous tenant entirely)
-would otherwise be reduced into the next boundary update of whoever holds
-the slot next.  Resetting at claim time makes a reused slot
-indistinguishable from one in a freshly initialized pool.
-
-Like ``fleet_step`` the input ``state`` is donated and ``mesh`` is static:
-callers must rebind, and with a ``FleetMesh`` the rewrite runs under
-``shard_map`` with flags and ``x0`` sharded over the node axis.
-"""
-
-
-@functools.partial(jax.jit, static_argnames=("config",))
-def _scan_stream(
-    state: FleetStreamState, ticks: FleetStep, config: EngineConfig
-) -> tuple[FleetStreamState, TickAttribution]:
-    """``lax.scan`` of the streaming step over time-major (T, B, ...) ticks."""
-
-    def body(st, tk):
-        return _fleet_step_impl(st, tk, config)
-
-    return jax.lax.scan(body, state, ticks)
-
-
-def fleet_ticks(inputs: FleetInputs) -> FleetStep:
-    """Explode segment inputs into a time-major (T, B, ...) tick stream.
-
-    Inverse of the (B, S, n_w) step grouping: T = S * n_w ticks, with each
-    step's invocation/latency statistics placed on its first *valid* tick
-    (the engine only reads their sums at boundaries, so placement among
-    the valid ticks is free — an invalid tick would drop them, since the
-    streaming step zeroes invalid node-ticks).  A ragged ``inputs.mask``
-    becomes the per-tick ``FleetStep.valid`` flags.  Feed the result to
-    ``lax.scan`` (``run_fleet_stream``) or slice ticks off it to drive
-    ``fleet_step`` one dispatch at a time.
-    """
-    return _fleet_ticks_masked(_apply_mask(inputs))
-
-
-def _fleet_ticks_masked(inputs: FleetInputs) -> FleetStep:
-    """``fleet_ticks`` body for inputs whose mask is already folded in
-    (``run_fleet_stream`` folds once and reuses the result for the init
-    solve, the tick stream, and the final attribution)."""
-    b, s, n_w, m = inputs.c.shape
-    tm = lambda x: jnp.moveaxis(x.reshape((b, s * n_w) + x.shape[3:]), 0, 1)
-    if inputs.mask is None:
-        first = jnp.zeros((b, s), jnp.int32)
-        valid = None
-    else:
-        first = jnp.argmax(inputs.mask, axis=-1).astype(jnp.int32)  # (B, S)
-        valid = tm(inputs.mask.astype(inputs.w.dtype))              # (T, B)
-    onehot = jax.nn.one_hot(first, n_w, dtype=inputs.a.dtype)       # (B, S, n_w)
-    place = lambda x: onehot[..., None] * x[:, :, None, :]
-    return FleetStep(
-        c=tm(inputs.c), w=tm(inputs.w), a=tm(place(inputs.a)),
-        lat_sum=tm(place(inputs.lat_sum)), lat_sumsq=tm(place(inputs.lat_sumsq)),
-        valid=valid,
-    )
-
-
-def run_fleet_stream(
-    inputs: FleetInputs,
-    config: EngineConfig = EngineConfig(),
-    *,
-    init_c: Array | None = None,
-    init_w: Array | None = None,
-    with_ticks: bool = True,
-    mesh=None,
-) -> FleetResult:
-    """The segment engine re-expressed as a scan over the streaming step.
-
-    Same contract as ``run_fleet``: X_0 from one batched NNLS over the init
-    block, then ``lax.scan`` of ``_fleet_step_impl`` over all T = S * n_w
-    ticks — the *identical* code path the online ``fleet_step`` runs, so the
-    streaming engine is pinned to the segment engines by construction.  The
-    returned trajectory collects the boundary-tick estimates; ``tick_power``
-    uses the segment engine's smoothed-within-step attribution for
-    comparability (the causal live variant is what ``fleet_step`` emits).
-
-    Args:
-      inputs: (B, S, n_w, M) step-grouped fleet batch; a ragged
-        ``inputs.mask`` flows into per-tick ``FleetStep.valid`` flags via
-        ``fleet_ticks`` (same masked semantics as ``run_fleet``).
-      config: engine configuration (``backend`` is ignored here — streaming
-        accumulation is tick-wise by definition).
-      init_c/init_w: optional dedicated init block for X_0 (profiler-style);
-        defaults to the whole segment.
-      with_ticks: also compute (B, T, M) conserved per-tick attribution.
-      mesh: optional ``distributed.sharding.FleetMesh``; shards the node
-        axis over the mesh devices exactly as in ``run_fleet``.
-
-    Returns:
-      ``FleetResult`` with ``state`` holding the final *Kalman* state of the
-      stream (identical pytree to the other engines').
-    """
-    if mesh is not None:
-        return _run_sharded(
-            run_fleet_stream, inputs, config, init_c, init_w, with_ticks, mesh
-        )
-    inputs = _apply_mask(inputs)
-    x0 = fleet_initial_estimate(
-        inputs.c if init_c is None else init_c,
-        inputs.w if init_w is None else init_w,
-        config,
-    )
-    b, s, n_w, m = inputs.c.shape
-    state0 = fleet_stream_init(x0, n_w, config)
-    final, att = _scan_stream(state0, _fleet_ticks_masked(inputs), config)
-    # Boundary ticks carry each step's post-update estimate: the trajectory.
-    traj = jnp.moveaxis(att.x.reshape(s, n_w, b, m)[:, -1], 1, 0)  # (B, S, M)
-    tick_power = unattributed = None
-    if with_ticks:
-        tick_power, unattributed = tick_attribution(
-            inputs.c, inputs.w, traj, delta=config.delta
-        )
-    return _mask_fn_axis(
-        FleetResult(
-            x_final=final.kalman.x, x_trajectory=traj, x0=x0,
-            tick_power=tick_power, unattributed=unattributed, state=final.kalman,
-        ),
-        inputs.fn_mask,
-    )
-
-
-# ---------------------------------------------------------------------------
-# Batched footprint spectra (Shapley assembly over the node axis).
-# ---------------------------------------------------------------------------
-
-
-@jax.jit
-def fleet_spectrum(
-    x_power: Array,        # (B, M)
-    mean_latency: Array,   # (B, M)
-    invocations: Array,    # (B, M)
-    cp_energy: Array,      # (B,)
-    idle_energy: Array,    # (B,)
-) -> FootprintSpectrum:
-    """vmapped §4.4 spectrum assembly: one call for the whole fleet."""
-    return jax.vmap(assemble_spectrum)(
-        x_power, mean_latency, invocations, cp_energy, idle_energy
-    )
-
-
-def synthetic_fleet(
-    b: int, s: int, n_w: int, m: int, *, seed: int = 0, density: float = 0.2
-) -> FleetInputs:
-    """Randomized synthetic fleet batch: sparse contributions, true power
-    plus noise.  Shared input generator for the equivalence tests and
-    ``benchmarks/kernel_bench.py`` so both exercise the same contract."""
-    import numpy as np
-
-    rng = np.random.default_rng(seed)
-    c = np.abs(rng.standard_normal((b, s, n_w, m))) * (
-        rng.random((b, s, n_w, m)) > 1 - density
-    )
-    x_true = np.abs(rng.standard_normal((b, m))) * 20.0 + 2.0
-    w = np.einsum("bsnm,bm->bsn", c, x_true) + 0.1 * rng.standard_normal((b, s, n_w))
-    a = (rng.random((b, s, m)) > 0.5) * rng.integers(0, 4, (b, s, m))
-    lat = np.abs(rng.standard_normal((b, s, m)))
-    return FleetInputs(
-        c=jnp.asarray(c, jnp.float32),
-        w=jnp.asarray(np.maximum(w, 0.0), jnp.float32),
-        a=jnp.asarray(a, jnp.float32),
-        lat_sum=jnp.asarray(lat * a, jnp.float32),
-        lat_sumsq=jnp.asarray(lat**2 * a, jnp.float32),
-    )
-
-
-def pack_fleet_inputs(
-    c_windows: Array,    # (B, N, M) per-node contribution matrices
-    w_windows: Array,    # (B, N) per-node idle-adjusted power
-    a_windows: Array,    # (B, N, M) per-node invocation counts
-    lat_sum_w: Array,    # (B, N, M) per-window latency sums
-    lat_sumsq_w: Array,  # (B, N, M)
-    *,
-    step_windows: int,
-    lengths: Sequence[int] | Array | None = None,
-    fn_lengths: Sequence[int] | Array | None = None,
-    strict: bool = False,
-) -> FleetInputs:
-    """Group per-window arrays into (B, S, n_w, ...) Kalman-step blocks,
-    padding + masking ragged fleets instead of truncating them.
-
-    Each node ``i`` contributes ``lengths[i]`` real windows (arrays are
-    padded to a common N on the window axis; values past a node's length
-    are ignored).  A Kalman update is defined over a full ``step_windows``
-    block, so node ``i`` yields ``S_i = lengths[i] // step_windows`` steps
-    — the sub-step remainder feeds no update, exactly like the per-node
-    profiler's ``segment_plan`` tail — and the fleet packs to
-    ``S = max_i S_i`` steps with a ``(B, S, n_w)`` validity mask marking
-    each node's real ticks.  Everything outside a node's valid region is
-    zeroed and masked, so junk in the padded tail of the caller's arrays
-    can never leak into grams, innovations, or attribution.  A uniform
-    fleet whose window count divides ``step_windows`` packs with
-    ``mask=None`` — the dense engines' exact pre-ragged inputs.
-
-    Args:
-      c_windows/w_windows: (B, N, M)/(B, N) per-window contributions/power.
-      a_windows/lat_sum_w/lat_sumsq_w: (B, N, M) per-window invocation
-        counts and latency moments (summed into per-step statistics).
-      step_windows: n_w, ticks per Kalman step.
-      lengths: per-node real window counts; ``None`` means every node has
-        all N windows.
-      fn_lengths: per-node real *function* counts over the padded M axis
-        (heterogeneous fleets whose nodes host different function sets pad
-        M to the fleet max); ``None`` means every node hosts all M
-        functions.  Sets ``FleetInputs.fn_mask`` so the engines zero the
-        padded functions' statistics and output rows exactly.
-      strict: require the old equal-length contract — every node must have
-        exactly N windows and N must divide ``step_windows`` evenly;
-        anything ragged raises ``ValueError`` instead of being masked.
-
-    Returns:
-      ``FleetInputs`` with S = max_i(lengths[i] // step_windows) steps and
-      ``mask`` set iff the fleet is actually ragged.
-    """
-    b, n, m = c_windows.shape
-    if lengths is None:
-        lengths_arr = jnp.full((b,), n, jnp.int32)
-    else:
-        import numpy as np
-
-        lengths_np = np.asarray(lengths, np.int64)
-        if lengths_np.shape != (b,):
-            raise ValueError(
-                f"lengths must have shape ({b},), got {lengths_np.shape}"
-            )
-        if np.any(lengths_np < 0) or np.any(lengths_np > n):
-            raise ValueError(
-                f"lengths must lie in [0, {n}] (the padded window axis); "
-                f"got {lengths_np.tolist()}"
-            )
-        lengths_arr = jnp.asarray(lengths_np, jnp.int32)
-    if strict:
-        import numpy as np
-
-        lens = np.asarray(lengths_arr)
-        if np.any(lens != n) or n % step_windows != 0:
-            raise ValueError(
-                f"pack_fleet_inputs(strict=True) requires every node to "
-                f"have exactly N={n} windows with N divisible by "
-                f"step_windows={step_windows}; got lengths="
-                f"{lens.tolist()} (use strict=False for pad-and-mask)"
-            )
-    s_nodes = lengths_arr // step_windows            # (B,) full steps per node
-    s = int(jnp.max(s_nodes))
-    if s == 0:
-        raise ValueError(
-            f"need at least step_windows={step_windows} windows on at "
-            f"least one node, got lengths "
-            f"{jnp.asarray(lengths_arr).tolist()} (N={n})"
-        )
-    n_used = s * step_windows
-    if n < n_used:
-        raise ValueError(f"window axis N={n} shorter than S*n_w={n_used}")
-    # Per-node valid region: the first S_i full steps' ticks, nothing else.
-    tick_valid = (
-        jnp.arange(n_used, dtype=jnp.int32)[None, :]
-        < (s_nodes * step_windows)[:, None]
-    )                                                # (B, n_used) bool
-    mask = tick_valid.reshape(b, s, step_windows).astype(jnp.float32)
-    mv = mask[..., None]
-    fn_mask = None
-    if fn_lengths is not None:
-        import numpy as np
-
-        fn_lens = np.asarray(fn_lengths, np.int64)
-        if fn_lens.shape != (b,):
-            raise ValueError(
-                f"fn_lengths must have shape ({b},), got {fn_lens.shape}"
-            )
-        if np.any(fn_lens < 0) or np.any(fn_lens > m):
-            raise ValueError(
-                f"fn_lengths must lie in [0, {m}] (the padded function "
-                f"axis); got {fn_lens.tolist()}"
-            )
-        if np.any(fn_lens != m):
-            fn_mask = jnp.asarray(
-                np.arange(m)[None, :] < fn_lens[:, None], jnp.float32
-            )
-    grp = lambda x: x[:, :n_used].reshape(b, s, step_windows, m)
-    inputs = FleetInputs(
-        c=grp(c_windows) * mv,
-        w=w_windows[:, :n_used].reshape(b, s, step_windows) * mask,
-        a=(grp(a_windows) * mv).sum(axis=2),
-        lat_sum=(grp(lat_sum_w) * mv).sum(axis=2),
-        lat_sumsq=(grp(lat_sumsq_w) * mv).sum(axis=2),
-        mask=None if bool(jnp.all(tick_valid)) else mask,
-        fn_mask=fn_mask,
-    )
-    return inputs
-
-
-def synthetic_ragged_windows(
-    b: int, n: int, m: int, *, lengths: Sequence[int], seed: int = 0,
-    density: float = 0.2,
-):
-    """Per-*window* synthetic fleet arrays for ragged packing.
-
-    The window-granular twin of ``synthetic_fleet``: returns
-    ``(c, w, a, lat_sum, lat_sumsq)`` with shape (B, N, ...) plus the
-    given per-node ``lengths``, ready for ``pack_fleet_inputs``.  Windows
-    past each node's length are filled with *non-zero junk* on purpose —
-    the pad-and-mask contract says they must not be able to leak into any
-    result, and the ragged tests and ``benchmarks/ragged_fleet.py`` both
-    rely on that property being exercised, not vacuously true.
-    """
-    import numpy as np
-
-    rng = np.random.default_rng(seed)
-    c = np.abs(rng.standard_normal((b, n, m))) * (rng.random((b, n, m)) > 1 - density)
-    x_true = np.abs(rng.standard_normal((b, m))) * 20.0 + 2.0
-    w = np.maximum(
-        np.einsum("bnm,bm->bn", c, x_true) + 0.1 * rng.standard_normal((b, n)), 0.0
-    )
-    a = ((rng.random((b, n, m)) > 0.8) * rng.integers(0, 3, (b, n, m))).astype(np.float32)
-    lat = np.abs(rng.standard_normal((b, n, m)))
-    ls, lq = lat * a, lat**2 * a
-    # Junk beyond each node's real windows: masking must erase it exactly.
-    for i, li in enumerate(lengths):
-        c[i, li:] = 7.7
-        w[i, li:] = 123.0
-        a[i, li:] = 3.0
-        ls[i, li:] = 9.9
-        lq[i, li:] = 9.9
-    return (
-        jnp.asarray(c, jnp.float32),
-        jnp.asarray(w, jnp.float32),
-        jnp.asarray(a, jnp.float32),
-        jnp.asarray(ls, jnp.float32),
-        jnp.asarray(lq, jnp.float32),
-    )
-
-
-# ---------------------------------------------------------------------------
-# Length buckets: AOT-warmable compile shapes for serving (docs/serving.md).
-# ---------------------------------------------------------------------------
-
-#: Default length-bucket table, shared by the init solves (window counts)
-#: and the segment packs (step counts).  Powers of two: each bucket at most
-#: doubles the padded work, and the whole table is cheap to pre-compile.
-DEFAULT_BUCKETS = (8, 16, 32, 64, 128, 256, 512)
-
-
-def bucket_for(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
-    """Smallest bucket that fits a length-``n`` block.
-
-    Lengths beyond the table round up to the next power of two, so the
-    mapping is total — an oversized node costs one extra compile instead of
-    an error.  ``n`` must be positive (a zero-length block has no bucket).
-    """
-    if n <= 0:
-        raise ValueError(f"bucket_for needs a positive length, got {n}")
-    for b in sorted(buckets):
-        if n <= b:
-            return int(b)
-    return 1 << (int(n) - 1).bit_length()
-
-
-@functools.partial(jax.jit, static_argnames=("config",))
-def _bucket_init_solve(c_pad: Array, w_pad: Array, config: EngineConfig) -> Array:
-    """Single-node gram-domain NNLS over a bucket-padded init block.
-
-    One trace per (bucket length, M, config) — the compile unit the slot
-    pool pre-warms.  Zero-padding is *exact* here: the gram/rhs are sums
-    over window rows and a zero row adds exactly zero to both."""
-    from repro.core.disaggregation import solve_nnls_gram
-
-    gram, rhs = _node_init_gram(c_pad, w_pad)
-    eye = config.init_lam * jnp.eye(c_pad.shape[-1], dtype=c_pad.dtype)
-    return solve_nnls_gram(gram + eye, rhs, iters=config.init_iters)
-
-
-def bucketed_initial_estimate(
-    c: Array,
-    w: Array,
-    config: EngineConfig = EngineConfig(),
-    *,
-    buckets: Sequence[int] = DEFAULT_BUCKETS,
-) -> Array:
-    """(M,) X_0 for ONE node via a length-bucketed compile (§4.2, serving).
-
-    The serving-path twin of ``fleet_initial_estimate``: a node admitted
-    mid-stream brings an init block of arbitrary length ``n``, which would
-    force a fresh trace per length.  Instead the block is zero-padded to
-    ``bucket_for(n)`` windows and solved by the per-bucket jitted
-    ``_bucket_init_solve`` — after ``warm_bucket_solvers`` every admission
-    lands in a pre-warmed compile.  Padding with zero rows changes the
-    gram/rhs by exactly zero, so the estimate matches the unpadded solve up
-    to float reassociation of the row reduction.
-    """
-    import numpy as np
-
-    c = np.asarray(c, np.float32)
-    w = np.asarray(w, np.float32)
-    n, m = c.shape
-    bkt = bucket_for(n, buckets)
-    if bkt > n:
-        c = np.concatenate([c, np.zeros((bkt - n, m), np.float32)])
-        w = np.concatenate([w, np.zeros((bkt - n,), np.float32)])
-    return _bucket_init_solve(jnp.asarray(c), jnp.asarray(w), config)
-
-
-def warm_bucket_solvers(
-    num_fns: int,
-    config: EngineConfig = EngineConfig(),
-    *,
-    buckets: Sequence[int] = DEFAULT_BUCKETS,
-) -> int:
-    """Pre-compile the bucketed init solve for every bucket in the table.
-
-    Called by ``SlotFleetSession.warmup`` so a node joining mid-stream pays
-    device math, never a trace.  Returns the number of solvers warmed."""
-    for n in buckets:
-        _bucket_init_solve(
-            jnp.zeros((n, num_fns), jnp.float32), jnp.zeros((n,), jnp.float32), config
-        ).block_until_ready()
-    return len(buckets)
-
-
-class FleetBucket(NamedTuple):
-    """One length bucket of a bucketed fleet pack (``pack_fleet_buckets``).
-
-    ``inputs`` is a normal (len(nodes), steps, n_w, ...) ``FleetInputs``
-    block padded to the bucket's step count — ``steps`` is the compile
-    shape, shared by every fleet whose nodes land in this bucket."""
-
-    inputs: FleetInputs
-    nodes: tuple          # original fleet indices packed into this bucket
-    lengths: tuple        # their real per-node window counts
-    steps: int            # bucket step count (the compile shape)
-
-
-def pad_waste_frac(
-    lengths, step_windows: int, *, s: int | None = None
-) -> float:
-    """Fraction of engine ticks that are padding in a single (B, s, n_w) pack.
-
-    ``pack_fleet_inputs`` pads every node to ``s = max_i S_i`` steps; on an
-    extreme-rag fleet (one long node, many short ones) most ticks are
-    masked padding.  This is the waste metric the bucketed pack reclaims —
-    compare against ``bucketed_pad_waste``.  ``s`` overrides the pack's
-    step count (defaults to ``max_i S_i``)."""
-    import numpy as np
-
-    lens = np.asarray(lengths, np.int64)
-    s_nodes = lens // step_windows
-    s = int(s_nodes.max()) if s is None else int(s)
-    if s == 0:
-        raise ValueError("no node has a full step; nothing to pack")
-    real = int(np.minimum(s_nodes, s).sum()) * step_windows
-    return float(1.0 - real / (s * step_windows * len(lens)))
-
-
-def bucketed_pad_waste(buckets: "list[FleetBucket]", step_windows: int) -> float:
-    """Overall padding fraction across a bucketed pack's groups.
-
-    Same numerator as ``pad_waste_frac`` (each node's real full-step
-    ticks); the denominator is the sum of the per-bucket padded shapes,
-    which is what the engines actually compute over."""
-    import numpy as np
-
-    real = total = 0
-    for bk in buckets:
-        s_nodes = np.minimum(np.asarray(bk.lengths, np.int64) // step_windows, bk.steps)
-        real += int(s_nodes.sum()) * step_windows
-        total += len(bk.nodes) * bk.steps * step_windows
-    return float(1.0 - real / total)
-
-
-def _pad_steps(inputs: FleetInputs, s_to: int) -> FleetInputs:
-    """Pad a packed block to ``s_to`` steps with fully-masked zero steps."""
-    b, s, n_w, m = inputs.c.shape
-    if s >= s_to:
-        return inputs
-    d = s_to - s
-    zf = functools.partial(jnp.zeros, dtype=jnp.float32)
-    mask = (
-        inputs.mask if inputs.mask is not None else jnp.ones((b, s, n_w), jnp.float32)
-    )
-    return FleetInputs(
-        c=jnp.concatenate([inputs.c, zf((b, d, n_w, m))], axis=1),
-        w=jnp.concatenate([inputs.w, zf((b, d, n_w))], axis=1),
-        a=jnp.concatenate([inputs.a, zf((b, d, m))], axis=1),
-        lat_sum=jnp.concatenate([inputs.lat_sum, zf((b, d, m))], axis=1),
-        lat_sumsq=jnp.concatenate([inputs.lat_sumsq, zf((b, d, m))], axis=1),
-        mask=jnp.concatenate([mask, zf((b, d, n_w))], axis=1),
-        fn_mask=inputs.fn_mask,
-    )
-
-
-def pack_fleet_buckets(
-    c_windows: Array,
-    w_windows: Array,
-    a_windows: Array,
-    lat_sum_w: Array,
-    lat_sumsq_w: Array,
-    *,
-    step_windows: int,
-    lengths,
-    buckets: Sequence[int] = DEFAULT_BUCKETS,
-) -> "list[FleetBucket]":
-    """Length-bucketed fleet packing: reclaim ``pad_waste_frac`` on extreme rag.
-
-    The single-block ``pack_fleet_inputs`` pads every node to the longest
-    node's step count — on a fleet of mostly-short nodes plus one long one,
-    almost every engine tick is masked padding.  Here nodes are grouped by
-    ``bucket_for`` of their full-step count and each group packs to its
-    *bucket's* step count (padded up with fully-masked steps so the block
-    shape is exactly the bucket — the compile shape stays stable across
-    fleets, which is what makes the buckets pre-warmable).  Within a group
-    the existing mask machinery applies unchanged, so results are pinned
-    per node against the monolithic pack (tests/test_slot_serving.py).
-
-    Returns one ``FleetBucket`` per occupied bucket, ascending by step
-    count; run them with ``run_fleet_bucketed``.
-    """
-    import numpy as np
-
-    arrs = [np.asarray(x) for x in (c_windows, w_windows, a_windows, lat_sum_w, lat_sumsq_w)]
-    b = arrs[0].shape[0]
-    lens = np.asarray(lengths, np.int64)
-    if lens.shape != (b,):
-        raise ValueError(f"lengths must have shape ({b},), got {lens.shape}")
-    s_nodes = lens // step_windows
-    if int(s_nodes.max()) == 0:
-        raise ValueError(
-            f"need at least step_windows={step_windows} windows on at "
-            f"least one node, got lengths {lens.tolist()}"
-        )
-    groups: dict[int, list[int]] = {}
-    for i, s_i in enumerate(s_nodes):
-        groups.setdefault(bucket_for(max(int(s_i), 1), buckets), []).append(i)
-
-    out = []
-    for bkt_s in sorted(groups):
-        idx = groups[bkt_s]
-        need = bkt_s * step_windows
-
-        def take(arr):
-            sub = arr[idx]
-            if sub.shape[1] < need:
-                pad = np.zeros(
-                    (len(idx), need - sub.shape[1]) + sub.shape[2:], sub.dtype
-                )
-                sub = np.concatenate([sub, pad], axis=1)
-            return jnp.asarray(sub[:, :need], jnp.float32)
-
-        # A node's sub-step tail feeds no update; clamp its length to the
-        # bucket span so the group block never needs the tail windows.
-        grp_lens = [min(int(lens[i]), need) for i in idx]
-        packed = pack_fleet_inputs(
-            *[take(a) for a in arrs], step_windows=step_windows, lengths=grp_lens
-        )
-        out.append(
-            FleetBucket(
-                inputs=_pad_steps(packed, bkt_s),
-                nodes=tuple(idx),
-                lengths=tuple(int(lens[i]) for i in idx),
-                steps=bkt_s,
-            )
-        )
-    return out
-
-
-def run_fleet_bucketed(
-    buckets: "list[FleetBucket]",
-    config: EngineConfig = EngineConfig(),
-    *,
-    engine=None,
-    with_ticks: bool = False,
-):
-    """Run every bucket of a bucketed pack and stitch estimates to fleet order.
-
-    ``engine`` is any segment engine (``run_fleet`` default,
-    ``run_fleet_gram``, ``run_fleet_stream``).  Per-node math is
-    node-independent, so scattering each group's rows back by its original
-    indices reproduces the monolithic pack's estimates (up to vmap
-    batch-size reassociation; pinned at 1e-5).  Trajectories keep their
-    per-bucket step counts — they are returned as the per-bucket
-    ``FleetResult`` list rather than forced into one ragged array.
-
-    Returns ``(x_final, x0, results)``: (B, M) stitched estimates plus the
-    per-bucket results in the same order as ``buckets``.
-    """
-    import numpy as np
-
-    engine = run_fleet if engine is None else engine
-    b_total = 1 + max(max(bk.nodes) for bk in buckets)
-    m = buckets[0].inputs.c.shape[-1]
-    x_final = np.zeros((b_total, m), np.float32)
-    x0 = np.zeros((b_total, m), np.float32)
-    results = []
-    for bk in buckets:
-        res = engine(bk.inputs, config, with_ticks=with_ticks)
-        x_final[list(bk.nodes)] = np.asarray(res.x_final)
-        x0[list(bk.nodes)] = np.asarray(res.x0)
-        results.append(res)
-    return jnp.asarray(x_final), jnp.asarray(x0), results
+__all__ = [
+    "Array",
+    "DEFAULT_BUCKETS",
+    "EngineConfig",
+    "FleetBucket",
+    "FleetInputs",
+    "FleetResult",
+    "FleetStep",
+    "FleetStreamState",
+    "FootprintSpectrum",
+    "KalmanConfig",
+    "KalmanState",
+    "TickAttribution",
+    "assemble_spectrum",
+    "bucket_for",
+    "bucketed_initial_estimate",
+    "bucketed_pad_waste",
+    "combined_rest_target",
+    "fleet_initial_estimate",
+    "fleet_rest_idle",
+    "fleet_spectrum",
+    "fleet_step",
+    "fleet_stream_init",
+    "fleet_stream_reset_slots",
+    "fleet_ticks",
+    "kalman_init",
+    "kalman_step",
+    "kalman_step_gram",
+    "pack_fleet_buckets",
+    "pack_fleet_inputs",
+    "pad_waste_frac",
+    "precompute_step_inputs",
+    "run_fleet",
+    "run_fleet_bucketed",
+    "run_fleet_gram",
+    "run_fleet_sequential",
+    "run_fleet_stream",
+    "run_kalman",
+    "run_kalman_fleet",
+    "run_kalman_fleet_gram",
+    "run_kalman_gram",
+    "synthetic_fleet",
+    "synthetic_ragged_windows",
+    "tick_attribution",
+    "warm_bucket_solvers",
+]

@@ -1,0 +1,72 @@
+"""Attribution stage: conserved per-tick power splits + §4.4 spectra.
+
+``_conserved_split`` is the single source of the conservation invariant
+(``tick_power.sum(-1) + unattributed == w`` by construction), shared by the
+segment engines' ``tick_attribution`` and the streaming step's live
+attribution so the two cannot drift.  ``fleet_spectrum`` assembles the
+Shapley footprint spectrum (§4.4) over the node axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.types import Array
+from repro.core.footprints import FootprintSpectrum, assemble_spectrum
+
+
+def _conserved_split(raw: Array, w: Array, delta: float) -> tuple[Array, Array]:
+    """Split measured power ``w`` proportional to estimated draw ``raw``.
+
+    ``raw`` is (..., M) estimated joules per tick, ``w`` the matching (...)
+    measured watts.  Returns (tick_power, unattributed) with
+    ``tick_power.sum(-1) + unattributed == w`` by construction — the single
+    source of the conservation invariant, shared by the segment engine's
+    ``tick_attribution`` and the streaming step's live attribution so the
+    two cannot drift.  Ticks with vanishing predicted draw go to the
+    unattributed channel: dividing by them would destroy the conservation
+    invariant instead of enforcing it.
+    """
+    pred = jnp.sum(raw, axis=-1) / delta                # (...) watts
+    has = pred > 1e-9
+    scale = jnp.where(has, w / jnp.where(has, pred, 1.0), 0.0)
+    return (raw / delta) * scale[..., None], jnp.where(has, 0.0, w)
+
+
+@functools.partial(jax.jit, static_argnames=("delta",))
+def tick_attribution(
+    c: Array,      # (B, S, n_w, M)
+    w: Array,      # (B, S, n_w) measured active power per tick
+    traj: Array,   # (B, S, M) per-step estimates
+    *,
+    delta: float = 1.0,
+) -> tuple[Array, Array]:
+    """Conserved per-tick power attribution (efficiency enforced per tick).
+
+    Each tick's measured active power is split over the functions running in
+    it, proportional to estimated draw ``C[t, j] * X[j]``.  By construction
+    ``tick_power.sum(-1) + unattributed == w`` tick-by-tick, which is the
+    Shapley efficiency property at tick granularity; ``unattributed`` is
+    power measured in ticks where no function ran (sensor noise/lag).
+    """
+    b, s, n_w, m = c.shape
+    raw = c * traj[:, :, None, :]                       # (B, S, n_w, M) joules
+    tick_power, unattributed = _conserved_split(raw, w, delta)
+    return tick_power.reshape(b, s * n_w, m), unattributed.reshape(b, s * n_w)
+
+
+@jax.jit
+def fleet_spectrum(
+    x_power: Array,        # (B, M)
+    mean_latency: Array,   # (B, M)
+    invocations: Array,    # (B, M)
+    cp_energy: Array,      # (B,)
+    idle_energy: Array,    # (B,)
+) -> FootprintSpectrum:
+    """vmapped §4.4 spectrum assembly: one call for the whole fleet."""
+    return jax.vmap(assemble_spectrum)(
+        x_power, mean_latency, invocations, cp_energy, idle_energy
+    )

@@ -1,0 +1,285 @@
+"""Bucket stage: AOT-warmable compile shapes for serving (docs/serving.md).
+
+Length buckets make mid-stream admission and extreme-rag fleets cheap:
+init blocks and segment packs are padded up to a small power-of-two table
+of shapes, so every bucket is pre-compilable (``warm_bucket_solvers``) and
+a node joining live pays device math, never a trace.  Zero-pad rows add
+exactly zero to gram/rhs sums and fully-masked pad steps freeze the
+filter, so bucketed results stay pinned to the monolithic pack
+(tests/test_slot_serving.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.estimate import _node_init_gram
+from repro.core.engine.packing import pack_fleet_inputs
+from repro.core.engine.segment import run_fleet
+from repro.core.engine.types import Array, EngineConfig, FleetInputs
+
+#: Default length-bucket table, shared by the init solves (window counts)
+#: and the segment packs (step counts).  Powers of two: each bucket at most
+#: doubles the padded work, and the whole table is cheap to pre-compile.
+DEFAULT_BUCKETS = (8, 16, 32, 64, 128, 256, 512)
+
+
+def bucket_for(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket that fits a length-``n`` block.
+
+    Lengths beyond the table round up to the next power of two, so the
+    mapping is total — an oversized node costs one extra compile instead of
+    an error.  ``n`` must be positive (a zero-length block has no bucket).
+    """
+    if n <= 0:
+        raise ValueError(f"bucket_for needs a positive length, got {n}")
+    for b in sorted(buckets):
+        if n <= b:
+            return int(b)
+    return 1 << (int(n) - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def _bucket_init_solve(c_pad: Array, w_pad: Array, config: EngineConfig) -> Array:
+    """Single-node gram-domain NNLS over a bucket-padded init block.
+
+    One trace per (bucket length, M, config) — the compile unit the slot
+    pool pre-warms.  Zero-padding is *exact* here: the gram/rhs are sums
+    over window rows and a zero row adds exactly zero to both."""
+    from repro.core.disaggregation import solve_nnls_gram
+
+    gram, rhs = _node_init_gram(c_pad, w_pad)
+    eye = config.init_lam * jnp.eye(c_pad.shape[-1], dtype=c_pad.dtype)
+    return solve_nnls_gram(gram + eye, rhs, iters=config.init_iters)
+
+
+def bucketed_initial_estimate(
+    c: Array,
+    w: Array,
+    config: EngineConfig = EngineConfig(),
+    *,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+) -> Array:
+    """(M,) X_0 for ONE node via a length-bucketed compile (§4.2, serving).
+
+    The serving-path twin of ``fleet_initial_estimate``: a node admitted
+    mid-stream brings an init block of arbitrary length ``n``, which would
+    force a fresh trace per length.  Instead the block is zero-padded to
+    ``bucket_for(n)`` windows and solved by the per-bucket jitted
+    ``_bucket_init_solve`` — after ``warm_bucket_solvers`` every admission
+    lands in a pre-warmed compile.  Padding with zero rows changes the
+    gram/rhs by exactly zero, so the estimate matches the unpadded solve up
+    to float reassociation of the row reduction.
+    """
+    import numpy as np
+
+    c = np.asarray(c, np.float32)
+    w = np.asarray(w, np.float32)
+    n, m = c.shape
+    bkt = bucket_for(n, buckets)
+    if bkt > n:
+        c = np.concatenate([c, np.zeros((bkt - n, m), np.float32)])
+        w = np.concatenate([w, np.zeros((bkt - n,), np.float32)])
+    return _bucket_init_solve(jnp.asarray(c), jnp.asarray(w), config)
+
+
+def warm_bucket_solvers(
+    num_fns: int,
+    config: EngineConfig = EngineConfig(),
+    *,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+) -> int:
+    """Pre-compile the bucketed init solve for every bucket in the table.
+
+    Called by ``SlotFleetSession.warmup`` so a node joining mid-stream pays
+    device math, never a trace.  Returns the number of solvers warmed."""
+    for n in buckets:
+        _bucket_init_solve(
+            jnp.zeros((n, num_fns), jnp.float32), jnp.zeros((n,), jnp.float32), config
+        ).block_until_ready()
+    return len(buckets)
+
+
+class FleetBucket(NamedTuple):
+    """One length bucket of a bucketed fleet pack (``pack_fleet_buckets``).
+
+    ``inputs`` is a normal (len(nodes), steps, n_w, ...) ``FleetInputs``
+    block padded to the bucket's step count — ``steps`` is the compile
+    shape, shared by every fleet whose nodes land in this bucket."""
+
+    inputs: FleetInputs
+    nodes: tuple          # original fleet indices packed into this bucket
+    lengths: tuple        # their real per-node window counts
+    steps: int            # bucket step count (the compile shape)
+
+
+def pad_waste_frac(
+    lengths, step_windows: int, *, s: int | None = None
+) -> float:
+    """Fraction of engine ticks that are padding in a single (B, s, n_w) pack.
+
+    ``pack_fleet_inputs`` pads every node to ``s = max_i S_i`` steps; on an
+    extreme-rag fleet (one long node, many short ones) most ticks are
+    masked padding.  This is the waste metric the bucketed pack reclaims —
+    compare against ``bucketed_pad_waste``.  ``s`` overrides the pack's
+    step count (defaults to ``max_i S_i``)."""
+    import numpy as np
+
+    lens = np.asarray(lengths, np.int64)
+    s_nodes = lens // step_windows
+    s = int(s_nodes.max()) if s is None else int(s)
+    if s == 0:
+        raise ValueError("no node has a full step; nothing to pack")
+    real = int(np.minimum(s_nodes, s).sum()) * step_windows
+    return float(1.0 - real / (s * step_windows * len(lens)))
+
+
+def bucketed_pad_waste(buckets: "list[FleetBucket]", step_windows: int) -> float:
+    """Overall padding fraction across a bucketed pack's groups.
+
+    Same numerator as ``pad_waste_frac`` (each node's real full-step
+    ticks); the denominator is the sum of the per-bucket padded shapes,
+    which is what the engines actually compute over."""
+    import numpy as np
+
+    real = total = 0
+    for bk in buckets:
+        s_nodes = np.minimum(np.asarray(bk.lengths, np.int64) // step_windows, bk.steps)
+        real += int(s_nodes.sum()) * step_windows
+        total += len(bk.nodes) * bk.steps * step_windows
+    return float(1.0 - real / total)
+
+
+def _pad_steps(inputs: FleetInputs, s_to: int) -> FleetInputs:
+    """Pad a packed block to ``s_to`` steps with fully-masked zero steps."""
+    b, s, n_w, m = inputs.c.shape
+    if s >= s_to:
+        return inputs
+    d = s_to - s
+    zf = functools.partial(jnp.zeros, dtype=jnp.float32)
+    mask = (
+        inputs.mask if inputs.mask is not None else jnp.ones((b, s, n_w), jnp.float32)
+    )
+    return FleetInputs(
+        c=jnp.concatenate([inputs.c, zf((b, d, n_w, m))], axis=1),
+        w=jnp.concatenate([inputs.w, zf((b, d, n_w))], axis=1),
+        a=jnp.concatenate([inputs.a, zf((b, d, m))], axis=1),
+        lat_sum=jnp.concatenate([inputs.lat_sum, zf((b, d, m))], axis=1),
+        lat_sumsq=jnp.concatenate([inputs.lat_sumsq, zf((b, d, m))], axis=1),
+        mask=jnp.concatenate([mask, zf((b, d, n_w))], axis=1),
+        fn_mask=inputs.fn_mask,
+    )
+
+
+def pack_fleet_buckets(
+    c_windows: Array,
+    w_windows: Array,
+    a_windows: Array,
+    lat_sum_w: Array,
+    lat_sumsq_w: Array,
+    *,
+    step_windows: int,
+    lengths,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+) -> "list[FleetBucket]":
+    """Length-bucketed fleet packing: reclaim ``pad_waste_frac`` on extreme rag.
+
+    The single-block ``pack_fleet_inputs`` pads every node to the longest
+    node's step count — on a fleet of mostly-short nodes plus one long one,
+    almost every engine tick is masked padding.  Here nodes are grouped by
+    ``bucket_for`` of their full-step count and each group packs to its
+    *bucket's* step count (padded up with fully-masked steps so the block
+    shape is exactly the bucket — the compile shape stays stable across
+    fleets, which is what makes the buckets pre-warmable).  Within a group
+    the existing mask machinery applies unchanged, so results are pinned
+    per node against the monolithic pack (tests/test_slot_serving.py).
+
+    Returns one ``FleetBucket`` per occupied bucket, ascending by step
+    count; run them with ``run_fleet_bucketed``.
+    """
+    import numpy as np
+
+    arrs = [np.asarray(x) for x in (c_windows, w_windows, a_windows, lat_sum_w, lat_sumsq_w)]
+    b = arrs[0].shape[0]
+    lens = np.asarray(lengths, np.int64)
+    if lens.shape != (b,):
+        raise ValueError(f"lengths must have shape ({b},), got {lens.shape}")
+    s_nodes = lens // step_windows
+    if int(s_nodes.max()) == 0:
+        raise ValueError(
+            f"need at least step_windows={step_windows} windows on at "
+            f"least one node, got lengths {lens.tolist()}"
+        )
+    groups: dict[int, list[int]] = {}
+    for i, s_i in enumerate(s_nodes):
+        groups.setdefault(bucket_for(max(int(s_i), 1), buckets), []).append(i)
+
+    out = []
+    for bkt_s in sorted(groups):
+        idx = groups[bkt_s]
+        need = bkt_s * step_windows
+
+        def take(arr):
+            sub = arr[idx]
+            if sub.shape[1] < need:
+                pad = np.zeros(
+                    (len(idx), need - sub.shape[1]) + sub.shape[2:], sub.dtype
+                )
+                sub = np.concatenate([sub, pad], axis=1)
+            return jnp.asarray(sub[:, :need], jnp.float32)
+
+        # A node's sub-step tail feeds no update; clamp its length to the
+        # bucket span so the group block never needs the tail windows.
+        grp_lens = [min(int(lens[i]), need) for i in idx]
+        packed = pack_fleet_inputs(
+            *[take(a) for a in arrs], step_windows=step_windows, lengths=grp_lens
+        )
+        out.append(
+            FleetBucket(
+                inputs=_pad_steps(packed, bkt_s),
+                nodes=tuple(idx),
+                lengths=tuple(int(lens[i]) for i in idx),
+                steps=bkt_s,
+            )
+        )
+    return out
+
+
+def run_fleet_bucketed(
+    buckets: "list[FleetBucket]",
+    config: EngineConfig = EngineConfig(),
+    *,
+    engine=None,
+    with_ticks: bool = False,
+):
+    """Run every bucket of a bucketed pack and stitch estimates to fleet order.
+
+    ``engine`` is any segment engine (``run_fleet`` default,
+    ``run_fleet_gram``, ``run_fleet_stream``).  Per-node math is
+    node-independent, so scattering each group's rows back by its original
+    indices reproduces the monolithic pack's estimates (up to vmap
+    batch-size reassociation; pinned at 1e-5).  Trajectories keep their
+    per-bucket step counts — they are returned as the per-bucket
+    ``FleetResult`` list rather than forced into one ragged array.
+
+    Returns ``(x_final, x0, results)``: (B, M) stitched estimates plus the
+    per-bucket results in the same order as ``buckets``.
+    """
+    import numpy as np
+
+    engine = run_fleet if engine is None else engine
+    b_total = 1 + max(max(bk.nodes) for bk in buckets)
+    m = buckets[0].inputs.c.shape[-1]
+    x_final = np.zeros((b_total, m), np.float32)
+    x0 = np.zeros((b_total, m), np.float32)
+    results = []
+    for bk in buckets:
+        res = engine(bk.inputs, config, with_ticks=with_ticks)
+        x_final[list(bk.nodes)] = np.asarray(res.x_final)
+        x0[list(bk.nodes)] = np.asarray(res.x0)
+        results.append(res)
+    return jnp.asarray(x_final), jnp.asarray(x0), results

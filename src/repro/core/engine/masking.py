@@ -1,0 +1,112 @@
+"""Masking stage: every ragged-fleet semantics fold, written exactly once.
+
+Three folds define what "masked" means for the whole engine package:
+
+  ``_apply_mask``      segment inputs — tick mask + fn mask into the data;
+  ``fold_step_valid``  streaming tick — per-node liveness into the data;
+  ``_mask_fn_axis``    outputs — masked functions' rows forced to 0.0.
+
+Every engine path (sequential oracle, batched segment, gram-hoisted,
+streaming step) routes through these, via ``core.engine.plan`` on the
+segment side and directly on the streaming side, so the four paths cannot
+disagree on what a masked tick or padded function means.  Because all
+three folds are data-dependent multiplies, not shape changes, differing
+rag/liveness patterns reuse one compiled trace.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine.types import Array, FleetInputs, FleetResult, FleetStep
+
+
+def _apply_mask(inputs: FleetInputs) -> FleetInputs:
+    """Fold a ragged fleet's validity mask into its data (identity if dense).
+
+    Masked ticks get ``c = 0`` and ``w = 0`` — to the update rule they are
+    indistinguishable from silent windows, so their gram/rhs/innovation
+    contributions vanish *exactly* (adding a float zero is exact) — and
+    steps with no valid tick additionally get zeroed invocation/latency
+    statistics, which freezes the Kalman state on them: ``_apply_update``
+    keeps ``x``/``p``/``seen`` and the latency moments wherever
+    ``a_step == 0``.  This is the single place mask semantics are defined;
+    every segment engine (and the sequential oracle) routes its inputs
+    through here, so the three paths cannot disagree on what a masked tick
+    means.  Because masking is a data-dependent multiply, not a shape
+    change, differing rag patterns reuse one compiled trace.
+
+    The fn-axis mask folds here too: masked functions get zeroed
+    contribution columns and invocation/latency statistics, so they feed no
+    gram column and no latency moment — to the update rule they are
+    functions that never run.  (Their output rows are additionally forced
+    to zero by ``_mask_fn_axis`` on the way out of every engine.)
+    """
+    if inputs.mask is None and inputs.fn_mask is None:
+        return inputs
+    c, w = inputs.c, inputs.w
+    a, ls, lq = inputs.a, inputs.lat_sum, inputs.lat_sumsq
+    if inputs.fn_mask is not None:
+        fm = inputs.fn_mask.astype(c.dtype)
+        c = c * fm[:, None, None, :]
+        a = a * fm[:, None, :]
+        ls = ls * fm[:, None, :]
+        lq = lq * fm[:, None, :]
+    if inputs.mask is not None:
+        m = inputs.mask.astype(c.dtype)
+        step_live = (jnp.sum(m, axis=-1) > 0).astype(a.dtype)[..., None]
+        c = c * m[..., None]
+        w = w * m
+        a = a * step_live
+        ls = ls * step_live
+        lq = lq * step_live
+    return FleetInputs(
+        c=c, w=w, a=a, lat_sum=ls, lat_sumsq=lq,
+        mask=inputs.mask, fn_mask=inputs.fn_mask,
+    )
+
+
+def fold_step_valid(step: FleetStep) -> FleetStep:
+    """Fold a streaming tick's per-node liveness into its data.
+
+    The one-tick twin of ``_apply_mask``: invalid node-ticks become zero
+    telemetry (``c = w = a = 0``), so they write zero rows into the ring
+    buffer, add nothing to the invocation sums, and attribute exactly 0 W —
+    the same masked semantics as the segment engines, defined in the same
+    module.  Identity when ``step.valid is None`` (the dense fleet keeps
+    its pre-ragged trace); ``valid`` is data, so changing liveness patterns
+    never retrace.
+    """
+    if step.valid is None:
+        return step
+    v = step.valid.astype(step.c.dtype)
+    return FleetStep(
+        c=step.c * v[:, None], w=step.w * v,
+        a=step.a * v[:, None], lat_sum=step.lat_sum * v[:, None],
+        lat_sumsq=step.lat_sumsq * v[:, None],
+    )
+
+
+def _mask_fn_axis(result: FleetResult, fn_mask: Array | None) -> FleetResult:
+    """Force masked functions' output rows to exactly zero (identity if dense).
+
+    ``_apply_mask`` already removes masked functions from every input
+    statistic, so their estimates sit at the NNLS/Kalman zero fixed point
+    and their attribution is a product with a zero contribution column —
+    this fold turns that argument into a guarantee: x0, trajectory, final
+    estimate, and tick attribution are *exactly* 0.0 on masked rows
+    regardless of solver iteration counts.  The Kalman ``state`` is left
+    untouched (it is internal filter state; its masked rows never reach an
+    output unmasked).
+    """
+    if fn_mask is None:
+        return result
+    fm = fn_mask.astype(result.x_final.dtype)
+    return result._replace(
+        x_final=result.x_final * fm,
+        x_trajectory=result.x_trajectory * fm[:, None, :],
+        x0=result.x0 * fm,
+        tick_power=None
+        if result.tick_power is None
+        else result.tick_power * fm[:, None, :],
+    )

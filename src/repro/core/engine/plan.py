@@ -1,0 +1,144 @@
+"""FleetPlan: the engine package's single declarative composition point.
+
+Every cross-cutting concern a fleet run needs — mask folding, init-block
+defaults, the gram backend, per-tick attribution, the fn-axis output fold
+— used to be re-threaded by hand through four engine paths (sequential
+oracle, batched segment, gram-hoisted, streaming scan).  Here it is
+resolved **once, as data**:
+
+    plan = resolve_plan(inputs, config, init_c=..., init_w=...)
+    x0 = plan.initial_estimate()
+    ... engine-specific filter stage ...
+    return finish_result(plan, final_state=..., traj=..., x0=...,
+                         with_ticks=...)
+
+``resolve_plan`` is the entry stage (mask fold + init defaults + backend),
+``finish_result`` the exit stage (conserved attribution + fn-mask fold);
+the only thing an engine path contributes in between is its filter.  The
+mesh dispatch concern lives one stage over in ``core.engine.sharding``
+(``_run_sharded`` re-enters the engine per local shard, where it resolves
+a local plan), and the windowing layout shared with the session/profiler
+layers is ``segment_plan`` below.  Because every stage is the same
+function object across paths, the paths cannot drift — the bitwise/1e-5
+pins in tests/test_batched_engine.py et al. are structural, not lucky.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.engine.attribution import tick_attribution
+from repro.core.engine.estimate import _gram_fn, fleet_initial_estimate
+from repro.core.engine.masking import _apply_mask, _mask_fn_axis
+from repro.core.engine.types import (
+    Array,
+    EngineConfig,
+    FleetInputs,
+    FleetResult,
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FleetPlan:
+    """One fleet run's resolved configuration — config + folded data, once.
+
+    Built by ``resolve_plan`` and consumed by all four engine paths.  The
+    fields are *post-fold*: ``inputs`` already has tick/fn masks folded in
+    (``masking._apply_mask``), ``init_c``/``init_w`` are the resolved init
+    block (the caller's dedicated block, else the folded segment itself —
+    so a ragged fleet's padding can never leak into the init gram), and
+    ``gram_fn`` is the resolved gram-assembly backend (None = XLA einsum;
+    only the gram-hoisted path resolves one).
+    """
+
+    config: EngineConfig
+    inputs: FleetInputs       # mask-folded batch (identity when dense)
+    init_c: Array             # (B, ..., M) init-block contributions
+    init_w: Array             # (B, ...) init-block target power
+    gram_fn: Callable | None = None
+
+    def initial_estimate(self) -> Array:
+        """(B, M) whole-trace X_0 over the plan's init block (§4.2)."""
+        return fleet_initial_estimate(
+            self.init_c, self.init_w, self.config, gram_fn=self.gram_fn
+        )
+
+
+def resolve_plan(
+    inputs: FleetInputs,
+    config: EngineConfig,
+    *,
+    init_c: Array | None = None,
+    init_w: Array | None = None,
+    use_backend: bool = False,
+) -> FleetPlan:
+    """Resolve one fleet run into a ``FleetPlan`` (the shared entry stage).
+
+    Folds the ragged masks into the data exactly once (the single
+    definition of masked semantics, ``masking._apply_mask``), defaults the
+    init block to the *folded* inputs, and — for the gram-hoisted path
+    (``use_backend=True``) — resolves the configured gram backend.  Every
+    engine path calls this before its filter stage, so concerns like
+    fn-masking are written here instead of four times.
+    """
+    folded = _apply_mask(inputs)
+    return FleetPlan(
+        config=config,
+        inputs=folded,
+        init_c=folded.c if init_c is None else init_c,
+        init_w=folded.w if init_w is None else init_w,
+        gram_fn=_gram_fn(config.backend) if use_backend else None,
+    )
+
+
+def finish_result(
+    plan: FleetPlan,
+    *,
+    final_state,
+    traj: Array,
+    x0: Array,
+    with_ticks: bool,
+) -> FleetResult:
+    """Assemble a ``FleetResult`` from a filter stage's outputs (exit stage).
+
+    Computes the conserved per-tick attribution over the plan's folded
+    inputs (when ``with_ticks``) and applies the fn-axis output fold
+    (``masking._mask_fn_axis``) — the two exit concerns every engine path
+    shares, written once.  ``final_state`` is the batched final
+    ``KalmanState``; its ``x`` is the final estimate.
+    """
+    tick_power = unattributed = None
+    if with_ticks:
+        tick_power, unattributed = tick_attribution(
+            plan.inputs.c, plan.inputs.w, traj, delta=plan.config.delta
+        )
+    return _mask_fn_axis(
+        FleetResult(
+            x_final=final_state.x, x_trajectory=traj, x0=x0,
+            tick_power=tick_power, unattributed=unattributed,
+            state=final_state,
+        ),
+        plan.inputs.fn_mask,
+    )
+
+
+def segment_plan(cfg, duration: float) -> tuple[int, int, int, int]:
+    """Window accounting for one profiling segment, shared by every path.
+
+    ``cfg`` is any profiler-level config carrying ``delta`` /
+    ``init_windows`` / ``step_windows`` (``core.profiler.ProfilerConfig``
+    in practice — duck-typed so this layout stage stays below the
+    orchestration layer).  Returns ``(n_windows, init_n, s, n_used)``:
+    total delta windows, the N_init initial-estimate block, the number of
+    full Kalman steps after it, and the windows actually consumed
+    (``init_n + s * step_windows`` — the ragged tail past it feeds no
+    Kalman update).  The per-node ``FaasMeterProfiler.profile``,
+    ``fleet_profile_batched``, ``StreamingFleetSession``, and the control
+    plane's ``profile_fleet`` fallback logic all derive their plan from
+    here so they cannot disagree.
+    """
+    n_windows = int(round(duration / cfg.delta))
+    init_n = min(cfg.init_windows, n_windows)
+    s = max((n_windows - init_n) // cfg.step_windows, 0)
+    return n_windows, init_n, s, init_n + s * cfg.step_windows

@@ -1,0 +1,196 @@
+"""Segment filter stages: batched, gram-hoisted, and sequential-oracle runs.
+
+Each engine here is ``resolve_plan`` → a filter stage → ``finish_result``
+(``core.engine.plan``): the shared stages own mask folding, init-block
+defaults, conserved attribution, and the fn-axis output fold, so this
+module contains only what actually differs between the paths —
+
+    ``run_fleet``            vmap over nodes + ``lax.scan`` over steps on the
+                             raw (B, S, n_w, M) window blocks; numerically
+                             identical to the sequential reference.
+    ``run_fleet_gram``       the O(M^2)-per-step variant: window statistics
+                             are hoisted into one batched gram pass first
+                             (Pallas kernel on TPU, XLA einsum elsewhere),
+                             so the scan never touches the window dimension.
+    ``run_fleet_sequential`` the seed-semantics oracle: Python loops over
+                             nodes and steps calling ``kalman_step``.  Tests
+                             pin the batched paths against it; benchmarks
+                             time the batched paths against it.
+
+``mesh`` dispatches through ``core.engine.sharding`` (each device re-enters
+the unsharded engine on its local node block).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.estimate import _init_states, _node_init_gram
+from repro.core.engine.plan import finish_result, resolve_plan
+from repro.core.engine.sharding import _run_sharded
+from repro.core.engine.types import Array, EngineConfig, FleetInputs, FleetResult
+from repro.core.kalman import (
+    kalman_init,
+    kalman_step,
+    precompute_step_inputs,
+    run_kalman,
+    run_kalman_fleet,
+    run_kalman_fleet_gram,
+    run_kalman_gram,
+)
+
+
+def run_fleet(
+    inputs: FleetInputs,
+    config: EngineConfig = EngineConfig(),
+    *,
+    init_c: Array | None = None,
+    init_w: Array | None = None,
+    with_ticks: bool = True,
+    mesh=None,
+) -> FleetResult:
+    """The batched engine: three fleet-wide jitted stages, no Python loops.
+
+    Stage 1 solves every node's whole-trace X_0 in one batched NNLS (over
+    ``init_c``/``init_w`` — a dedicated N_init window block, profiler-style
+    — when given, else over all steps); stage 2 — the hot loop — filters
+    all B nodes x S steps x n_w ticks in a single jitted ``vmap``+``scan``
+    call; stage 3 computes conserved per-tick attribution.  The stages are
+    separate jit boundaries (rather than one fused program) so each
+    compiles identically to the sequential oracle's building blocks — which
+    is what lets tests pin batched == sequential to float-reassociation
+    noise.
+
+    With ``mesh`` (a ``distributed.sharding.FleetMesh``) the node axis is
+    sharded over the mesh devices via ``shard_map``: each device runs these
+    same stages on its local node block, collective-free, pinned to the
+    unsharded result at 1e-5 (tests/test_sharded_fleet.py).
+
+    Ragged fleets: with ``inputs.mask`` set, masked ticks are folded to
+    zero telemetry (``_apply_mask``) before any stage runs — they feed no
+    gram/innovation statistics, attribute exactly 0 W in ``tick_power``,
+    and fully-masked steps leave the per-node Kalman state untouched (the
+    trajectory repeats the frozen estimate)."""
+    if mesh is not None:
+        return _run_sharded(run_fleet, inputs, config, init_c, init_w, with_ticks, mesh)
+    plan = resolve_plan(inputs, config, init_c=init_c, init_w=init_w)
+    inputs = plan.inputs
+    x0 = plan.initial_estimate()
+    if inputs.c.shape[0] == 1:
+        # Batch-1 vmap lowers contractions differently; keep the one-node
+        # fleet on the plain scan so it matches the oracle bitwise.
+        final1, traj1 = run_kalman(
+            kalman_init(inputs.c.shape[-1], x0=x0[0]), inputs.c[0], inputs.w[0],
+            inputs.a[0], inputs.lat_sum[0], inputs.lat_sumsq[0], config.kalman,
+        )
+        final = jax.tree.map(lambda l: l[None], final1)
+        traj = traj1[None]
+    else:
+        final, traj = run_kalman_fleet(
+            _init_states(x0), inputs.c, inputs.w, inputs.a,
+            inputs.lat_sum, inputs.lat_sumsq, config.kalman,
+        )
+    return finish_result(
+        plan, final_state=final, traj=traj, x0=x0, with_ticks=with_ticks
+    )
+
+
+def run_fleet_gram(
+    inputs: FleetInputs,
+    config: EngineConfig = EngineConfig(),
+    *,
+    init_c: Array | None = None,
+    init_w: Array | None = None,
+    with_ticks: bool = True,
+    mesh=None,
+) -> FleetResult:
+    """Gram-hoisted engine: window statistics reduced once (Pallas kernel on
+    TPU, XLA einsum elsewhere), then an O(M^2)-per-step fleet scan that
+    never touches the window dimension.  Same update rule as ``run_fleet``;
+    equal up to float reassociation of the hoisted contractions.  ``mesh``
+    shards the node axis exactly as in ``run_fleet``; ``inputs.mask``
+    makes the fleet ragged exactly as in ``run_fleet`` (masked ticks are
+    zeroed *before* the gram hoist, so they drop out of the hoisted
+    statistics too)."""
+    if mesh is not None:
+        return _run_sharded(
+            run_fleet_gram, inputs, config, init_c, init_w, with_ticks, mesh
+        )
+    plan = resolve_plan(
+        inputs, config, init_c=init_c, init_w=init_w, use_backend=True
+    )
+    inputs = plan.inputs
+    x0 = plan.initial_estimate()
+    step_inputs = precompute_step_inputs(
+        inputs.c, inputs.w, inputs.a, inputs.lat_sum, inputs.lat_sumsq,
+        config.kalman, gram_fn=plan.gram_fn,
+    )
+    if inputs.c.shape[0] == 1:
+        final1, traj1 = run_kalman_gram(
+            kalman_init(inputs.c.shape[-1], x0=x0[0]),
+            jax.tree.map(lambda l: l[0], step_inputs),
+            config.kalman,
+        )
+        final = jax.tree.map(lambda l: l[None], final1)
+        traj = traj1[None]
+    else:
+        final, traj = run_kalman_fleet_gram(_init_states(x0), step_inputs, config.kalman)
+    return finish_result(
+        plan, final_state=final, traj=traj, x0=x0, with_ticks=with_ticks
+    )
+
+
+def run_fleet_sequential(
+    inputs: FleetInputs,
+    config: EngineConfig = EngineConfig(),
+    *,
+    init_c: Array | None = None,
+    init_w: Array | None = None,
+    with_ticks: bool = True,
+) -> FleetResult:
+    """Sequential-reference oracle (seed semantics, Python loops).
+
+    Loops nodes x steps calling the per-step ``kalman_step`` exactly as the
+    seed's per-node profiler did; used by tests as the ground truth the
+    batched paths must reproduce and by benchmarks as the baseline.
+    Ragged fleets go through the same ``_apply_mask`` fold as the batched
+    engines (via ``resolve_plan``), so the oracle defines masked semantics
+    too.  Its X_0 stage stays a per-node loop over the plan's init block —
+    the reference the batched NNLS is pinned against, not a consumer of
+    it."""
+    from repro.core.disaggregation import solve_nnls_gram
+
+    plan = resolve_plan(inputs, config, init_c=init_c, init_w=init_w)
+    inputs = plan.inputs
+
+    b, s, n_w, m = inputs.c.shape
+    ic, iw = plan.init_c, plan.init_w
+    eye = config.init_lam * jnp.eye(m, dtype=jnp.float32)
+    x0s = []
+    for i in range(b):
+        gram, rhs = _node_init_gram(ic[i], iw[i])
+        x0s.append(solve_nnls_gram(gram + eye, rhs, iters=config.init_iters))
+    x0 = jnp.stack(x0s)
+    finals, trajs = [], []
+    for i in range(b):
+        state = kalman_init(m, x0=x0[i])
+        xs = []
+        for j in range(s):
+            state, x = kalman_step(
+                state,
+                inputs.c[i, j],
+                inputs.w[i, j],
+                inputs.a[i, j],
+                inputs.lat_sum[i, j],
+                inputs.lat_sumsq[i, j],
+                config.kalman,
+            )
+            xs.append(x)
+        finals.append(state)
+        trajs.append(jnp.stack(xs))
+    traj = jnp.stack(trajs)
+    state = jax.tree.map(lambda *leaves: jnp.stack(leaves), *finals)
+    return finish_result(
+        plan, final_state=state, traj=traj, x0=x0, with_ticks=with_ticks
+    )

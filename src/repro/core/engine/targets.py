@@ -1,0 +1,59 @@
+"""Target stage: what signal the engines disaggregate (pure vs §4.3 combined).
+
+The engines are target-agnostic: combined mode (§4.3) feeds them the
+chip-subtracted 'rest' power instead of the idle-adjusted system signal.
+Every profiling path — per-node, batched segment, and streaming — builds
+its combined targets through these two helpers, so the mode cannot drift
+between paths.  (The chip side is attributed by ``core.cpu_model``'s
+fleet-batched counter model; the counter-model plumbing lives with the
+session/profiler layers above, this module is only the target arithmetic
+the jitted engines consume.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine.types import Array
+
+
+@jax.jit
+def fleet_rest_idle(chip_init: Array, idle_watts) -> Array:
+    """Idle power of the non-chip components, per node (§4.3).
+
+    Approximated as total idle minus the chip's observed floor over the
+    N_init initial-estimate block:  ``max(idle - min(chip_init), 0)``.
+    Using the init block (rather than the full segment) keeps the estimate
+    identical across the per-node, batched, and *streaming* paths — the
+    stream knows only the init windows when it must start producing
+    combined targets — and never reads past the accounting segment.
+
+    Args:
+      chip_init: (..., N_init) chip power over the init block (one node or
+        a (B, N_init) fleet).
+      idle_watts: scalar or (...,) per-node total idle power.
+
+    Returns:
+      (...,) rest-side idle watts, traceable (no host sync).
+    """
+    return jnp.maximum(
+        jnp.asarray(idle_watts, jnp.float32) - jnp.min(chip_init, axis=-1), 0.0
+    )
+
+
+@jax.jit
+def combined_rest_target(w_sys: Array, chip: Array, rest_idle) -> Array:
+    """Combined-mode (§4.3) disaggregation target: the 'rest' power.
+
+    ``max(W_sys - W_chip - rest_idle, 0)`` — the chip side is modeled by
+    the linear counter model, so the Kalman/NNLS engines disaggregate only
+    what is left of the system signal.  Pure broadcasting: callers align
+    ``rest_idle`` themselves (scalar, or ``(B, 1)`` against ``(B, N)``
+    windows, or ``(B,)`` against per-tick ``(B,)`` power).  All three fleet
+    engines and the per-node profiler build their combined targets through
+    this single helper, so the mode cannot drift between paths.  Masked
+    (padded) ticks arrive with ``w_sys = chip = 0`` after the engines'
+    mask fold and therefore produce a zero target (``rest_idle >= 0``).
+    """
+    return jnp.maximum(w_sys - chip - rest_idle, 0.0)

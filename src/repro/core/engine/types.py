@@ -1,0 +1,171 @@
+"""Engine data contracts: configs, batch inputs, stream state, results.
+
+The leaf module of the layered engine package (docs/architecture.md,
+"Layered engine"): every other ``core.engine`` stage — masking, plan
+resolution, the segment/streaming filters, sharded dispatch, packing —
+imports its types from here and nothing here imports any of them back.
+Keeping the contracts in one dependency-free module is what lets a concern
+like fn-masking live in exactly one stage: the stages compose through
+these shapes instead of re-declaring them per code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+
+from repro.core.kalman import KalmanConfig, KalmanState
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine-wide configuration (hashable: doubles as a static jit arg).
+
+    The same config drives all engine paths — segment, gram-hoisted, and
+    streaming — so a pinned comparison never mixes hyperparameters.
+    """
+
+    kalman: KalmanConfig = KalmanConfig()
+    delta: float = 1.0          # tick (window) length in seconds
+    backend: str = "auto"       # auto | xla | pallas: gram-assembly backend
+    init_iters: int = 400       # NNLS iterations for the whole-trace X_0
+    init_ridge_lambda: float | None = None  # X_0 ridge; None -> kalman's
+
+    @property
+    def init_lam(self) -> float:
+        """Ridge used for the initial X_0 solve (defaults to the Kalman's)."""
+        return (
+            self.kalman.ridge_lambda
+            if self.init_ridge_lambda is None
+            else self.init_ridge_lambda
+        )
+
+
+class FleetInputs(NamedTuple):
+    """One fleet profiling batch: B nodes, S steps of n_w ticks, M functions.
+
+    ``mask`` makes the fleet *ragged*: a ``(B, S, n_w)`` per-tick validity
+    mask (1.0 = real telemetry tick, 0.0 = padding) whose flattened view is
+    the ``(B, T)`` tick mask with ``T = S * n_w``.  ``mask=None`` means
+    every tick is real (the dense fleet — the engines take the exact
+    pre-ragged code path).  The mask is *data*, not a static shape: fleets
+    with different rag patterns share one jit trace.  Masked ticks
+    contribute exactly zero energy and masked-out steps freeze the Kalman
+    state (see ``pack_fleet_inputs`` and docs/architecture.md,
+    "Ragged fleets").
+
+    ``fn_mask`` makes the *function* axis ragged too: a ``(B, M)`` per-node
+    validity mask over the padded function axis (heterogeneous fleets whose
+    nodes host different ``num_fns`` pad M to the fleet max).  Masked
+    functions are folded to zero contributions/invocations before any
+    engine stage and their rows of every estimate/attribution output are
+    forced to exactly zero — a padded function can never absorb energy.
+    Like ``mask`` it is data, not shape: mixes with different per-node
+    function counts share one trace.
+    """
+
+    c: Array          # (B, S, n_w, M) contribution seconds per tick
+    w: Array          # (B, S, n_w) idle-adjusted active power per tick (W)
+    a: Array          # (B, S, M) invocation counts per step
+    lat_sum: Array    # (B, S, M) summed latency per step
+    lat_sumsq: Array  # (B, S, M) summed squared latency per step
+    mask: Array | None = None  # (B, S, n_w) tick validity; None = all real
+    fn_mask: Array | None = None  # (B, M) fn validity; None = all fns real
+
+
+class FleetResult(NamedTuple):
+    """Output of one fleet disaggregation (any engine path).
+
+    ``tick_power``/``unattributed`` are None when computed with
+    ``with_ticks=False``; otherwise ``tick_power.sum(-1) + unattributed``
+    reproduces the measured per-tick power exactly (efficiency per tick).
+    """
+
+    x_final: Array        # (B, M) final per-function power estimate (W)
+    x_trajectory: Array   # (B, S, M) per-step estimates
+    x0: Array             # (B, M) whole-trace initial estimate
+    tick_power: Array | None    # (B, T, M) conserved per-tick power (W)
+    unattributed: Array | None  # (B, T) power in ticks with no activity
+    state: KalmanState    # batched final filter state
+
+
+class FleetStep(NamedTuple):
+    """Inputs for ONE telemetry tick (delta window) across the fleet.
+
+    Shapes: B nodes x M functions.  ``a``/``lat_sum``/``lat_sumsq`` carry the
+    invocations *starting* in this tick; the engine only reads their running
+    sums at Kalman-step boundaries, so any within-step placement that sums to
+    the per-step statistics is equivalent (``fleet_ticks`` puts each step's
+    totals on its first valid tick when replaying segment inputs).
+
+    ``valid`` makes the tick *ragged*: a per-node liveness flag (1.0 = this
+    node really produced this tick; 0.0 = the node's stream has ended, has
+    not joined yet, or dropped the window).  Invalid node-ticks are folded
+    to zero telemetry before they touch the ring buffer or the attribution
+    split, so a dead node contributes nothing mid-step and its Kalman state
+    freezes once a whole step passes without valid ticks — global stream
+    time keeps advancing for the live nodes.  ``valid=None`` means every
+    node is live (the dense fleet; identical trace to the pre-ragged step).
+    """
+
+    c: Array          # (B, M) contribution seconds within this tick
+    w: Array          # (B,)   idle-adjusted active power this tick (W)
+    a: Array          # (B, M) invocations starting in this tick
+    lat_sum: Array    # (B, M) summed latency of those invocations (s)
+    lat_sumsq: Array  # (B, M) summed squared latency (s^2)
+    valid: Array | None = None  # (B,) node liveness this tick; None = all live
+
+
+class FleetStreamState(NamedTuple):
+    """Carried state of the streaming engine (the state-carry contract).
+
+    Everything the per-tick update needs lives here — the batched Kalman
+    filter state, a ring buffer of the current partial step's ticks, and the
+    running invocation/latency statistics.  The jitted ``fleet_step``
+    donates this state, so in steady streaming every buffer is updated in
+    place and a tick is O(B M): two in-place row writes plus element-wise
+    accumulation.  The O(B M^2) gram assembly and the NNLS/Kalman update run
+    only at step boundaries (inside ``lax.cond``), contracting the full
+    buffer with the *same* einsum as the segment gram engine — which is what
+    keeps the streaming trajectory pinned to the segment paths.
+
+    Invariants (see docs/streaming.md):
+      - ``tick_in_step`` in [0, n_w); rows [0, tick_in_step) of
+        ``c_buf``/``w_buf`` hold the current partial step (rows beyond it
+        are stale — fully overwritten before the next boundary reads them);
+      - ``a``/``lat_sum``/``lat_sumsq`` accumulate the partial step and are
+        zeroed at each boundary;
+      - ``step_idx`` counts completed Kalman steps.
+    """
+
+    kalman: KalmanState  # batched filter state, leading node axis B
+    c_buf: Array         # (B, n_w, M) contribution rows of the partial step
+    w_buf: Array         # (B, n_w)    power ticks of the partial step
+    a: Array             # (B, M)      invocations so far in partial step
+    lat_sum: Array       # (B, M)
+    lat_sumsq: Array     # (B, M)
+    tick_in_step: Array  # ()          int32 ticks in the partial step
+    step_idx: Array      # ()          int32 completed Kalman steps
+
+
+class TickAttribution(NamedTuple):
+    """Live per-tick output of the streaming engine.
+
+    ``tick_power`` is the *causal* conserved attribution: this tick's
+    measured power split over the functions running in it, proportional to
+    ``c * x`` under the latest available estimate (post-update on boundary
+    ticks, the carried estimate mid-step).  It satisfies
+    ``tick_power.sum(-1) + unattributed == w`` by construction — the same
+    efficiency property as the segment engine's ``tick_attribution``, which
+    differs only in using the step's final estimate for *all* its ticks
+    (smoothed-within-step; see docs/streaming.md).
+    """
+
+    tick_power: Array     # (B, M) conserved per-tick power (W)
+    unattributed: Array   # (B,)   power in ticks with no activity (W)
+    x: Array              # (B, M) estimate after processing this tick (W)
+    step_completed: Array  # ()    bool: did this tick close a Kalman step

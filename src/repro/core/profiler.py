@@ -12,9 +12,14 @@ Pipeline per accounting segment:
      X = X_CPU + X_Rest (§4.3);
   6. assemble the Shapley footprint spectrum (§4.4, Eq. 4).
 
-All heavy math is jitted; this class is thin orchestration so the serving
-control plane can call it online (per segment) and the fleet controller can
-vmap the underlying kernels over nodes.
+This module is the thin orchestration layer at the top of the core stack
+(``kernels → core/engine → core/sessions → here``): the jitted stage
+pipeline lives in ``core.engine``, the live session state machines in
+``core.sessions``, and what remains here is per-node/segment wiring — the
+``FaasMeterProfiler``, the combined-mode fleet preparation, and the two
+segment-level fleet drivers.  The session classes (``StreamingFleetSession``,
+``SlotFleetSession``), the shared finalizer, and ``segment_plan`` are
+re-exported for backward compatibility with their original home here.
 """
 
 from __future__ import annotations
@@ -29,11 +34,44 @@ import numpy as np
 from repro.core import contribution as contrib
 from repro.core import cpu_model as cpumod
 from repro.core import sync as syncmod
-from repro.core.batched_engine import combined_rest_target, fleet_rest_idle
 from repro.core.disaggregation import DisaggregationConfig, disaggregate
+from repro.core.engine import combined_rest_target, fleet_rest_idle
+from repro.core.engine.plan import segment_plan
 from repro.core.footprints import FootprintSpectrum, assemble_spectrum
 from repro.core.kalman import KalmanConfig, kalman_init, run_kalman
 from repro.core.metrics import total_power_error
+from repro.core.sessions import (
+    FootprintReport,
+    SlotFleetSession,
+    StreamingFleetSession,
+    StreamTick,
+    combined_chip_power,
+)
+from repro.core.sessions.combined import (
+    _as_fleet_counters,
+    _as_fleet_model,
+    prepare_combined_fleet,
+)
+from repro.core.sessions.report import (
+    _finalize_report,
+    _node_durations,
+    _per_fn_latency_stats,
+)
+
+__all__ = [
+    "FaasMeterProfiler",
+    "FootprintReport",
+    "ProfilerConfig",
+    "SlotFleetSession",
+    "StreamTick",
+    "StreamingFleetSession",
+    "Telemetry",
+    "combined_chip_power",
+    "fleet_profile",
+    "fleet_profile_batched",
+    "prepare_combined_fleet",
+    "segment_plan",
+]
 
 Array = jax.Array
 
@@ -65,298 +103,6 @@ class ProfilerConfig:
     disagg: DisaggregationConfig = DisaggregationConfig()
     sync_max_shift: int = 16       # bound on skew search (windows)
     account_control_plane: bool = True
-
-
-class FootprintReport(NamedTuple):
-    """One node's profiling outcome for an accounting segment (§4.4).
-
-    Produced by every profiling path through the shared
-    ``_finalize_report``; ``total_error`` is the internal-validity metric
-    (reconstruction vs the synchronized signal), not a ground-truth error.
-    """
-
-    spectrum: FootprintSpectrum      # per-function energy spectrum (M,)
-    x_power: Array                   # (M,) final per-function power (watts)
-    x_trajectory: Array              # (S, M) Kalman trajectory
-    x_cp: Array                      # scalar: control-plane power estimate
-    mean_latency: Array              # (M,)
-    invocations: Array               # (M,)
-    skew_windows: float              # estimated sensor skew (windows)
-    total_error: float               # internal-validity Total-Error
-    cp_energy: float                 # control-plane energy over segment (J)
-    idle_energy: float               # idle energy over segment (J)
-
-
-def segment_plan(cfg: ProfilerConfig, duration: float) -> tuple[int, int, int, int]:
-    """Window accounting for one profiling segment, shared by every path.
-
-    Returns ``(n_windows, init_n, s, n_used)``: total delta windows, the
-    N_init initial-estimate block, the number of full Kalman steps after
-    it, and the windows actually consumed (``init_n + s * step_windows`` —
-    the ragged tail past it feeds no Kalman update).  The per-node
-    ``FaasMeterProfiler.profile``, ``fleet_profile_batched``,
-    ``StreamingFleetSession``, and the control plane's ``profile_fleet``
-    fallback logic all derive their plan from here so they cannot disagree.
-    """
-    n_windows = int(round(duration / cfg.delta))
-    init_n = min(cfg.init_windows, n_windows)
-    s = max((n_windows - init_n) // cfg.step_windows, 0)
-    return n_windows, init_n, s, init_n + s * cfg.step_windows
-
-
-def _finalize_report(
-    *,
-    x_fns: Array,          # (M,) final per-function power (combined-adjusted)
-    x_cp: Array,           # scalar: control-plane power estimate
-    x0: Array,             # (M_aug,) initial whole-trace estimate
-    traj: Array,           # (S', M_aug) Kalman trajectory (x0[None] if S == 0)
-    c_aug: Array,          # (N, M_aug) contribution matrix incl. principals
-    c_steps: Array | None,  # (S, n_w, M_aug) step-grouped contributions
-    w_sys: Array,          # (N,) synchronized raw system signal
-    offset,                # scalar or (N,): reconstruction offset (idle/combined)
-    init_n: int,
-    s: int,
-    step_windows: int,
-    counts: Array,         # (M,) invocation counts over the segment
-    mean_lat: Array,       # (M,) mean latency per function
-    cp_col: Array | None,  # (N,) control-plane contribution column
-    idle_watts: float,
-    duration: float,
-    skew: float,
-    idle_extra_watts: float = 0.0,
-) -> FootprintReport:
-    """Profiler steps 5-6, shared by ALL disaggregation paths (§4.3-§4.4).
-
-    Per-node, batched-segment, and streaming profiling produce the same
-    (x_fns, trajectory, contribution) tuple through different engines; this
-    single finalizer turns it into a ``FootprintReport`` — control-plane and
-    idle energy, the Shapley footprint spectrum, the time-varying W_hat
-    reconstruction, and the internal-validity Total-Error — so the three
-    paths cannot drift (the ROADMAP's shared-finalization item; equivalence
-    is pinned in tests/test_streaming_engine.py).
-
-    The reconstruction uses the *time-varying* estimates (X_0 over the init
-    window, then each Kalman step's X) and scores against the synchronized
-    raw signal — comparing against the raw lagged series would charge the
-    sensor's reporting delay to the model.
-
-    ``idle_extra_watts`` routes additional always-on power into the idle
-    energy term: combined mode (§4.3) passes the counter model's
-    *un-attributed* static bias here (non-zero only on idle intervals, see
-    ``cpu_model.predict_function_power_split``) so no measured chip energy
-    silently vanishes from the accounting.
-    """
-    cp_energy = float(x_cp * jnp.sum(cp_col)) if cp_col is not None else 0.0
-    idle_energy = (idle_watts + float(idle_extra_watts)) * duration
-    spectrum = assemble_spectrum(
-        x_fns, mean_lat, counts, jnp.asarray(cp_energy), jnp.asarray(idle_energy)
-    )
-
-    w_hat_init = c_aug[:init_n] @ x0 + (
-        offset[:init_n] if hasattr(offset, "shape") else offset
-    )
-    parts = [w_hat_init]
-    if s > 0:
-        per_step = jnp.einsum("snm,sm->sn", c_steps, traj).reshape(-1)
-        off_steps = (
-            offset[init_n : init_n + s * step_windows]
-            if hasattr(offset, "shape")
-            else offset
-        )
-        parts.append(per_step + off_steps)
-    w_hat = jnp.concatenate([jnp.atleast_1d(p) for p in parts])
-    n_hat = w_hat.shape[0]
-    terr = float(total_power_error(w_sys[:n_hat], w_hat))
-    return FootprintReport(
-        spectrum=spectrum,
-        x_power=x_fns,
-        x_trajectory=traj,
-        x_cp=x_cp,
-        mean_latency=mean_lat,
-        invocations=counts,
-        skew_windows=skew,
-        total_error=terr,
-        cp_energy=cp_energy,
-        idle_energy=idle_energy,
-    )
-
-
-def _per_fn_latency_stats(fn_id, start, end, num_fns):
-    dur = jnp.maximum(end - start, 0.0)
-    valid = fn_id >= 0
-    seg = jnp.where(valid, fn_id, num_fns)
-    counts = jax.ops.segment_sum(valid.astype(jnp.float32), seg, num_segments=num_fns + 1)[
-        :num_fns
-    ]
-    lat_sum = jax.ops.segment_sum(jnp.where(valid, dur, 0.0), seg, num_segments=num_fns + 1)[
-        :num_fns
-    ]
-    lat_sumsq = jax.ops.segment_sum(
-        jnp.where(valid, dur * dur, 0.0), seg, num_segments=num_fns + 1
-    )[:num_fns]
-    mean = lat_sum / jnp.maximum(counts, 1.0)
-    return counts, mean, lat_sum, lat_sumsq
-
-
-def combined_chip_power(
-    counter_model: cpumod.LinearPowerModel,
-    fn_counters: Array,   # (..., M, F) normalized per-function counters
-    busy_seconds: Array,  # (..., M) per-function runtime over the segment
-    duration,             # scalar or (...,) segment seconds
-) -> tuple[Array, Array]:
-    """Per-function X_CPU + un-attributed static bias for a segment (§4.3).
-
-    The single place the combined mode turns counters into chip-side power
-    — the per-node ``profile``, ``fleet_profile_batched``, and
-    ``StreamingFleetSession`` all call it (per node or fleet-batched), so
-    the chip split cannot drift between paths.  The second element is the
-    static bias left un-attributed on idle intervals; callers route it into
-    the report's idle/offset term (``_finalize_report(idle_extra_watts=)``).
-    """
-    dur = jnp.asarray(duration, jnp.float32)
-    if dur.ndim:
-        dur = dur[..., None]
-    return cpumod.predict_function_power_split(
-        counter_model, fn_counters, busy_seconds / dur
-    )
-
-
-def _as_fleet_model(counter_model, b: int) -> cpumod.LinearPowerModel:
-    """Normalize ``counter_model`` to a fleet-batched ``LinearPowerModel``.
-
-    Accepts a sequence of per-node models (stacked), an already-batched
-    model with ``(B, F)``/``(B,)`` leaves (validated), or a single shared
-    model (broadcast to every node).
-    """
-    if not isinstance(counter_model, cpumod.LinearPowerModel) and isinstance(
-        counter_model, (list, tuple)
-    ):
-        if len(counter_model) != b:
-            raise ValueError(
-                f"got {len(counter_model)} counter model(s) for {b} node(s)"
-            )
-        return cpumod.stack_models(counter_model)
-    w = jnp.asarray(counter_model.weights)
-    bias = jnp.asarray(counter_model.bias)
-    if w.ndim == 1:
-        return cpumod.LinearPowerModel(
-            weights=jnp.broadcast_to(w, (b,) + w.shape),
-            bias=jnp.broadcast_to(jnp.reshape(bias, ()), (b,)),
-        )
-    if w.shape[0] != b:
-        raise ValueError(
-            f"batched counter model covers {w.shape[0]} node(s), fleet has {b}"
-        )
-    return cpumod.LinearPowerModel(weights=w, bias=bias)
-
-
-def _as_fleet_counters(fn_counters, b: int, num_fns: int) -> Array:
-    """Normalize per-function counters to one (B, M, F) array."""
-    arr = (
-        jnp.stack([jnp.asarray(f) for f in fn_counters])
-        if isinstance(fn_counters, (list, tuple))
-        else jnp.asarray(fn_counters)
-    )
-    if arr.ndim == 2:
-        arr = jnp.broadcast_to(arr, (b,) + arr.shape)
-    if arr.shape[0] != b or arr.shape[1] != num_fns:
-        raise ValueError(
-            f"fn_counters shape {arr.shape} does not match fleet "
-            f"(B={b}, M={num_fns})"
-        )
-    return arr
-
-
-def prepare_combined_fleet(
-    config: ProfilerConfig,
-    traces: "list[tuple[Array, Array, Array]]",
-    telemetries: "list[Telemetry]",
-    *,
-    num_fns: int,
-    duration,
-    gflops,
-    hbm_gb,
-    mean_latency,
-):
-    """Build everything combined-mode (§4.3) fleet profiling needs.
-
-    Per node: assemble the contribution matrix over that node's own window
-    count, derive its system-interval counter features
-    (``telemetry.counters.window_counters``) and normalized per-function
-    counters (``function_counters``), and fit its ``LinearPowerModel`` on
-    the **N_init block** of chip-power observations — one batched
-    ``fit_ridge`` call for the whole fleet.  Fitting on the init block
-    (like the skew estimate and X_0) keeps the model causal on the
-    streaming path, so the batch and streaming engines consume *identical*
-    models; the paper's continuous-retraining loop then monitors drift
-    past it (``cpu_model.retrain_flags`` at Kalman-step boundaries).
-
-    Args:
-      config: profiler configuration (delta + segment plan come from here).
-      traces: per-node (fn_id, start, end) invocation arrays.
-      telemetries: per-node ``Telemetry`` — at least one node needs chip
-        power.  Chipless nodes (``chip_power is None``, e.g. the edge
-        platform in a mixed fleet) contribute zero feature/observation rows
-        and come out with the zero counter model — their chip-side split is
-        exactly zero, the combined engines' pure-mode fallback.
-      num_fns: number of unique functions M.
-      duration: segment seconds — one float or a per-node sequence.
-      gflops/hbm_gb/mean_latency: (M,) per-function step-counter specs.
-
-    Returns:
-      ``(fn_counters, window_features, models)`` — (B, M, F) normalized
-      per-function counters, (B, N_max, F) per-window features (zero-padded
-      past each node's span; the streaming session's retrain checks consume
-      them), and the fleet-batched ``LinearPowerModel``.
-    """
-    from repro.telemetry import counters as cntr
-
-    b = len(traces)
-    durations, _ = _node_durations(duration, b)
-    plans = [segment_plan(config, d) for d in durations]
-    init_n = plans[0][1]
-    if any(p[1] != init_n for p in plans):
-        raise ValueError(
-            "combined fleet: every node must cover the common N_init window "
-            f"({config.init_windows} windows); got per-node init blocks "
-            f"{[p[1] for p in plans]}"
-        )
-    n_max = max(p[0] for p in plans)
-    gf = jnp.asarray(np.asarray(gflops, np.float32))
-    hb = jnp.asarray(np.asarray(hbm_gb, np.float32))
-    lat = jnp.asarray(np.asarray(mean_latency, np.float32))
-    has_chip = [tel.chip_power is not None for tel in telemetries]
-    if not any(has_chip):
-        raise ValueError("combined mode needs chip_power on at least one node")
-    fn_list, wf_list, feats_init, chip_init = [], [], [], []
-    for (fn_id, start, end), tel, (n_i, _, _, _) in zip(traces, telemetries, plans):
-        c = contrib.contribution_matrix(
-            fn_id, start, end, num_fns=num_fns, num_windows=n_i, delta=config.delta
-        )
-        wf = cntr.window_counters(c, gf, hb, lat, config.delta)
-        fn_list.append(cntr.function_counters(c, gf, hb, lat))
-        if n_i < n_max:
-            wf = jnp.concatenate(
-                [wf, jnp.zeros((n_max - n_i, cntr.NUM_FEATURES), wf.dtype)]
-            )
-        wf_list.append(wf)
-        if tel.chip_power is None:
-            # Chipless: all-masked fit rows -> the zero counter model.
-            feats_init.append(jnp.zeros((init_n, cntr.NUM_FEATURES), wf.dtype))
-            chip_init.append(jnp.zeros((init_n,), jnp.float32))
-        else:
-            feats_init.append(wf[:init_n])
-            chip_init.append(tel.chip_power[:init_n])
-    if all(has_chip):
-        models = cpumod.fit_ridge(jnp.stack(feats_init), jnp.stack(chip_init))
-    else:
-        fit_mask = jnp.asarray(
-            np.repeat(np.asarray(has_chip, np.float32)[:, None], init_n, axis=1)
-        )
-        models = cpumod.fit_ridge(
-            jnp.stack(feats_init), jnp.stack(chip_init), mask=fit_mask
-        )
-    return jnp.stack(fn_list), jnp.stack(wf_list), models
 
 
 class FaasMeterProfiler:
@@ -601,23 +347,6 @@ class FaasMeterProfiler:
         return a_steps, lat_sums, lat_sumsqs
 
 
-def _node_durations(duration, b: int) -> tuple[list[float], bool]:
-    """Normalize a ``duration`` argument to per-node seconds.
-
-    Accepts one float (the homogeneous fleet) or a length-B sequence (the
-    ragged fleet — nodes covering different segment spans).  Returns the
-    per-node list plus whether the fleet is actually ragged.
-    """
-    if np.ndim(duration) == 0:
-        return [float(duration)] * b, False
-    durations = [float(d) for d in duration]
-    if len(durations) != b:
-        raise ValueError(
-            f"duration sequence has {len(durations)} entries for {b} node(s)"
-        )
-    return durations, len(set(durations)) > 1
-
-
 def fleet_profile(
     profiler: FaasMeterProfiler,
     traces: list[tuple[Array, Array, Array]],
@@ -662,1050 +391,6 @@ def fleet_profile(
     ]
 
 
-class StreamTick(NamedTuple):
-    """Per-tick record handed to streaming hooks (numpy, ready to consume).
-
-    Emitted by ``StreamingFleetSession`` for every engine tick (window index
-    ``init_n <= t < init_n + s * step_windows``).  All arrays are (B, ...) —
-    node-major — and ``tick_power.sum(-1) + unattributed == target`` holds
-    per tick (conserved causal attribution, see docs/streaming.md).
-    """
-
-    t: int                      # window index of this tick
-    x: np.ndarray               # (B, M_aug) live per-function power estimate (W)
-    tick_power: np.ndarray      # (B, M_aug) conserved per-tick attribution (W)
-    unattributed: np.ndarray    # (B,) power in ticks with no activity (W)
-    busy_seconds: np.ndarray    # (B, M_aug) per-function runtime in this tick (s)
-    a: np.ndarray               # (B, M_aug) invocations starting in this tick
-    target: np.ndarray          # (B,) idle-adjusted power fed to the engine (W)
-    w_sys: np.ndarray           # (B,) synchronized system power (W)
-    step_completed: bool        # did this tick close a Kalman step
-    valid: np.ndarray | None = None  # (B,) bool: node still streaming at t
-                                     # (None on a uniform fleet = all live)
-
-
-class StreamingFleetSession:
-    """Online fleet profiling: telemetry in window-by-window, state out live.
-
-    The batched profiler (``fleet_profile_batched``) consumes a *finished*
-    telemetry segment.  This session is the paper's actual operating mode —
-    footprints as a control-plane operation: callers push one delta-window of
-    fleet telemetry at a time (``push_window``); the session bootstraps on
-    the init segment (skew estimate + X_0, §4.2/§5), then advances the
-    streaming engine (``batched_engine.fleet_step``) one jitted call per
-    tick, invoking ``on_tick`` with live conserved attribution so pricing
-    and capping can act *during* the segment.  ``finalize`` produces the
-    same ``FootprintReport`` list as the segment paths, through the shared
-    ``_finalize_report`` — equivalence is pinned in
-    tests/test_streaming_engine.py.
-
-    Synchronization contract: with a chip reference, per-node skew is
-    estimated once over the init segment (the batch profiler estimates over
-    the full segment — a documented difference) and applied causally: tick
-    ``t`` is emitted once raw window ``t + ceil(max(skew, 0))`` has arrived,
-    so a positive sensor lag shows up as a small, bounded reporting delay
-    instead of acausal peeking.  Tail windows are flushed with the batch
-    path's edge clamp at ``finalize``.
-
-    Restrictions (same fleet homogeneity as ``fleet_profile_batched``):
-    default NNLS/no_idle disaggregation, equal num_fns across nodes, every
-    node covering the common init window, and at least one node with a
-    full Kalman step after it.  Durations may differ per node (a *ragged*
-    fleet): pass a sequence — nodes whose stream ends mid-segment simply
-    stop feeding the engine (``FleetStep.valid`` masks them out, so their
-    Kalman state freezes while the live nodes keep ticking) and finalize
-    against their own window count.
-
-    Combined mode (§4.3): with ``mode="combined"`` the session disaggregates
-    only the chip-subtracted 'rest' power — the per-tick target becomes
-    ``max(w_sync - chip - rest_idle, 0)`` through the same engine helper as
-    the segment paths, with the rest-side idle estimated over the init
-    block (causal).  The chip side comes from the per-node counter models
-    (``fn_counters`` + ``counter_model``; ``x_cpu`` is exposed for live
-    consumers and added into the finalized footprints).  When
-    ``window_features`` is given, the paper's continuous-retraining loop
-    runs live: each pushed chip window is paired with that tick's counter
-    features, and at every completed Kalman step the per-node model error
-    over the step is appended to ``model_errors`` with ``retrain_needed``
-    re-flagged (threshold ``cpu_model.CpuModelConfig.retrain_threshold``).
-    """
-
-    def __init__(
-        self,
-        profiler: "FaasMeterProfiler",
-        traces: list[tuple[Array, Array, Array]],
-        *,
-        num_fns: int,
-        duration: float | Sequence[float],
-        idle_watts,
-        has_chip,
-        has_cp: bool,
-        on_tick=None,
-        on_bootstrap=None,
-        mesh=None,
-        slots: int | None = None,
-        fn_counters=None,
-        counter_model=None,
-        window_features=None,
-        retrain_config: cpumod.CpuModelConfig = cpumod.CpuModelConfig(),
-    ):
-        """Args:
-          profiler: configured ``FaasMeterProfiler`` (pure or combined mode).
-          traces: per-node (fn_id, start, end) invocation arrays.
-          num_fns: number of unique functions M.
-          duration: segment length in seconds — one float, or a per-node
-            sequence for a ragged fleet (every node must still cover the
-            N_init window; ``push_window`` spans the longest node, and
-            entries for already-ended nodes are ignored).
-          idle_watts: (B,) static idle power per node.
-          has_chip: whether ``push_window`` will carry a chip reference
-            (enables skew estimation) — one bool, or a per-node sequence
-            for a heterogeneous fleet (chipless nodes' chip rows are
-            zeroed on ingest; their skew is 0 and their combined target
-            degenerates to pure mode).
-          has_cp: whether ``push_window`` will carry control-plane/system
-            CPU fractions (appends the shared principal column, §4.1).
-          on_tick: ``callable(StreamTick)`` invoked per engine tick.
-          on_bootstrap: ``callable(session)`` invoked once after X_0.
-          mesh: optional ``distributed.sharding.FleetMesh``; the engine
-            state lives sharded over the node axis and every ``fleet_step``
-            runs under ``shard_map`` (B must tile the mesh evenly — the
-            slot capacity instead when ``slots`` is set).
-          slots: optional slot-pool capacity >= B; routes the engine
-            through a ``SlotFleetSession`` (nodes admitted at bootstrap,
-            ragged nodes released when their stream ends, spare slots free
-            — the serving mode, docs/serving.md).
-          fn_counters: (B, M, F) normalized per-function counters (combined
-            mode; see ``prepare_combined_fleet``).
-          counter_model: fleet-batched / per-node-list / shared
-            ``LinearPowerModel`` (combined mode).
-          window_features: optional (B, N, F) per-window counter features —
-            enables live ``needs_retrain`` checks at step boundaries.
-          retrain_config: thresholds for those checks.
-        """
-        from repro.core import batched_engine as eng
-
-        cfg = profiler.config
-        if cfg.mode not in ("pure", "combined"):
-            raise ValueError(f"unknown profiler mode {cfg.mode!r}")
-        if not cfg.disagg.nonneg or cfg.disagg.mode != "no_idle":
-            raise ValueError(
-                "StreamingFleetSession supports the default NNLS/no_idle "
-                "disaggregation config only"
-            )
-        self.profiler = profiler
-        self.cfg = cfg
-        self.eng = eng
-        self.num_fns = num_fns
-        self.b = len(traces)
-        self.durations, self._ragged = _node_durations(duration, self.b)
-        self.duration = max(self.durations)
-        if np.ndim(has_chip) == 0:
-            self._chip_mask = np.full(self.b, bool(has_chip))
-        else:
-            self._chip_mask = np.asarray(has_chip, bool).reshape(-1)
-            if self._chip_mask.shape[0] != self.b:
-                raise ValueError(
-                    f"has_chip sequence has {self._chip_mask.shape[0]} "
-                    f"entries for {self.b} node(s)"
-                )
-        # Chipless rows are forced to exactly 0.0 on ingest: combined
-        # targets then degenerate to pure mode per node, with no branch.
-        self._chip_zero = self._chip_mask.astype(np.float32)
-        self.has_chip = bool(self._chip_mask.any())
-        self.combined = cfg.mode == "combined"
-        if self.combined:
-            if not self.has_chip:
-                raise ValueError(
-                    "combined mode needs a chip reference on at least one "
-                    "node (has_chip)"
-                )
-            if fn_counters is None or counter_model is None:
-                raise ValueError(
-                    "combined mode needs fn_counters and counter_model "
-                    "(see prepare_combined_fleet)"
-                )
-        self.has_cp = has_cp
-        self.on_tick = on_tick
-        self.on_bootstrap = on_bootstrap
-        self.mesh = mesh
-        self._slots_cap = None if slots is None else int(slots)
-        if self._slots_cap is not None and self._slots_cap < self.b:
-            raise ValueError(
-                f"slots={slots} is smaller than the fleet (B={self.b})"
-            )
-        self._slot_pool: "SlotFleetSession | None" = None
-        self._slot_rows: np.ndarray | None = None  # node i -> its pool slot
-        if mesh is not None:
-            mesh.validate(self.b if self._slots_cap is None else self._slots_cap)
-
-        plans = [segment_plan(cfg, d) for d in self.durations]
-        self.s_nodes = [p[2] for p in plans]
-        self.n_windows = max(p[0] for p in plans)
-        self.init_n = plans[0][1]
-        self.s = max(self.s_nodes)
-        self.n_used = self.init_n + self.s * cfg.step_windows
-        if any(p[1] != self.init_n for p in plans):
-            raise ValueError(
-                "ragged fleet: every node must cover the common N_init "
-                f"window ({cfg.init_windows} windows); got per-node init "
-                f"blocks {[p[1] for p in plans]} (use the per-node path)"
-            )
-        if self.s == 0:
-            raise ValueError(
-                "segment too short for a Kalman step; use the per-node path"
-            )
-        # Per-node engine span: the last tick node i really feeds.  Its
-        # sub-step tail (and everything after its stream ends) is masked
-        # out of the engine, mirroring the batched path's per-node S_i.
-        self._n_used_nodes = np.asarray(
-            [self.init_n + s_i * cfg.step_windows for s_i in self.s_nodes]
-        )
-        # Per-node real window counts: the sync edge clamp must stop at
-        # each node's OWN last real window (matching the batch path's
-        # apply_shift clamp), never read into another node's span.
-        self._n_nodes = np.asarray([p[0] for p in plans], np.float64)
-        self.m_aug = num_fns + (1 if has_cp else 0)
-        self.idle = jnp.asarray(np.asarray(idle_watts, np.float32))
-        self.init_seconds = self.init_n * cfg.delta
-
-        # Static per-node precomputation (the trace is known; telemetry is
-        # what streams): contribution rows and per-window invocation stats.
-        n_post = self.s * cfg.step_windows
-        c_nodes, a_nodes, ls_nodes, lq_nodes = [], [], [], []
-        counts_nodes, lat_nodes, init_a = [], [], []
-        for fn_id, start, end in traces:
-            c_nodes.append(
-                contrib.contribution_matrix(
-                    fn_id, start, end, num_fns=num_fns,
-                    num_windows=self.n_windows, delta=cfg.delta,
-                )
-            )
-            a_w, ls_w, lq_w = profiler._per_step_stats(
-                fn_id, start, end, num_fns, num_fns, self.init_n, n_post,
-                None, step_windows=1,
-            )
-            a_nodes.append(a_w)
-            ls_nodes.append(ls_w)
-            lq_nodes.append(lq_w)
-            counts, mean_lat, _, _ = _per_fn_latency_stats(fn_id, start, end, num_fns)
-            counts_nodes.append(counts)
-            lat_nodes.append(mean_lat)
-            valid = (fn_id >= 0) & (start >= 0) & (start < self.init_seconds)
-            seg = jnp.where(valid, jnp.clip(fn_id, 0, num_fns - 1), num_fns)
-            a0 = jax.ops.segment_sum(
-                valid.astype(jnp.float32), seg, num_segments=num_fns + 1
-            )[:num_fns]
-            if has_cp:
-                a0 = jnp.concatenate([a0, jnp.ones((1,))])
-            init_a.append(a0)
-        self._c_fns = jnp.stack(c_nodes)         # (B, N, M)
-        self._a_win = np.stack([np.asarray(a) for a in a_nodes])    # (B, n_post, M)
-        self._ls_win = np.stack([np.asarray(a) for a in ls_nodes])
-        self._lq_win = np.stack([np.asarray(a) for a in lq_nodes])
-        self.counts = jnp.stack(counts_nodes)
-        self.mean_latency = jnp.stack(lat_nodes)
-        self.init_invocations = jnp.stack(init_a)  # (B, M_aug)
-
-        self._engine_cfg = eng.EngineConfig(
-            kalman=cfg.kalman, delta=cfg.delta,
-            init_iters=cfg.disagg.nnls_iters,
-            init_ridge_lambda=cfg.disagg.ridge_lambda,
-        )
-
-        # Combined mode (§4.3): the chip-side split is static per segment
-        # (the trace — hence busy seconds and counters — is known up front;
-        # only the power telemetry streams), so X_CPU is computed once here
-        # and exposed for live consumers (the control plane adds it to every
-        # tick's rest estimate before feeding footprint trackers).
-        self.x_cpu: Array | None = None
-        self._x_cpu_resid: Array | None = None
-        self._models: cpumod.LinearPowerModel | None = None
-        self._win_feats = None
-        self._retrain_cfg = retrain_config
-        self.model_errors: list[np.ndarray] = []
-        self.retrain_needed = np.zeros(self.b, bool)
-        self.refits: list[tuple[int, np.ndarray]] = []       # (window, flags)
-        self.skew_history: list[tuple[int, np.ndarray]] = []  # (window, skews)
-        self._fnc: Array | None = None
-        self._busy: Array | None = None
-        if self.combined:
-            self._models = _as_fleet_model(counter_model, self.b)
-            self._fnc = _as_fleet_counters(fn_counters, self.b, num_fns)
-            self._busy = jnp.sum(self._c_fns, axis=1)      # (B, M) seconds
-            self.x_cpu, self._x_cpu_resid = combined_chip_power(
-                self._models, self._fnc, self._busy,
-                jnp.asarray(self.durations, jnp.float32),
-            )
-            self._force_chipless_zero()
-            if window_features is not None:
-                self._win_feats = np.asarray(window_features, np.float32)
-        self._rest_idle_nodes: np.ndarray | None = None    # (B,) set at bootstrap
-
-        # Streaming state.
-        self._raw_w = np.zeros((self.n_windows, self.b), np.float32)
-        self._n_raw = 0                          # pushed system windows
-        self._raw_chip: list[np.ndarray] = []
-        self._cp_col: list[np.ndarray] = []      # per-window principal column
-        self._w_sync: list[np.ndarray] = []      # synchronized windows, in order
-        self.skews: np.ndarray | None = None     # (B,) estimated at init_n
-        self._lookahead = 0
-        self.booted = False
-        self.x0: Array | None = None
-        self.init_busy_seconds: Array | None = None
-        self._state = None
-        self._traj: list[Array] = []
-        self._next_tick = self.init_n
-
-    # -- ingestion ---------------------------------------------------------
-
-    def push_window(
-        self,
-        w_sys: np.ndarray,
-        w_chip: np.ndarray | None = None,
-        cp_frac: np.ndarray | None = None,
-        sys_frac: np.ndarray | None = None,
-    ) -> None:
-        """Feed one delta-window of fleet telemetry (all shapes (B,)).
-
-        Windows must arrive in order.  May trigger zero or more engine
-        ticks (``on_tick``) depending on the sync lookahead; the bootstrap
-        (skew + X_0 + ``on_bootstrap``) fires once the init segment and its
-        lookahead are buffered.
-        """
-        if self._n_raw >= self.n_windows:
-            raise ValueError("segment already fully pushed")
-        if self.has_chip and w_chip is None:
-            raise ValueError("session was created with has_chip=True")
-        if self.has_cp and (cp_frac is None or sys_frac is None):
-            raise ValueError("session was created with has_cp=True")
-        self._raw_w[self._n_raw] = np.asarray(w_sys, np.float32).reshape(self.b)
-        self._n_raw += 1
-        if self.has_chip:
-            # Chipless rows zeroed: whatever the caller filled them with,
-            # downstream (skew, rest-idle, combined targets, retraining)
-            # sees the chip series identically 0.
-            self._raw_chip.append(
-                np.asarray(w_chip, np.float32).reshape(self.b) * self._chip_zero
-            )
-        if self.has_cp:
-            col = contrib.shared_principal_contribution(
-                jnp.asarray(np.asarray(cp_frac, np.float32)),
-                jnp.asarray(np.asarray(sys_frac, np.float32)),
-                delta=self.cfg.delta,
-            )
-            self._cp_col.append(np.asarray(col, np.float32))
-        self._advance()
-
-    def ingest(self, ticks, *, prefetch: int = 2) -> None:
-        """Feed a whole telemetry tick stream, prefetched ahead of the engine.
-
-        ``ticks`` is any iterator of objects with ``w_sys`` / ``w_chip`` /
-        ``cp_frac`` / ``sys_frac`` attributes (``simulator.FleetTelemetryTick``
-        in practice).  With ``prefetch >= 1`` the stream is pulled on a
-        background thread (``data.pipeline.prefetch_iterator``), so the
-        host-side sensing/resampling that produces tick ``t + 1`` overlaps
-        the jitted ``fleet_step`` dispatched for tick ``t`` — the async
-        ingest stage.  ``prefetch = 0`` falls back to strict alternation
-        (sense, then step, then sense ...), which is the baseline the ingest
-        benchmark compares against.
-        """
-        if prefetch > 0:
-            from repro.data.pipeline import prefetch_iterator
-
-            ticks = prefetch_iterator(ticks, size=prefetch)
-        for tk in ticks:
-            self.push_window(tk.w_sys, tk.w_chip, tk.cp_frac, tk.sys_frac)
-
-    # -- internals ---------------------------------------------------------
-
-    def _force_chipless_zero(self) -> None:
-        """Pin chipless nodes' chip-side split at exactly 0.0.
-
-        Their counter models come out zero from ``prepare_combined_fleet``
-        already; this makes the guarantee independent of the caller's
-        model (a shared model broadcast over a mixed fleet, say)."""
-        cm = jnp.asarray(self._chip_zero)
-        self.x_cpu = self.x_cpu * cm[:, None]
-        self._x_cpu_resid = self._x_cpu_resid * cm
-
-    def _synced_window(self, t: int) -> np.ndarray:
-        """(B,) synchronized system power for window ``t`` (``apply_shift``
-        semantics: per-node linear interpolation of ``t + skew``, edges
-        clamped to each node's OWN segment — on a ragged fleet a short
-        node's positively-skewed tail reads must zero-order-hold at its
-        last real window, exactly like the batch path's per-node clamp,
-        never interpolate into the padding after its stream ended; the
-        sync lookahead guarantees the needed raw windows have arrived)."""
-        n = self._n_nodes  # (B,) per-node real window counts
-        pos = np.clip(t + self.skews, 0.0, n - 1.0)
-        lo = np.floor(pos).astype(np.int64)
-        hi = np.minimum(lo + 1, (n - 1).astype(np.int64))
-        frac = (pos - lo).astype(np.float32)
-        avail = self._n_raw - 1
-        nodes = np.arange(self.b)
-        lo_v = self._raw_w[np.minimum(lo, avail), nodes]
-        hi_v = self._raw_w[np.minimum(hi, avail), nodes]
-        return lo_v * (np.float32(1.0) - frac) + hi_v * frac
-
-    def _advance(self) -> None:
-        cfg = self.cfg
-        raw_count = self._n_raw
-        if self.skews is None and raw_count >= self.init_n:
-            if self.has_chip:
-                w_arr = self._raw_w[: self.init_n]               # (init_n, B)
-                r_arr = np.stack(self._raw_chip[: self.init_n])
-                # Chipless nodes have no reference to sync against: skew 0,
-                # the same as the batch path's _prep_node fallback.
-                self.skews = np.asarray(
-                    [
-                        float(
-                            syncmod.estimate_skew(
-                                jnp.asarray(w_arr[:, i]), jnp.asarray(r_arr[:, i]),
-                                max_shift=cfg.sync_max_shift,
-                            )
-                        )
-                        if self._chip_mask[i]
-                        else 0.0
-                        for i in range(self.b)
-                    ]
-                )
-            else:
-                self.skews = np.zeros(self.b)
-            self._lookahead = int(np.ceil(max(float(np.max(self.skews)), 0.0)))
-        if self.skews is None:
-            return
-        if not self.booted:
-            if raw_count < min(self.init_n + self._lookahead, self.n_windows):
-                return
-            self._bootstrap()
-        lim = min(self.n_used, self.n_windows)
-        while self._next_tick < lim and self._n_raw >= min(
-            self._next_tick + self._lookahead + 1, self.n_windows
-        ):
-            self._process_tick(self._next_tick)
-            self._next_tick += 1
-
-    def _bootstrap(self) -> None:
-        """Init-segment solve: synchronized windows 0..init_n-1 -> X_0."""
-        eng = self.eng
-        for t in range(self.init_n):
-            self._w_sync.append(self._synced_window(t))
-        w_init = jnp.asarray(np.stack(self._w_sync, axis=1))       # (B, init_n)
-        if self.combined:
-            # Rest-side idle from the chip floor over the init block — the
-            # same estimator (and block) as the batch paths' _rest_idle, so
-            # the streaming targets are causal AND identical to theirs.
-            chip_init = jnp.asarray(
-                np.stack(self._raw_chip[: self.init_n], axis=1)
-            )                                                      # (B, init_n)
-            self._rest_idle_nodes = np.asarray(
-                eng.fleet_rest_idle(chip_init, self.idle)
-            )
-            target = eng.combined_rest_target(
-                w_init, chip_init, jnp.asarray(self._rest_idle_nodes)[:, None]
-            )
-        else:
-            target = jnp.maximum(w_init - self.idle[:, None], 0.0)
-        init_c = self._c_aug_block(0, self.init_n)                 # (B, init_n, M_aug)
-        self.x0 = eng.fleet_initial_estimate(init_c, target, self._engine_cfg)
-        self.init_busy_seconds = init_c.sum(axis=1)
-        if self._slots_cap is not None:
-            # Serving mode: the engine state is a slot pool of the requested
-            # capacity.  Nodes claim slots in order (warm handoff of the
-            # batched X_0 rows — no per-node re-solve); spare slots stay
-            # free for tenants beyond this session's fleet.
-            pool = SlotFleetSession(
-                self._slots_cap, self.m_aug,
-                step_windows=self.cfg.step_windows,
-                config=self._engine_cfg, mesh=self.mesh,
-            )
-            pool.warmup()
-            x0_np = np.asarray(self.x0)
-            self._slot_rows = np.asarray(
-                [pool.admit(i, x0=x0_np[i]) for i in range(self.b)]
-            )
-            self._slot_pool = pool
-        else:
-            self._state = eng.fleet_stream_init(
-                self.x0, self.cfg.step_windows, self._engine_cfg, mesh=self.mesh
-            )
-        self.booted = True
-        if self.on_bootstrap is not None:
-            self.on_bootstrap(self)
-
-    def _c_aug_block(self, lo: int, hi: int) -> Array:
-        """(B, hi-lo, M_aug) contribution rows with the principal appended."""
-        block = self._c_fns[:, lo:hi]
-        if not self.has_cp:
-            return block
-        col = jnp.asarray(np.stack(self._cp_col[lo:hi], axis=1))   # (B, hi-lo)
-        return jnp.concatenate([block, col[:, :, None]], axis=2)
-
-    def _process_tick(self, t: int) -> None:
-        cfg = self.cfg
-        w_sync = self._synced_window(t)
-        self._w_sync.append(w_sync)
-        if self.combined:
-            target = self.eng.combined_rest_target(
-                jnp.asarray(w_sync),
-                jnp.asarray(self._raw_chip[t]),
-                jnp.asarray(self._rest_idle_nodes, jnp.float32),
-            )
-        else:
-            target = jnp.maximum(jnp.asarray(w_sync) - self.idle, 0.0)
-        c_t = self._c_fns[:, t]
-        j = t - self.init_n
-        a_t = self._a_win[:, j]
-        ls_t = self._ls_win[:, j]
-        lq_t = self._lq_win[:, j]
-        if self.has_cp:
-            c_t = jnp.concatenate([c_t, jnp.asarray(self._cp_col[t])[:, None]], axis=1)
-            # The principal's one pseudo-invocation per step, on its first tick.
-            p = np.full((self.b, 1), 1.0 if j % cfg.step_windows == 0 else 0.0, np.float32)
-            a_t = np.concatenate([a_t, p], axis=1)
-            z = np.zeros((self.b, 1), np.float32)
-            ls_t = np.concatenate([ls_t, z], axis=1)
-            lq_t = np.concatenate([lq_t, z], axis=1)
-        live = None
-        if self._ragged:
-            # Nodes whose stream (or sub-step tail) ended before t are
-            # masked out of the engine: zero rows into the ring buffer,
-            # frozen Kalman state, exactly-zero attribution.
-            live = t < self._n_used_nodes
-        if self._slot_pool is not None:
-            att = self._pool_tick(t, c_t, target, a_t, ls_t, lq_t, live)
-        else:
-            step = self.eng.FleetStep(
-                c=c_t, w=target,
-                a=jnp.asarray(a_t), lat_sum=jnp.asarray(ls_t), lat_sumsq=jnp.asarray(lq_t),
-                valid=None if live is None else jnp.asarray(live, jnp.float32),
-            )
-            self._state, att = self.eng.fleet_step(
-                self._state, step, config=self._engine_cfg, mesh=self.mesh
-            )
-        completed = bool(att.step_completed)
-        if completed:
-            self._traj.append(att.x)
-            if self._win_feats is not None:
-                self._check_retrain(t)
-        if self.on_tick is not None:
-            self.on_tick(
-                StreamTick(
-                    t=t,
-                    x=np.asarray(att.x),
-                    tick_power=np.asarray(att.tick_power),
-                    unattributed=np.asarray(att.unattributed),
-                    busy_seconds=np.asarray(c_t),
-                    a=np.asarray(a_t),
-                    target=np.asarray(target),
-                    w_sys=w_sync,
-                    step_completed=completed,
-                    valid=live,
-                )
-            )
-
-    def _pool_tick(self, t, c_t, target, a_t, ls_t, lq_t, live):
-        """Drive one engine tick through the slot pool (``slots=`` mode).
-
-        Nodes whose engine span ends at ``t`` are *released* first
-        (continuous retirement: their slot returns to the pool, their
-        Kalman row freezes); the remaining live nodes feed their rows, and
-        the slot-major attribution is gathered back to node order for the
-        session's hooks and trajectory."""
-        pool = self._slot_pool
-        if self._ragged:
-            for i in np.nonzero(self._n_used_nodes == t)[0]:
-                node = int(i)
-                if node in pool._node_slot:
-                    pool.release(node)
-        c_np = np.asarray(c_t, np.float32)
-        w_np = np.asarray(target, np.float32)
-        a_np = np.asarray(a_t, np.float32)
-        ls_np = np.asarray(ls_t, np.float32)
-        lq_np = np.asarray(lq_t, np.float32)
-        live_nodes = range(self.b) if live is None else np.nonzero(live)[0]
-        feeds = {
-            int(i): (c_np[i], w_np[i], a_np[i], ls_np[i], lq_np[i])
-            for i in live_nodes
-        }
-        att = pool.step(feeds)
-        rows = jnp.asarray(self._slot_rows)
-        return self.eng.TickAttribution(
-            tick_power=att.tick_power[rows],
-            unattributed=att.unattributed[rows],
-            x=att.x[rows],
-            step_completed=att.step_completed,
-        )
-
-    def _check_retrain(self, t: int) -> None:
-        """Paper §4.3 continuous retraining, live: at the Kalman-step
-        boundary closing at tick ``t``, score each node's counter model on
-        the step's (window features, observed chip power) pairs — the
-        per-tick counter feed — through ``cpu_model.model_error`` /
-        ``retrain_flags`` (the one place the retraining criterion is
-        defined).  Dead (ragged) nodes score only their real windows; a
-        node with none stays un-flagged."""
-        lo, hi = t - self.cfg.step_windows + 1, t + 1
-        feats = jnp.asarray(self._win_feats[:, lo:hi])             # (B, n_w, F)
-        chip = jnp.asarray(np.stack(self._raw_chip[lo:hi], axis=1))  # (B, n_w)
-        live = jnp.asarray(
-            np.arange(lo, hi)[None, :] < self._n_nodes[:, None]
-        )
-        err = cpumod.model_error(self._models, feats, chip, mask=live)
-        self.model_errors.append(np.asarray(err))
-        # Chipless nodes have no counter model to retrain: never flagged.
-        self.retrain_needed = (
-            np.asarray(
-                cpumod.retrain_flags(
-                    self._models, feats, chip, self._retrain_cfg, mask=live
-                )
-            )
-            & self._chip_mask
-        )
-
-    # -- live model maintenance --------------------------------------------
-
-    def refit_counter_models(
-        self, flags, *, window_steps: int = 2, lam: float = 1e-4
-    ) -> np.ndarray:
-        """Re-fit flagged nodes' counter models on a sliding window, live.
-
-        The paper's continuous-retraining loop (§4.3), closed: when
-        ``retrain_needed`` fires at a Kalman-step boundary, the caller (the
-        ``ControlLoop``, or any ``on_tick`` hook) invokes this with the
-        flags.  All flagged nodes are re-fit in **one** fleet-batched
-        ``cpu_model.fit_ridge`` over the trailing ``window_steps`` Kalman
-        steps of (window features, observed chip power) pairs — dead ragged
-        windows mask-weighted out — and swapped in row-wise
-        (``cpu_model.merge_models``).  Model parameters are data to every
-        jitted consumer, so the swap causes **no retrace**; the live chip
-        split (``x_cpu``/``_x_cpu_resid``) is recomputed under the updated
-        models so subsequent ticks and the finalized reports see the new
-        attribution.  Returns the (B,) bool mask of nodes actually re-fit
-        (flags on nodes with zero live windows in range are dropped).
-        """
-        if not self.combined or self._win_feats is None:
-            raise ValueError(
-                "refit_counter_models needs combined mode with "
-                "window_features (see prepare_combined_fleet)"
-            )
-        flags = np.asarray(flags, bool).reshape(self.b) & self._chip_mask
-        hi = min(self._next_tick, self._n_raw, self._win_feats.shape[1])
-        lo = max(hi - window_steps * self.cfg.step_windows, 0)
-        live = np.arange(lo, hi)[None, :] < self._n_nodes[:, None]
-        flags = flags & live.any(axis=1)
-        if not flags.any() or hi <= lo:
-            return np.zeros(self.b, bool)
-        feats = jnp.asarray(self._win_feats[:, lo:hi])
-        chip = jnp.asarray(np.stack(self._raw_chip[lo:hi], axis=1))
-        new = cpumod.fit_ridge(
-            feats, chip, lam, mask=jnp.asarray(live, jnp.float32)
-        )
-        self._models = cpumod.merge_models(self._models, new, jnp.asarray(flags))
-        self.x_cpu, self._x_cpu_resid = combined_chip_power(
-            self._models, self._fnc, self._busy,
-            jnp.asarray(self.durations, jnp.float32),
-        )
-        self._force_chipless_zero()
-        self.retrain_needed = self.retrain_needed & ~flags
-        self.refits.append((hi, flags))
-        return flags
-
-    def resync(self, window: int | None = None) -> np.ndarray:
-        """Re-estimate per-node sensor skew over the trailing raw windows.
-
-        The bootstrap estimates skew once on the init segment; clocks drift,
-        so the control loop periodically re-estimates over the last
-        ``window`` raw windows (default: the init-block length) on the live
-        path.  Causality clamp: updated skews are clipped to the bootstrap
-        lookahead, so every already-buffered tick still has the raw windows
-        its interpolation needs — a drift estimate *larger* than the
-        initial lookahead takes effect only up to the buffered horizon
-        (documented bound, not acausal peeking).  Appends to
-        ``skew_history`` and returns the updated (B,) skews.
-        """
-        if self.skews is None:
-            raise ValueError("resync needs the bootstrap skew estimate first")
-        if not self.has_chip:
-            return self.skews
-        hi = self._n_raw
-        lo = max(hi - (window if window is not None else self.init_n), 0)
-        if hi - lo < 4:  # too few windows for a meaningful lag estimate
-            return self.skews
-        w_arr = self._raw_w[lo:hi]
-        r_arr = np.stack(self._raw_chip[lo:hi])
-        new = np.asarray(
-            [
-                float(
-                    syncmod.estimate_skew(
-                        jnp.asarray(w_arr[:, i]), jnp.asarray(r_arr[:, i]),
-                        max_shift=self.cfg.sync_max_shift,
-                    )
-                )
-                if self._chip_mask[i]
-                else 0.0
-                for i in range(self.b)
-            ]
-        )
-        self.skews = np.minimum(new, float(self._lookahead))
-        self.skew_history.append((hi, self.skews.copy()))
-        return self.skews
-
-    # -- completion --------------------------------------------------------
-
-    def finalize(self) -> list[FootprintReport]:
-        """Close the segment and build per-node reports.
-
-        Requires the full ``n_windows`` segment to have been pushed (the
-        sync lookahead then unlocks every remaining tick).  Runs the shared
-        ``_finalize_report`` per node — the same steps 5-6 as the per-node
-        and batched-segment paths.  On a ragged fleet each node finalizes
-        against its own step count S_i and duration; a node with zero
-        post-init steps reports its X_0 trajectory, exactly as the
-        per-node path would.
-        """
-        if self._n_raw < self.n_windows:
-            raise ValueError(
-                f"finalize needs the full segment: got {self._n_raw} of "
-                f"{self.n_windows} windows"
-            )
-        self._advance()
-        assert self._next_tick == self.n_used and len(self._traj) == self.s
-        cfg = self.cfg
-        traj = jnp.moveaxis(jnp.stack(self._traj), 0, 1)           # (B, S, M_aug)
-        if self._slot_pool is not None:
-            # Slot mode: gather each node's final Kalman row from its pool
-            # slot (retired nodes' rows are frozen, never reused within a
-            # profiling session — admissions all happen at bootstrap).
-            x_final = jnp.asarray(
-                np.asarray(jax.device_get(self._slot_pool.state.kalman.x))[
-                    self._slot_rows
-                ]
-            )
-        else:
-            x_final = self._state.kalman.x
-        w_sys = jnp.asarray(np.stack(self._w_sync, axis=1))        # (B, n_used)
-        c_aug = self._c_aug_block(0, self.n_windows)
-        cp_col = (
-            jnp.asarray(np.stack(self._cp_col, axis=1)) if self.has_cp else None
-        )
-        idle = np.asarray(self.idle)
-        chip = (
-            np.stack(self._raw_chip, axis=1) if self._raw_chip else None
-        )                                                          # (B, n_raw)
-        reports = []
-        for i in range(self.b):
-            s_i = self.s_nodes[i]
-            n_used_i = self.init_n + s_i * cfg.step_windows
-            if self.combined:
-                x_fns_i = x_final[i, : self.num_fns] + self.x_cpu[i]
-                n_i = int(self._n_nodes[i])
-                offset_i = (
-                    jnp.asarray(chip[i, :n_i]) + float(self._rest_idle_nodes[i])
-                )
-                idle_extra_i = float(self._x_cpu_resid[i])
-            else:
-                x_fns_i = x_final[i, : self.num_fns]
-                offset_i = float(idle[i])
-                idle_extra_i = 0.0
-            reports.append(
-                _finalize_report(
-                    x_fns=x_fns_i,
-                    x_cp=x_final[i, self.num_fns] if self.has_cp else jnp.asarray(0.0),
-                    x0=self.x0[i],
-                    traj=traj[i, :s_i] if s_i > 0 else self.x0[i][None],
-                    c_aug=c_aug[i],
-                    c_steps=(
-                        c_aug[i, self.init_n : n_used_i].reshape(
-                            s_i, cfg.step_windows, self.m_aug
-                        )
-                        if s_i > 0
-                        else None
-                    ),
-                    w_sys=w_sys[i],
-                    offset=offset_i,
-                    init_n=self.init_n, s=s_i, step_windows=cfg.step_windows,
-                    counts=self.counts[i], mean_lat=self.mean_latency[i],
-                    cp_col=cp_col[i] if self.has_cp else None,
-                    idle_watts=float(idle[i]),
-                    duration=self.durations[i],
-                    skew=float(self.skews[i]),
-                    idle_extra_watts=idle_extra_i,
-                )
-            )
-        return reports
-
-
-class SlotFleetSession:
-    """Slot-based live fleet serving session (docs/serving.md).
-
-    The engine-level core of continuous admission/retirement: a fixed pool
-    of ``capacity`` engine slots — one ``(capacity, M)``-shaped
-    ``FleetStreamState`` — where live nodes *claim* and *release* slots
-    while the stream keeps ticking.  Everything that changes at serving
-    time is data, never shape:
-
-    - occupancy rides ``FleetStep.valid`` (a free slot is a permanently
-      invalid node: zero rows, frozen Kalman state, exactly-zero
-      attribution);
-    - a claim runs ``fleet_stream_reset_slots`` (one-hot flags + an X_0
-      row — the rejoin fix: the new tenant's slot is scrubbed of any rows
-      the previous tenant wrote earlier in the current partial step);
-    - the admission-time init solve is length-bucketed
-      (``bucketed_initial_estimate``), so a node joining with an arbitrary
-      init-block length lands in one of the pre-warmed per-bucket compiles.
-
-    After ``warmup()`` (one dummy step + reset + every bucket solver) a
-    churn trace of joins and leaves therefore runs with **zero retraces**
-    — pinned in tests/test_slot_serving.py and gated fleet-wide by the
-    smoke benchmark (``benchmarks/slot_serving.py``).
-
-    Mesh elasticity: the pool state may live sharded over a
-    ``distributed.sharding.FleetMesh`` (``capacity`` must tile it), and
-    ``reshard`` moves the *live* state onto a different mesh mid-stream
-    (checkpoint to host → ``sharding.put`` → resume) at the cost of one
-    deliberate compile per new mesh, pinned at 1e-5 against an
-    uninterrupted run.
-
-    The telemetry-level counterpart is ``StreamingFleetSession(slots=...)``
-    / ``EnergyFirstControlPlane.profile_fleet(slots=...)``, which route a
-    whole profiling segment through a pool like this one.
-    """
-
-    def __init__(
-        self,
-        capacity: int,
-        num_fns: int,
-        *,
-        step_windows: int,
-        config=None,
-        mesh=None,
-        buckets=None,
-    ):
-        """Args:
-          capacity: number of engine slots B (the fleet's compile shape).
-          num_fns: per-slot function-axis width M (M_aug with a principal).
-          step_windows: ticks per Kalman step (ring-buffer shape).
-          config: ``batched_engine.EngineConfig`` (default config if None).
-          mesh: optional ``FleetMesh``; capacity must tile it evenly.
-          buckets: init-solve length-bucket table
-            (``batched_engine.DEFAULT_BUCKETS`` if None).
-        """
-        from repro.core import batched_engine as eng
-
-        self.eng = eng
-        self.capacity = int(capacity)
-        self.num_fns = int(num_fns)
-        self.step_windows = int(step_windows)
-        self.config = eng.EngineConfig() if config is None else config
-        self.buckets = tuple(eng.DEFAULT_BUCKETS if buckets is None else buckets)
-        self.mesh = mesh
-        if mesh is not None:
-            mesh.validate(self.capacity)
-        self._state = eng.fleet_stream_init(
-            jnp.zeros((self.capacity, self.num_fns), jnp.float32),
-            self.step_windows,
-            self.config,
-            mesh=mesh,
-        )
-        self._slot_node: list = [-1] * self.capacity   # slot -> node (-1 free)
-        self._node_slot: dict = {}                     # node -> slot
-        self.ticks = 0
-        self.admits = 0
-        self.releases = 0
-
-    # -- pool state --------------------------------------------------------
-
-    @property
-    def state(self):
-        """Live engine state (capacity-shaped ``FleetStreamState``)."""
-        return self._state
-
-    @property
-    def free_slots(self) -> int:
-        """Number of unclaimed slots."""
-        return self._slot_node.count(-1)
-
-    @property
-    def live_nodes(self) -> tuple:
-        """Nodes currently holding slots, in slot order."""
-        return tuple(n for n in self._slot_node if n != -1)
-
-    def slot_of(self, node) -> int:
-        """Slot index currently held by ``node`` (raises if none)."""
-        try:
-            return self._node_slot[node]
-        except KeyError:
-            raise ValueError(f"node {node!r} holds no slot") from None
-
-    def estimates(self) -> dict:
-        """``node -> (M,)`` current Kalman power estimate for live nodes."""
-        x = np.asarray(jax.device_get(self._state.kalman.x))
-        return {node: x[slot] for node, slot in self._node_slot.items()}
-
-    def compile_counts(self) -> dict:
-        """Jit cache sizes of the serving hot paths (retrace diagnostics).
-
-        Snapshot before and after a serving run; after ``warmup()`` the
-        deltas must be zero under any churn pattern (``-1`` when the
-        private jit cache counter is unavailable — the retracing *behavior*
-        is what the tests pin)."""
-
-        def sz(fn):
-            try:
-                return int(fn._cache_size())
-            except Exception:
-                return -1
-
-        return {
-            "fleet_step": sz(self.eng.fleet_step),
-            "slot_reset": sz(self.eng.fleet_stream_reset_slots),
-            "bucket_init": sz(self.eng._bucket_init_solve),
-        }
-
-    # -- lifecycle ---------------------------------------------------------
-
-    def warmup(self) -> dict:
-        """Pre-compile every serving code path at the pool's shapes.
-
-        One dummy ``fleet_step`` (on a scratch state — the live state is
-        never advanced), one dummy slot reset, and every bucket's init
-        solver (``warm_bucket_solvers``).  After this, admits, releases,
-        dropped windows, and rag patterns are all pure data — zero
-        retraces for the pool's lifetime (until ``reshard``, which
-        deliberately compiles once per new mesh).  Returns the post-warmup
-        ``compile_counts`` snapshot."""
-        eng = self.eng
-        cap, m = self.capacity, self.num_fns
-        zf = lambda shape: jnp.zeros(shape, jnp.float32)  # noqa: E731
-        eng.warm_bucket_solvers(m, self.config, buckets=self.buckets)
-        scratch = eng.fleet_stream_init(
-            zf((cap, m)), self.step_windows, self.config, mesh=self.mesh
-        )
-        step = eng.FleetStep(
-            c=zf((cap, m)), w=zf((cap,)), a=zf((cap, m)),
-            lat_sum=zf((cap, m)), lat_sumsq=zf((cap, m)), valid=zf((cap,)),
-        )
-        scratch, att = eng.fleet_step(
-            scratch, step, config=self.config, mesh=self.mesh
-        )
-        scratch = eng.fleet_stream_reset_slots(
-            scratch, zf((cap,)), zf((cap, m)), mesh=self.mesh
-        )
-        jax.block_until_ready((scratch, att))
-        return self.compile_counts()
-
-    def admit(self, node, init_c=None, init_w=None, *, x0=None) -> int:
-        """Claim the lowest free slot for ``node``; returns the slot index.
-
-        Either pass the node's init block (``init_c`` (n, M) contribution
-        rows + ``init_w`` (n,) idle-adjusted power — solved to an X_0 row
-        through the pre-warmed bucketed solver) or an explicit ``x0`` (M,)
-        row (warm handoff from a previous session / another node).  The
-        slot's Kalman row is re-initialized and its ring-buffer rows and
-        partial-step accumulators are zeroed (``fleet_stream_reset_slots``)
-        so nothing a previous tenant wrote in the current partial step can
-        leak into the new tenant's first boundary update.  Raises
-        ``ValueError`` when the node already holds a slot or the pool is
-        full (queue admissions with ``serving.scheduler.SlotAdmissionQueue``).
-        """
-        if node in self._node_slot:
-            raise ValueError(
-                f"node {node!r} already holds slot {self._node_slot[node]}"
-            )
-        try:
-            slot = self._slot_node.index(-1)
-        except ValueError:
-            raise ValueError(
-                f"slot pool full (capacity {self.capacity}); release a node first"
-            ) from None
-        if x0 is None:
-            if init_c is None or init_w is None:
-                raise ValueError("admit needs either x0= or an (init_c, init_w) block")
-            x0 = self.eng.bucketed_initial_estimate(
-                init_c, init_w, self.config, buckets=self.buckets
-            )
-        x0_full = np.zeros((self.capacity, self.num_fns), np.float32)
-        x0_full[slot] = np.asarray(x0, np.float32)
-        flags = np.zeros((self.capacity,), np.float32)
-        flags[slot] = 1.0
-        self._state = self.eng.fleet_stream_reset_slots(
-            self._state, jnp.asarray(flags), jnp.asarray(x0_full), mesh=self.mesh
-        )
-        self._slot_node[slot] = node
-        self._node_slot[node] = slot
-        self.admits += 1
-        return slot
-
-    def release(self, node) -> int:
-        """Release ``node``'s slot back to the pool; returns the slot index.
-
-        Purely host-side bookkeeping: from the next tick the slot is
-        simply absent from ``feeds`` (``valid = 0``), so its Kalman row
-        freezes and its attribution is exactly zero until a new tenant
-        claims — and thereby resets — the slot."""
-        slot = self._node_slot.pop(node, None)
-        if slot is None:
-            raise ValueError(f"node {node!r} holds no slot")
-        self._slot_node[slot] = -1
-        self.releases += 1
-        return slot
-
-    def step(self, feeds: dict):
-        """Advance the pool one telemetry tick; returns ``TickAttribution``.
-
-        ``feeds`` maps ``node -> (c, w, a, lat_sum, lat_sumsq)`` per-tick
-        rows ((M,), scalar, (M,), (M,), (M,)) for the nodes that produced
-        this window.  A live node absent from ``feeds`` dropped the window
-        (``valid = 0`` for this tick only); free slots are always invalid.
-        The returned attribution arrays are slot-major (capacity rows) —
-        map them back with ``slot_of``.  Raises ``ValueError`` on a feed
-        for a node holding no slot."""
-        cap, m = self.capacity, self.num_fns
-        c = np.zeros((cap, m), np.float32)
-        w = np.zeros((cap,), np.float32)
-        a = np.zeros((cap, m), np.float32)
-        ls = np.zeros((cap, m), np.float32)
-        lq = np.zeros((cap, m), np.float32)
-        valid = np.zeros((cap,), np.float32)
-        for node, (c_i, w_i, a_i, ls_i, lq_i) in feeds.items():
-            slot = self._node_slot.get(node)
-            if slot is None:
-                raise ValueError(f"feed for node {node!r} which holds no slot")
-            c[slot] = np.asarray(c_i, np.float32)
-            w[slot] = np.float32(w_i)
-            a[slot] = np.asarray(a_i, np.float32)
-            ls[slot] = np.asarray(ls_i, np.float32)
-            lq[slot] = np.asarray(lq_i, np.float32)
-            valid[slot] = 1.0
-        step = self.eng.FleetStep(
-            c=jnp.asarray(c), w=jnp.asarray(w), a=jnp.asarray(a),
-            lat_sum=jnp.asarray(ls), lat_sumsq=jnp.asarray(lq),
-            valid=jnp.asarray(valid),
-        )
-        self._state, att = self.eng.fleet_step(
-            self._state, step, config=self.config, mesh=self.mesh
-        )
-        self.ticks += 1
-        return att
-
-    def reshard(self, mesh) -> None:
-        """Move the live pool onto a different device mesh mid-stream.
-
-        Checkpoint-to-host + ``sharding.put`` re-placement
-        (``distributed.sharding.reshard``); values are bit-identical across
-        the move, and subsequent steps compile once against the new mesh
-        (the one deliberate compile of mesh elasticity).  ``mesh=None``
-        scales down to the default device."""
-        from repro.distributed.sharding import reshard as _reshard
-
-        if mesh is not None:
-            mesh.validate(self.capacity)
-        self._state = _reshard(self._state, mesh)
-        self.mesh = mesh
-
-
 def fleet_profile_batched(
     profiler: FaasMeterProfiler,
     traces: list[tuple[Array, Array, Array]],
@@ -1723,9 +408,9 @@ def fleet_profile_batched(
     shape-stable, cached across nodes) and the cheap window-sized sync; the
     initial solve, the full Kalman trajectory, and the footprint spectra
     for all B nodes run as fleet-wide batched calls
-    (``core.batched_engine``).  In combined mode (§4.3) the engine
+    (``core.engine``).  In combined mode (§4.3) the engine
     disaggregates each node's chip-subtracted 'rest' target
-    (``batched_engine.combined_rest_target``) and finalization adds the
+    (``engine.combined_rest_target``) and finalization adds the
     counter model's per-function X_CPU — pass ``fn_counters`` ((B, M, F)
     or a per-node list) and ``counter_model`` (fleet-batched, a list, or
     one shared model; see ``prepare_combined_fleet``), with chip power on
@@ -1748,7 +433,7 @@ def fleet_profile_batched(
     nodes with *zero* post-init steps, whose trajectory is just X_0,
     exactly as on the per-node path.
     """
-    from repro.core import batched_engine as eng
+    from repro.core import engine as eng
 
     cfg = profiler.config
     if cfg.mode not in ("pure", "combined"):

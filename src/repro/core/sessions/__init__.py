@@ -1,0 +1,49 @@
+"""Live session layer: long-lived state machines over the streaming engine.
+
+Sits between ``core.engine`` (pure jitted stages) and ``core.profiler``
+(§4/§4.3 orchestration): everything here owns mutable host-side state —
+telemetry buffers, slot bookkeeping, background ingest/drain threads —
+and drives the engine one jitted call at a time.  Import direction is
+strictly downward (``kernels → core/engine → core/sessions → serving``,
+enforced by scripts/check_layering.py); the ``FaasMeterProfiler`` instance
+a session needs is received duck-typed, never imported.
+
+- ``base``      — ``FleetSession``: shared config/mesh plumbing + retrace
+                  diagnostics.
+- ``report``    — ``FootprintReport`` and the shared finalizer (steps 5-6)
+                  every profiling path ends in.
+- ``combined``  — §4.3 chip-side helpers (``combined_chip_power`` etc.).
+- ``drain``     — ``StreamTick`` + the background emit worker of a drained
+                  ingest.
+- ``retrain``   — continuous retraining / resync mixin (§4.3 live loop).
+- ``slots``     — ``SlotFleetSession``: slot-pool serving with continuous
+                  admission/retirement (docs/serving.md).
+- ``streaming`` — ``StreamingFleetSession``: window-by-window profiling
+                  with prefetched ingest and an optional drain thread
+                  (docs/streaming.md).
+"""
+
+from repro.core.sessions.base import FleetSession
+from repro.core.sessions.combined import (
+    _as_fleet_counters,
+    _as_fleet_model,
+    combined_chip_power,
+)
+from repro.core.sessions.drain import StreamTick, _DrainWorker
+from repro.core.sessions.report import (
+    FootprintReport,
+    _finalize_report,
+    _node_durations,
+    _per_fn_latency_stats,
+)
+from repro.core.sessions.slots import SlotFleetSession
+from repro.core.sessions.streaming import StreamingFleetSession
+
+__all__ = [
+    "FleetSession",
+    "FootprintReport",
+    "SlotFleetSession",
+    "StreamTick",
+    "StreamingFleetSession",
+    "combined_chip_power",
+]

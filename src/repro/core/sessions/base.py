@@ -1,0 +1,56 @@
+"""FleetSession: the common base of the live session layer.
+
+Both concrete sessions — the telemetry-level ``StreamingFleetSession``
+(whole profiling segments, window-by-window) and the engine-level
+``SlotFleetSession`` (a slot pool with continuous admission/retirement) —
+drive the same streaming engine (``core.engine.streaming``) and share the
+same operational contract: an engine config, an optional ``FleetMesh``,
+and the zero-retrace invariant whose diagnostics live here.
+"""
+
+from __future__ import annotations
+
+from repro.core import engine as eng
+
+
+class FleetSession:
+    """Base class for live fleet sessions over the streaming engine.
+
+    Holds the pieces every session needs — the engine package handle, the
+    resolved ``EngineConfig``, and the (optional) ``FleetMesh`` — plus the
+    shared retrace-diagnostics surface (``compile_counts``).  Subclasses
+    own their engine state and expose it via ``state``; everything else
+    about their lifecycle (bootstrap vs warmup, finalize vs estimates) is
+    deliberately theirs, since the two sessions sit at different layers
+    (telemetry vs engine feeds).
+    """
+
+    def __init__(self, *, config: "eng.EngineConfig", mesh=None):
+        self.eng = eng
+        self.config = config
+        self.mesh = mesh
+
+    @property
+    def state(self):
+        """Live engine state (``FleetStreamState``); subclass-owned."""
+        raise NotImplementedError
+
+    def compile_counts(self) -> dict:
+        """Jit cache sizes of the streaming hot paths (retrace diagnostics).
+
+        Snapshot before and after a serving run; after warmup the deltas
+        must be zero under any churn pattern (``-1`` when the private jit
+        cache counter is unavailable — the retracing *behavior* is what the
+        tests pin)."""
+
+        def sz(fn):
+            try:
+                return int(fn._cache_size())
+            except Exception:
+                return -1
+
+        return {
+            "fleet_step": sz(self.eng.fleet_step),
+            "slot_reset": sz(self.eng.fleet_stream_reset_slots),
+            "bucket_init": sz(self.eng._bucket_init_solve),
+        }

@@ -1,0 +1,183 @@
+"""Combined-mode (§4.3) chip-side helpers shared by every fleet path.
+
+``X = X_CPU + X_Rest``: the engines disaggregate the chip-subtracted
+'rest' power (``core.engine.targets``); the chip side comes from the
+per-node counter models through the helpers here.  They live in the
+session layer so both the live sessions and the ``core.profiler``
+orchestration above consume the *same* split — the chip accounting cannot
+drift between paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import contribution as contrib
+from repro.core import cpu_model as cpumod
+from repro.core.engine.plan import segment_plan
+from repro.core.sessions.report import _node_durations
+
+Array = jax.Array
+
+
+def combined_chip_power(
+    counter_model: cpumod.LinearPowerModel,
+    fn_counters: Array,   # (..., M, F) normalized per-function counters
+    busy_seconds: Array,  # (..., M) per-function runtime over the segment
+    duration,             # scalar or (...,) segment seconds
+) -> tuple[Array, Array]:
+    """Per-function X_CPU + un-attributed static bias for a segment (§4.3).
+
+    The single place the combined mode turns counters into chip-side power
+    — the per-node ``profile``, ``fleet_profile_batched``, and
+    ``StreamingFleetSession`` all call it (per node or fleet-batched), so
+    the chip split cannot drift between paths.  The second element is the
+    static bias left un-attributed on idle intervals; callers route it into
+    the report's idle/offset term (``_finalize_report(idle_extra_watts=)``).
+    """
+    dur = jnp.asarray(duration, jnp.float32)
+    if dur.ndim:
+        dur = dur[..., None]
+    return cpumod.predict_function_power_split(
+        counter_model, fn_counters, busy_seconds / dur
+    )
+
+
+def _as_fleet_model(counter_model, b: int) -> cpumod.LinearPowerModel:
+    """Normalize ``counter_model`` to a fleet-batched ``LinearPowerModel``.
+
+    Accepts a sequence of per-node models (stacked), an already-batched
+    model with ``(B, F)``/``(B,)`` leaves (validated), or a single shared
+    model (broadcast to every node).
+    """
+    if not isinstance(counter_model, cpumod.LinearPowerModel) and isinstance(
+        counter_model, (list, tuple)
+    ):
+        if len(counter_model) != b:
+            raise ValueError(
+                f"got {len(counter_model)} counter model(s) for {b} node(s)"
+            )
+        return cpumod.stack_models(counter_model)
+    w = jnp.asarray(counter_model.weights)
+    bias = jnp.asarray(counter_model.bias)
+    if w.ndim == 1:
+        return cpumod.LinearPowerModel(
+            weights=jnp.broadcast_to(w, (b,) + w.shape),
+            bias=jnp.broadcast_to(jnp.reshape(bias, ()), (b,)),
+        )
+    if w.shape[0] != b:
+        raise ValueError(
+            f"batched counter model covers {w.shape[0]} node(s), fleet has {b}"
+        )
+    return cpumod.LinearPowerModel(weights=w, bias=bias)
+
+
+def _as_fleet_counters(fn_counters, b: int, num_fns: int) -> Array:
+    """Normalize per-function counters to one (B, M, F) array."""
+    arr = (
+        jnp.stack([jnp.asarray(f) for f in fn_counters])
+        if isinstance(fn_counters, (list, tuple))
+        else jnp.asarray(fn_counters)
+    )
+    if arr.ndim == 2:
+        arr = jnp.broadcast_to(arr, (b,) + arr.shape)
+    if arr.shape[0] != b or arr.shape[1] != num_fns:
+        raise ValueError(
+            f"fn_counters shape {arr.shape} does not match fleet "
+            f"(B={b}, M={num_fns})"
+        )
+    return arr
+
+
+def prepare_combined_fleet(
+    config: ProfilerConfig,
+    traces: "list[tuple[Array, Array, Array]]",
+    telemetries: "list[Telemetry]",
+    *,
+    num_fns: int,
+    duration,
+    gflops,
+    hbm_gb,
+    mean_latency,
+):
+    """Build everything combined-mode (§4.3) fleet profiling needs.
+
+    Per node: assemble the contribution matrix over that node's own window
+    count, derive its system-interval counter features
+    (``telemetry.counters.window_counters``) and normalized per-function
+    counters (``function_counters``), and fit its ``LinearPowerModel`` on
+    the **N_init block** of chip-power observations — one batched
+    ``fit_ridge`` call for the whole fleet.  Fitting on the init block
+    (like the skew estimate and X_0) keeps the model causal on the
+    streaming path, so the batch and streaming engines consume *identical*
+    models; the paper's continuous-retraining loop then monitors drift
+    past it (``cpu_model.retrain_flags`` at Kalman-step boundaries).
+
+    Args:
+      config: profiler configuration (delta + segment plan come from here).
+      traces: per-node (fn_id, start, end) invocation arrays.
+      telemetries: per-node ``Telemetry`` — at least one node needs chip
+        power.  Chipless nodes (``chip_power is None``, e.g. the edge
+        platform in a mixed fleet) contribute zero feature/observation rows
+        and come out with the zero counter model — their chip-side split is
+        exactly zero, the combined engines' pure-mode fallback.
+      num_fns: number of unique functions M.
+      duration: segment seconds — one float or a per-node sequence.
+      gflops/hbm_gb/mean_latency: (M,) per-function step-counter specs.
+
+    Returns:
+      ``(fn_counters, window_features, models)`` — (B, M, F) normalized
+      per-function counters, (B, N_max, F) per-window features (zero-padded
+      past each node's span; the streaming session's retrain checks consume
+      them), and the fleet-batched ``LinearPowerModel``.
+    """
+    from repro.telemetry import counters as cntr
+
+    b = len(traces)
+    durations, _ = _node_durations(duration, b)
+    plans = [segment_plan(config, d) for d in durations]
+    init_n = plans[0][1]
+    if any(p[1] != init_n for p in plans):
+        raise ValueError(
+            "combined fleet: every node must cover the common N_init window "
+            f"({config.init_windows} windows); got per-node init blocks "
+            f"{[p[1] for p in plans]}"
+        )
+    n_max = max(p[0] for p in plans)
+    gf = jnp.asarray(np.asarray(gflops, np.float32))
+    hb = jnp.asarray(np.asarray(hbm_gb, np.float32))
+    lat = jnp.asarray(np.asarray(mean_latency, np.float32))
+    has_chip = [tel.chip_power is not None for tel in telemetries]
+    if not any(has_chip):
+        raise ValueError("combined mode needs chip_power on at least one node")
+    fn_list, wf_list, feats_init, chip_init = [], [], [], []
+    for (fn_id, start, end), tel, (n_i, _, _, _) in zip(traces, telemetries, plans):
+        c = contrib.contribution_matrix(
+            fn_id, start, end, num_fns=num_fns, num_windows=n_i, delta=config.delta
+        )
+        wf = cntr.window_counters(c, gf, hb, lat, config.delta)
+        fn_list.append(cntr.function_counters(c, gf, hb, lat))
+        if n_i < n_max:
+            wf = jnp.concatenate(
+                [wf, jnp.zeros((n_max - n_i, cntr.NUM_FEATURES), wf.dtype)]
+            )
+        wf_list.append(wf)
+        if tel.chip_power is None:
+            # Chipless: all-masked fit rows -> the zero counter model.
+            feats_init.append(jnp.zeros((init_n, cntr.NUM_FEATURES), wf.dtype))
+            chip_init.append(jnp.zeros((init_n,), jnp.float32))
+        else:
+            feats_init.append(wf[:init_n])
+            chip_init.append(tel.chip_power[:init_n])
+    if all(has_chip):
+        models = cpumod.fit_ridge(jnp.stack(feats_init), jnp.stack(chip_init))
+    else:
+        fit_mask = jnp.asarray(
+            np.repeat(np.asarray(has_chip, np.float32)[:, None], init_n, axis=1)
+        )
+        models = cpumod.fit_ridge(
+            jnp.stack(feats_init), jnp.stack(chip_init), mask=fit_mask
+        )
+    return jnp.stack(fn_list), jnp.stack(wf_list), models

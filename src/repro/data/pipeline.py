@@ -78,9 +78,13 @@ def prefetch_iterator(
     ``next()`` call with the producer's original traceback attached.  When
     the consumer abandons the iterator early (``close()``/GC of the
     generator, or an exception in the consuming loop), the producer thread
-    is signalled to stop and exits promptly instead of blocking forever on
-    the full queue; it is also a daemon, so even an unsignalled producer
-    never blocks interpreter exit.
+    is signalled to stop and *joined* (bounded wait) before control returns
+    — callers layering more background stages on top (the drain thread in
+    ``StreamingFleetSession.ingest``) rely on ``close()`` not leaking a
+    producer that is still touching the source iterator.  The producer is
+    also a daemon, so one blocked inside the source iterator itself can
+    never hang the join (it is abandoned after the timeout) or interpreter
+    exit.
     """
     import queue
     import threading
@@ -112,9 +116,10 @@ def prefetch_iterator(
         else:
             _put((done, None))
 
-    threading.Thread(
+    producer = threading.Thread(
         target=_produce, daemon=True, name="prefetch-producer"
-    ).start()
+    )
+    producer.start()
     try:
         while True:
             item, err = q.get()
@@ -125,6 +130,7 @@ def prefetch_iterator(
             yield item
     finally:
         stop.set()
+        producer.join(timeout=5.0)
 
 
 def batch_iterator(

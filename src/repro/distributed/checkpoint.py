@@ -113,6 +113,7 @@ def list_steps(directory: str) -> list[int]:
 
 
 def latest_step(directory: str) -> int | None:
+    """Newest checkpointed step under ``directory``, or None when empty."""
     steps = list_steps(directory)
     return steps[-1] if steps else None
 

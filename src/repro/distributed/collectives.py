@@ -86,6 +86,7 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
 
 
 def collective_bytes_from_compiled(compiled) -> dict[str, int]:
+    """Per-collective byte totals parsed from a compiled executable's HLO text."""
     return collective_bytes(compiled.as_text())
 
 

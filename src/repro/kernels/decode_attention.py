@@ -84,6 +84,7 @@ def decode_attention(
     kv_block: int = 2048,
     interpret: bool = False,
 ) -> jax.Array:
+    """Single-query decode attention over a KV cache (Pallas, KV-blocked)."""
     b, h, d = q.shape
     s, hkv = k_cache.shape[1], k_cache.shape[2]
     g = h // hkv

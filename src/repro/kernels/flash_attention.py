@@ -111,6 +111,7 @@ def flash_attention(
     kv_block: int = 1024,
     interpret: bool = False,
 ) -> jax.Array:
+    """Blocked online-softmax attention (Pallas); matches ``ref.attention_ref``."""
     b, s, h, d = q.shape
     t, hkv = k.shape[1], k.shape[2]
     group = h // hkv

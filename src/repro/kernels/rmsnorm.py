@@ -36,6 +36,7 @@ def rmsnorm(
     row_block: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
+    """Row-blocked Pallas RMSNorm over the last axis (matches ``ref.rmsnorm_ref``)."""
     orig_shape = x.shape
     d = x.shape[-1]
     rows = 1

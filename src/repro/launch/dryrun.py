@@ -170,6 +170,7 @@ def lower_cell(
 
 
 def main() -> None:
+    """CLI: AOT-compile (arch, shape) cells and dump memory/collective records."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")

@@ -54,6 +54,7 @@ def _scan_trip_count(arch: str, kind: str, accum: int) -> int:
 
 
 def analyze_record(rec: dict) -> dict:
+    """Roofline-classify one dryrun record (compute / memory / collective bound)."""
     import dataclasses
 
     arch, shape_name = rec["arch"], rec["shape"]
@@ -117,6 +118,7 @@ def _advice(dominant: str, cfg, shape) -> str:
 
 
 def load_records(dryrun_dir: str, mesh: str) -> list[dict]:
+    """Load every dryrun JSON record for ``mesh`` from ``dryrun_dir``."""
     recs = []
     for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*_{mesh}.json"))):
         with open(path) as f:
@@ -125,6 +127,7 @@ def load_records(dryrun_dir: str, mesh: str) -> list[dict]:
 
 
 def to_markdown(rows: list[dict]) -> str:
+    """Render analyzed roofline rows as a markdown table."""
     hdr = (
         "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | "
         "dominant | MODEL/HLO | roofline frac | peak mem (GiB) | fits |\n"
@@ -142,6 +145,7 @@ def to_markdown(rows: list[dict]) -> str:
 
 
 def main() -> None:
+    """CLI: aggregate dryrun records into a roofline report."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", default="experiments/dryrun")
     ap.add_argument("--mesh", default="16x16")

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 
 def main() -> None:
+    """CLI: continuous-batching serving smoke across model-zoo architectures."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs", default="internlm2-1.8b,xlstm-350m,olmoe-1b-7b")
     ap.add_argument("--requests", type=int, default=30)

@@ -49,6 +49,7 @@ from repro.training.trainer import Trainer, TrainerConfig  # noqa: E402
 
 
 def main() -> None:
+    """CLI: short training run for one architecture cell."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")

@@ -21,6 +21,7 @@ Array = jax.Array
 
 
 def attention_params(cfg: ArchConfig, *, cross: bool = False) -> dict:
+    """Parameter spec tree for one attention block (``cross`` adds enc-dec K/V)."""
     d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
     p = {
         "wq": Param((d, qd), ("embed", "qkv")),

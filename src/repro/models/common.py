@@ -43,6 +43,7 @@ class Param:
 
 
 def is_param(x: Any) -> bool:
+    """True for ``Param`` spec leaves (tree-traversal predicate)."""
     return isinstance(x, Param)
 
 
@@ -80,6 +81,7 @@ def logical_axes(tree: Any) -> Any:
 
 
 def param_count(tree: Any) -> int:
+    """Total element count over a ``Param`` spec tree."""
     return sum(
         math.prod(p.shape) for p in jax.tree.leaves(tree, is_leaf=is_param)
     )
@@ -161,6 +163,7 @@ def apply_rope(x: Array, positions: Array, theta: float) -> Array:
 
 
 def softcap(logits: Array, cap: float) -> Array:
+    """Gemma-style tanh logit soft-capping; identity when ``cap <= 0``."""
     if cap <= 0.0:
         return logits
     return jnp.tanh(logits / cap) * cap

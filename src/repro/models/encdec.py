@@ -49,6 +49,7 @@ def _dec_block_params(cfg: ArchConfig) -> dict:
 
 
 def encdec_params(cfg: ArchConfig) -> dict:
+    """Parameter spec tree for the encoder-decoder family."""
     d, v, f = cfg.d_model, cfg.padded_vocab, cfg.frontend_dim
     return {
         "proj": {
@@ -174,6 +175,7 @@ def encdec_prefill(params: dict, src_embeds: Array, tgt_tokens: Array, cfg: Arch
 
 
 def encdec_decode(params: dict, cache: dict, token: Array, pos: Array, cfg: ArchConfig):
+    """Single-token decoder step with self- and cross-attention KV caches."""
     h = jnp.take(params["embed"], token, axis=0).astype(jnp.dtype(cfg.compute_dtype))
 
     def body(x, inp):

@@ -12,6 +12,7 @@ Array = jax.Array
 
 
 def mlp_params(cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    """Parameter spec tree for the configured MLP variant (swiglu / gelu)."""
     d = cfg.d_model
     f = d_ff if d_ff is not None else cfg.d_ff
     if cfg.mlp == "swiglu":
@@ -29,6 +30,7 @@ def mlp_params(cfg: ArchConfig, d_ff: int | None = None) -> dict:
 
 
 def mlp_apply(p: dict, x: Array, cfg: ArchConfig) -> Array:
+    """Apply the MLP block matching the ``mlp_params`` layout."""
     dt = x.dtype
     if "w_gate" in p:
         gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))

@@ -51,14 +51,17 @@ class TensorSpec:
 
 
 def is_spec(x) -> bool:
+    """True for ``TensorSpec`` leaves (tree-traversal predicate)."""
     return isinstance(x, TensorSpec)
 
 
 def spec_abstract(tree: Any) -> Any:
+    """Spec tree -> matching ``jax.ShapeDtypeStruct`` tree."""
     return jax.tree.map(lambda s: s.abstract(), tree, is_leaf=is_spec)
 
 
 def spec_logical(tree: Any) -> Any:
+    """Spec tree -> logical sharding-axes tree."""
     return jax.tree.map(lambda s: s.axes, tree, is_leaf=is_spec)
 
 
@@ -348,6 +351,7 @@ _BUILDERS = {
 
 
 def build(cfg: ArchConfig) -> ModelApi:
+    """Construct the ``ModelApi`` for a config's model family."""
     try:
         return _BUILDERS[cfg.family](cfg)
     except KeyError:

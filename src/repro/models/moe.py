@@ -38,6 +38,7 @@ Array = jax.Array
 
 
 def moe_params(cfg: ArchConfig) -> dict:
+    """Parameter spec tree for the mixture-of-experts block."""
     d, e, f = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
     p = {
         "router": Param((d, e), ("embed", "expert"), scale=0.1),

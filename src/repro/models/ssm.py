@@ -26,6 +26,7 @@ Array = jax.Array
 
 
 def mamba_params(cfg: ArchConfig) -> dict:
+    """Parameter spec tree for one Mamba-style SSM block."""
     d, di, h, n = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
     return {
         "w_zx": Param((d, 2 * di), ("embed", "mlp")),

@@ -104,12 +104,14 @@ def hybrid_params(cfg: ArchConfig) -> dict:
 
 
 def embed_tokens(params: dict, tokens: Array, cfg: ArchConfig) -> Array:
+    """Token-embedding lookup in compute dtype, activation-sharded."""
     h = jnp.take(params["embed"], tokens, axis=0)
     h = h.astype(jnp.dtype(cfg.compute_dtype))
     return shard_activation(h, ("batch", "seq", "act_embed"))
 
 
 def lm_logits(params: dict, h: Array, cfg: ArchConfig) -> Array:
+    """Final norm + (tied) unembedding + logit softcap."""
     h = rms_norm(h, params["ln_f"], cfg.norm_eps)
     w = params["unembed"] if "unembed" in params else params["embed"].T
     logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
@@ -310,6 +312,7 @@ def _n_attn_points(cfg: ArchConfig) -> int:
 
 
 def hybrid_train(params: dict, tokens: Array, cfg: ArchConfig):
+    """Training forward for the hybrid SSM/attention stack."""
     h = embed_tokens(params, tokens, cfg)
     b, s, _ = h.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -381,6 +384,7 @@ def hybrid_prefill(params: dict, tokens: Array, cfg: ArchConfig):
 
 
 def hybrid_decode(params: dict, cache: dict, token: Array, pos: Array, cfg: ArchConfig):
+    """Single-token decode step for the hybrid stack."""
     h = embed_tokens(params, token, cfg)
     k_every = max(cfg.attn_every, 1)
     shared = params["shared"]

@@ -40,6 +40,7 @@ _IGATE_CLIP = 8.0  # exp-input-gate pre-activation clip (stability)
 
 
 def mlstm_params(cfg: ArchConfig) -> dict:
+    """Parameter spec tree for one mLSTM block."""
     d = cfg.d_model
     di = 2 * d
     h = cfg.num_heads
@@ -96,6 +97,7 @@ def mlstm_apply(
     state: Array | None = None,     # (B, H, P+1, P) matrix memory (+normalizer)
     return_state: bool = False,
 ):
+    """Apply an mLSTM block (optionally threading recurrent state)."""
     b, s, _ = x.shape
     xn = rms_norm(x, blk["ln"], cfg.norm_eps)
     q, k, v, log_f, i_w, z, _ = _mlstm_gates_qkv(blk, xn, cfg)
@@ -151,6 +153,7 @@ def mlstm_decode(blk: dict, x: Array, state: Array, cfg: ArchConfig):
 
 
 def slstm_params(cfg: ArchConfig) -> dict:
+    """Parameter spec tree for one sLSTM block."""
     d = cfg.d_model
     h = cfg.num_heads
     p = d // h
@@ -187,6 +190,7 @@ def slstm_apply(
     state: tuple | None = None,     # (c, n, m, h) each (B,H,P) fp32
     return_state: bool = False,
 ):
+    """Apply an sLSTM block (optionally threading recurrent state)."""
     b, s, d = x.shape
     hh = cfg.num_heads
     pp = d // hh
@@ -233,6 +237,7 @@ from repro.models.common import maybe_remat, softcap, stack_params  # noqa: E402
 
 
 def xlstm_params(cfg: ArchConfig) -> dict:
+    """Parameter spec tree for the alternating mLSTM/sLSTM stack."""
     d, v = cfg.d_model, cfg.padded_vocab
     assert cfg.num_layers % 2 == 0, "xLSTM stack alternates mLSTM/sLSTM pairs"
     pair = {"m": mlstm_params(cfg), "s": slstm_params(cfg)}
@@ -256,6 +261,7 @@ def _logits(params, h, cfg):
 
 
 def xlstm_train(params: dict, tokens: Array, cfg: ArchConfig):
+    """Training forward for the xLSTM stack."""
     h = _embed(params, tokens, cfg)
 
     def body(x, pair_p):
@@ -268,6 +274,7 @@ def xlstm_train(params: dict, tokens: Array, cfg: ArchConfig):
 
 
 def xlstm_prefill(params: dict, tokens: Array, cfg: ArchConfig):
+    """Prefill pass producing per-layer recurrent decode state."""
     h = _embed(params, tokens, cfg)
 
     def body(x, pair_p):
@@ -285,6 +292,7 @@ def xlstm_prefill(params: dict, tokens: Array, cfg: ArchConfig):
 
 
 def xlstm_decode(params: dict, cache: dict, token: Array, pos: Array, cfg: ArchConfig):
+    """Single-token recurrent decode step (position lives in state)."""
     del pos  # recurrent: position enters only through state
     h = _embed(params, token, cfg)
 

@@ -638,6 +638,7 @@ class EnergyFirstControlPlane:
         slots: int | None = None,
         mode: str | None = None,
         prefetch: int = 2,
+        drain: bool = False,
         control: "ControlLoop | None" = None,
         tick_transform=None,
     ) -> list[ProfiledWorkload]:
@@ -704,6 +705,11 @@ class EnergyFirstControlPlane:
             (``StreamingFleetSession.ingest``), overlapping host-side
             telemetry work with the jitted ``fleet_step``; ``0`` forces
             strict sense/step alternation.
+          drain: run the emit stage (attribution materialization, retrain
+            checks, tick hooks — including the bound ``control`` loop) on
+            a background drain thread as well, overlapping it with both
+            ingest and the jitted step.  Dispatch order is unchanged, so
+            results are bitwise identical to ``drain=False``.
           control: optional ``ControlLoop`` — the closed-loop controller.
             It is bound to this replay (arrival stream, trackers, idle
             floors), hooked into the tick path *after* trackers update and
@@ -904,8 +910,9 @@ class EnergyFirstControlPlane:
             if tick_transform is not None:
                 ticks = tick_transform(ticks)
             # The ingest stage pulls ticks on a background thread so window
-            # t + 1's host work overlaps the engine's jitted step on t.
-            session.ingest(ticks, prefetch=prefetch)
+            # t + 1's host work overlaps the engine's jitted step on t;
+            # drain=True additionally moves tick emission off this thread.
+            session.ingest(ticks, prefetch=prefetch, drain=drain)
             reports = session.finalize()
             if control is not None:
                 control.finish()

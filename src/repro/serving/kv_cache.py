@@ -47,6 +47,7 @@ def cache_bytes(api: ModelApi, shape: ShapeConfig) -> int:
 
 
 def params_bytes(api: ModelApi, dtype_bytes: int = 4) -> int:
+    """Model parameter bytes at ``dtype_bytes`` per element."""
     from repro.models.common import is_param
 
     total = 0

@@ -40,6 +40,7 @@ class AdamState(NamedTuple):
 
 
 def init(params: Any, config: OptimizerConfig) -> AdamState:
+    """Zero-initialized Adam state (plus error buffer when compressing grads)."""
     zeros = jax.tree.map(jnp.zeros_like, params)
     err = jax.tree.map(jnp.zeros_like, params) if config.compress_grads else None
     return AdamState(mu=zeros, nu=jax.tree.map(jnp.zeros_like, params),
@@ -60,11 +61,13 @@ def schedule(step: Array, config: OptimizerConfig) -> Array:
 
 
 def global_norm(tree: Any) -> Array:
+    """Global L2 norm over a gradient tree (float32 accumulation)."""
     leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
 def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, Array]:
+    """Scale grads onto the ``max_norm`` ball; returns (clipped, pre-clip norm)."""
     norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
     return jax.tree.map(lambda g: g * scale, grads), norm
@@ -84,6 +87,7 @@ def quantize_int8(x: Array) -> tuple[Array, Array]:
 
 
 def dequantize_int8(q: Array, scale: Array) -> Array:
+    """Reconstruct float32 values from an int8 payload and its scale."""
     return q.astype(jnp.float32) * scale
 
 

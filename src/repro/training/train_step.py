@@ -27,6 +27,7 @@ class TrainState(NamedTuple):
 
 
 def init_state(api: ModelApi, rng: jax.Array, config: opt.OptimizerConfig) -> TrainState:
+    """Materialize params + optimizer state from the ModelApi spec tree."""
     params = materialize(api.params_def, rng)
     return TrainState(params=params, opt=opt.init(params, config))
 
@@ -53,6 +54,7 @@ def state_logical(api: ModelApi, config: opt.OptimizerConfig) -> TrainState:
 
 
 def state_shardings(api: ModelApi, config: opt.OptimizerConfig, mesh, rules) -> TrainState:
+    """NamedSharding tree for the train state under (mesh, rules)."""
     log = state_logical(api, config)
     abs_ = abstract_state(api, config)
     return jax.tree.map(
@@ -64,6 +66,7 @@ def state_shardings(api: ModelApi, config: opt.OptimizerConfig, mesh, rules) -> 
 
 
 def batch_shardings(spec_tree: Any, mesh, rules) -> Any:
+    """NamedSharding tree for a host-batch spec tree."""
     return jax.tree.map(
         lambda s: shd.sharding_for(s.axes, s.shape, mesh, rules),
         spec_tree,
@@ -72,6 +75,7 @@ def batch_shardings(spec_tree: Any, mesh, rules) -> Any:
 
 
 def abstract_batch(spec_tree: Any) -> Any:
+    """ShapeDtypeStruct tree for a host-batch spec tree."""
     return spec_abstract(spec_tree)
 
 

@@ -54,6 +54,7 @@ class TrainerReport:
 
 
 class Trainer:
+    """Step-loop driver: data iterator, checkpoint/resume, straggler watchdog."""
     def __init__(
         self,
         step_fn: Callable[[TrainState, dict], tuple[TrainState, dict]],

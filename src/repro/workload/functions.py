@@ -35,6 +35,7 @@ class FunctionSpec:
 
 
 class FunctionRegistry:
+    """Ordered FaaS function set with stable ids and name lookup."""
     def __init__(self, specs: list[FunctionSpec]):
         if len({s.name for s in specs}) != len(specs):
             raise ValueError("duplicate function names")

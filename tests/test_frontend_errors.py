@@ -107,6 +107,25 @@ def test_prefetch_abandoned_consumer_shuts_down_producer():
     assert len(_live_producer_threads()) <= before, "producer thread leaked"
 
 
+def test_prefetch_close_joins_producer_before_returning():
+    """``close()`` must *join* the producer, not merely signal it: callers
+    stacking more background stages on top (the streaming session's drain
+    thread) rely on the producer being gone — not still touching the source
+    iterator — the moment control returns.  No wait loop here on purpose."""
+    before = len(_live_producer_threads())
+
+    def endless():
+        while True:
+            yield np.zeros(4)
+
+    it = prefetch_iterator(endless(), size=2)
+    next(it)
+    it.close()
+    assert len(_live_producer_threads()) <= before, (
+        "close() returned with the producer thread still alive"
+    )
+
+
 def test_prefetch_consumer_exception_shuts_down_producer():
     """An exception thrown in the consuming loop (generator GC'd via the
     exception path) also signals the producer to stop."""

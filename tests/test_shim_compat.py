@@ -1,0 +1,85 @@
+"""Deprecation-shim compatibility: the monolith import paths still work.
+
+The layered split moved ``core/batched_engine.py`` into ``core/engine/``
+and the session layer of ``core/profiler.py`` into ``core/sessions/``, but
+both old module paths stay importable as shims.  Two contracts:
+
+- every symbol that was public on the pre-split monoliths still resolves
+  from the old path (the lists below are snapshots of the old modules'
+  top-level public names — shrink them only with a deliberate deprecation);
+- the shims re-export the SAME objects, not copies: the jitted hot paths
+  (``fleet_step``, ``run_fleet``, ...) must be ``is``-identical to the
+  engine package's, or the two paths would compile and cache separately.
+"""
+
+import importlib
+
+import pytest
+
+# Public top-level names of src/repro/core/batched_engine.py before the
+# engine split (typing/stdlib re-exports like Sequence excluded).
+BATCHED_ENGINE_PUBLIC = [
+    "Array", "DEFAULT_BUCKETS", "EngineConfig", "FleetBucket", "FleetInputs",
+    "FleetResult", "FleetStep", "FleetStreamState", "FootprintSpectrum",
+    "KalmanConfig", "KalmanState", "TickAttribution", "assemble_spectrum",
+    "bucket_for", "bucketed_initial_estimate", "bucketed_pad_waste",
+    "combined_rest_target", "fleet_initial_estimate", "fleet_rest_idle",
+    "fleet_spectrum", "fleet_step", "fleet_stream_init",
+    "fleet_stream_reset_slots", "fleet_ticks", "kalman_init", "kalman_step",
+    "kalman_step_gram", "pack_fleet_buckets", "pack_fleet_inputs",
+    "pad_waste_frac", "precompute_step_inputs", "run_fleet",
+    "run_fleet_bucketed", "run_fleet_gram", "run_fleet_sequential",
+    "run_fleet_stream", "run_kalman", "run_kalman_fleet",
+    "run_kalman_fleet_gram", "run_kalman_gram", "synthetic_fleet",
+    "synthetic_ragged_windows", "tick_attribution", "warm_bucket_solvers",
+]
+
+# Public top-level names of src/repro/core/profiler.py before the session
+# split (including the contrib/cpumod/syncmod module aliases callers used).
+PROFILER_PUBLIC = [
+    "Array", "DisaggregationConfig", "FaasMeterProfiler", "FootprintReport",
+    "FootprintSpectrum", "KalmanConfig", "ProfilerConfig", "SlotFleetSession",
+    "StreamTick", "StreamingFleetSession", "Telemetry", "assemble_spectrum",
+    "combined_chip_power", "combined_rest_target", "contrib", "cpumod",
+    "disaggregate", "fleet_profile", "fleet_profile_batched",
+    "fleet_rest_idle", "kalman_init", "prepare_combined_fleet", "run_kalman",
+    "segment_plan", "syncmod", "total_power_error",
+]
+
+# Objects that carry jit caches or engine state: copies (rather than
+# re-exports) would silently double compilation.
+SAME_OBJECT = [
+    "fleet_step", "run_fleet", "run_fleet_stream", "run_fleet_bucketed",
+    "fleet_stream_init", "fleet_stream_reset_slots", "pack_fleet_inputs",
+    "pack_fleet_buckets", "EngineConfig", "FleetInputs", "TickAttribution",
+]
+
+
+@pytest.mark.parametrize("name", BATCHED_ENGINE_PUBLIC)
+def test_batched_engine_shim_resolves(name):
+    mod = importlib.import_module("repro.core.batched_engine")
+    assert hasattr(mod, name), f"repro.core.batched_engine.{name} vanished"
+
+
+@pytest.mark.parametrize("name", PROFILER_PUBLIC)
+def test_profiler_shim_resolves(name):
+    mod = importlib.import_module("repro.core.profiler")
+    assert hasattr(mod, name), f"repro.core.profiler.{name} vanished"
+
+
+@pytest.mark.parametrize("name", SAME_OBJECT)
+def test_shim_reexports_same_objects(name):
+    shim = importlib.import_module("repro.core.batched_engine")
+    eng = importlib.import_module("repro.core.engine")
+    assert getattr(shim, name) is getattr(eng, name), (
+        f"{name}: shim holds a different object than repro.core.engine — "
+        "jit caches would split across the two import paths"
+    )
+
+
+def test_profiler_sessions_are_same_objects():
+    pf = importlib.import_module("repro.core.profiler")
+    sess = importlib.import_module("repro.core.sessions")
+    for name in ("SlotFleetSession", "StreamingFleetSession", "StreamTick",
+                 "FootprintReport", "combined_chip_power"):
+        assert getattr(pf, name) is getattr(sess, name), name
